@@ -1,0 +1,119 @@
+//! §7.1 end-to-end: the five-task multitask AUDIO inference system
+//! (presence / command / speaker / emotion / distance) on the simulated
+//! 16-bit MSP430FR5994 — the repository's END-TO-END VALIDATION run
+//! (recorded in EXPERIMENTS.md).
+//!
+//!   make artifacts && cargo run --release --example audio_assistant
+//!
+//! Trains the task set from a synthetic multi-factor audio-feature
+//! stream, builds the task graph + order, then serves the stream three
+//! ways: unconstrained, with the presence-precedence constraint
+//! (Antler-PC), and with the 80%-conditional constraint (Antler-CC,
+//! live skipping), reporting latency/throughput and simulated cost.
+
+use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
+use antler::data::audio_stream_spec;
+use antler::device::Device;
+use antler::model::manifest::default_artifacts_dir;
+use antler::runtime::Engine;
+use antler::taskgraph::TaskGraph;
+use antler::trainer::GraphWeights;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(&default_artifacts_dir())?;
+    let spec = audio_stream_spec();
+    let device = Device::msp430();
+    let data = spec.generate(800);
+    println!(
+        "audio stream: {} samples, tasks {:?} (classes {:?})",
+        data.len(),
+        spec.tasks.iter().map(|t| t.name).collect::<Vec<_>>(),
+        spec.ncls_vec()
+    );
+
+    let cfg = pipeline::PrepareConfig {
+        steps_individual: 200,
+        steps_retrain: 1200,
+        device: device.clone(),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let prep = pipeline::prepare(&engine, spec.arch, &data, &cfg)?;
+    println!("pipeline prepared in {:.1}s", t0.elapsed().as_secs_f64());
+
+    println!("\ntask graph (Fig 14a analog): bounds {:?}", prep.graph.bounds);
+    for (s, p) in prep.graph.partitions.iter().enumerate() {
+        println!("  segment {s}: {:?}", p.groups());
+    }
+    println!("\nper-task accuracy (Fig 16a analog):");
+    for (t, task) in spec.tasks.iter().enumerate() {
+        println!(
+            "  {:<9} ({:>2} classes): vanilla {:>5.1}%  antler {:>5.1}%",
+            task.name,
+            task.ncls,
+            prep.vanilla_acc[t] * 100.0,
+            prep.antler_acc[t] * 100.0
+        );
+    }
+
+    // three Antler variants + Vanilla (Fig 15a analog)
+    let n = spec.n_tasks();
+    let frames: Vec<_> = (0..120u64)
+        .map(|i| (i, data.x.slice_batch(i as usize % data.len(), 1)))
+        .collect();
+    let prec: Vec<(usize, usize)> = (1..n).map(|t| (0, t)).collect();
+    let cond: Vec<(usize, usize, f64)> =
+        (1..n).map(|t| (0, t, spec.presence_prob)).collect();
+    let order_pc = pipeline::deployment_order(&prep, &device, prec, vec![])?;
+    let order_cc = pipeline::deployment_order(&prep, &device, vec![], cond)?;
+
+    let variants: Vec<(&str, TaskGraph, Vec<usize>, Vec<(usize, usize)>)> = vec![
+        ("Vanilla", TaskGraph::disjoint(n, prep.graph.bounds.clone()), (0..n).collect(), vec![]),
+        ("Antler", prep.graph.clone(), prep.order.clone(), vec![]),
+        ("Antler-PC", prep.graph.clone(), order_pc, vec![]),
+        ("Antler-CC", prep.graph.clone(), order_cc, (1..n).map(|t| (0, t)).collect()),
+    ];
+    println!("\nserving 120 frames on simulated {}:", device.name);
+    let mut vanilla_time = 0.0;
+    for (name, graph, order, conditional) in variants {
+        let store = if name == "Vanilla" {
+            GraphWeights::from_task_params(&graph, &prep.arch, &prep.task_params)
+        } else {
+            prep.store.clone()
+        };
+        let mut ex = BlockExecutor::new(
+            &engine,
+            device.clone(),
+            prep.arch.clone(),
+            graph,
+            prep.ncls.clone(),
+            store,
+        );
+        ex.warmup()?;
+        let plan = ServePlan { order, conditional };
+        let r = serve(&mut ex, &plan, frames.clone(), 64, None)?;
+        if name == "Vanilla" {
+            vanilla_time = r.sim_time_per_frame_s;
+        }
+        println!(
+            "  {:<9} sim {:>8.2} ms/frame ({:>4.1}x) | {:>7.3} mJ/frame | host {:>6.1} fps p50 {:>5.2} ms | skipped {}",
+            name,
+            r.sim_time_per_frame_s * 1e3,
+            vanilla_time / r.sim_time_per_frame_s,
+            r.sim_energy_per_frame_j * 1e3,
+            r.throughput_fps,
+            r.latency_p50_ms,
+            r.tasks_skipped
+        );
+    }
+    println!(
+        "\nmemory (Table 5 analog): vanilla {:.0}KB vs antler {:.0}KB",
+        prep.ncls
+            .iter()
+            .map(|&c| prep.arch.total_params(c) * 4)
+            .sum::<usize>() as f64
+            / 1024.0,
+        prep.graph.model_bytes(&prep.arch, &prep.ncls) as f64 / 1024.0
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Dataset-driven comparison sweep (§6.3, Figures 9–11 + Table 4 in one
+//! pass): for each of the nine dataset analogs, select a task graph and
+//! compare Antler's per-round cost against the four baselines on both
+//! simulated platforms.
+//!
+//!   cargo run --release --example dataset_sweep [-- --max-graphs 800]
+
+use antler::baselines::{self, SystemKind};
+use antler::bench::figures_sim::{arch_specs, dataset_scores};
+use antler::bench::{fmt_energy, fmt_time};
+use antler::data::standard_datasets;
+use antler::device::Device;
+use antler::taskgraph::select::select_tradeoff;
+use antler::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let max_graphs = args.usize("max-graphs", 400);
+    let archs = arch_specs();
+    for device in [Device::msp430(), Device::stm32h747()] {
+        println!("\n=== {} ===", device.name);
+        println!(
+            "{:<10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>7}  {:>10}",
+            "dataset", "Vanilla", "Antler", "NWV", "NWS", "YONO", "win", "energy-sav"
+        );
+        for ds in standard_datasets() {
+            let arch = &archs[ds.arch];
+            let (_aff, scores) = dataset_scores(
+                ds.name,
+                arch,
+                ds.n_classes,
+                ds.seed,
+                &device,
+                3,
+                max_graphs,
+            );
+            let sel = select_tradeoff(&scores);
+            let ncls = vec![2usize; ds.n_classes];
+            let inp = baselines::CostInputs {
+                device: &device,
+                arch,
+                ncls: &ncls,
+                antler_graph: &scores[sel].graph,
+                antler_order: &scores[sel].order,
+                nws_ext_bytes_per_task: arch.total_params(2) * 4 * 7 / 100,
+            };
+            let mut times = Vec::new();
+            let mut energies = Vec::new();
+            for sys in SystemKind::all() {
+                let c = baselines::round_cost(sys, &inp);
+                times.push(c.time());
+                energies.push(c.energy());
+            }
+            // SystemKind::all() = [Vanilla, Antler, NWV, NWS, YONO]
+            let antler_t = times[1];
+            let best_baseline = times
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != 1)
+                .map(|(_, &t)| t)
+                .fold(f64::INFINITY, f64::min);
+            let antler_e = energies[1];
+            let worst_e = energies.iter().cloned().fold(0.0, f64::max);
+            println!(
+                "{:<10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>6.1}x  {:>9.0}%",
+                ds.name,
+                fmt_time(times[0]),
+                fmt_time(times[1]),
+                fmt_time(times[2]),
+                fmt_time(times[3]),
+                fmt_time(times[4]),
+                best_baseline / antler_t,
+                (1.0 - antler_e / worst_e) * 100.0
+            );
+            let _ = fmt_energy(antler_e);
+        }
+    }
+    println!("\n(win = Antler speedup over the best baseline; energy-sav vs worst baseline)");
+}

@@ -1,0 +1,97 @@
+//! Quickstart: the whole Antler flow on a small task set in ~a minute.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! 1. generate a 6-task IMU dataset analog
+//! 2. train per-task networks (the Vanilla baseline) on the PJRT runtime
+//! 3. profile task affinity at the branch points
+//! 4. enumerate task graphs, pick the variety/cost tradeoff point
+//! 5. multitask-retrain the selected graph, solve the execution order
+//! 6. serve a stream of frames and compare against Vanilla
+
+use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
+use antler::data::dataset_by_name;
+use antler::device::Device;
+use antler::model::manifest::default_artifacts_dir;
+use antler::runtime::Engine;
+use antler::taskgraph::TaskGraph;
+use antler::trainer::GraphWeights;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(&default_artifacts_dir())?;
+    let spec = dataset_by_name("hhar-s").unwrap();
+    let arch = engine.manifest().arch(spec.arch)?.clone();
+    let ds = spec.generate(&arch.input, 360);
+    println!("dataset {}: {} samples, {} one-vs-rest tasks", spec.name, 360, ds.n_tasks());
+
+    let cfg = pipeline::PrepareConfig {
+        steps_individual: 80,
+        steps_retrain: 120,
+        device: Device::msp430(),
+        ..Default::default()
+    };
+    let prep = pipeline::prepare(&engine, spec.arch, &ds, &cfg)?;
+
+    println!("\nselected task graph (of {} candidates):", prep.scores.len());
+    println!("  bounds {:?}", prep.graph.bounds);
+    for (s, p) in prep.graph.partitions.iter().enumerate() {
+        println!("  segment {s}: groups {:?}", p.groups());
+    }
+    println!("  optimal order: {:?}", prep.order);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "  accuracy: vanilla {:.1}% vs antler {:.1}%",
+        mean(&prep.vanilla_acc) * 100.0,
+        mean(&prep.antler_acc) * 100.0
+    );
+
+    // serve 50 frames with both systems and compare simulated device cost
+    let frames: Vec<_> = (0..50u64)
+        .map(|i| (i, ds.x.slice_batch(i as usize % ds.len(), 1)))
+        .collect();
+    let mut antler_ex = BlockExecutor::new(
+        &engine,
+        Device::msp430(),
+        prep.arch.clone(),
+        prep.graph.clone(),
+        prep.ncls.clone(),
+        prep.store.clone(),
+    );
+    antler_ex.warmup()?;
+    let plan = ServePlan::unconditional(prep.order.clone());
+    let antler_report = serve(&mut antler_ex, &plan, frames.clone(), 64, None)?;
+
+    let vanilla_graph = TaskGraph::disjoint(ds.n_tasks(), prep.graph.bounds.clone());
+    let vstore = GraphWeights::from_task_params(&vanilla_graph, &prep.arch, &prep.task_params);
+    let mut vanilla_ex = BlockExecutor::new(
+        &engine,
+        Device::msp430(),
+        prep.arch.clone(),
+        vanilla_graph,
+        prep.ncls.clone(),
+        vstore,
+    );
+    vanilla_ex.warmup()?;
+    let vplan = ServePlan::unconditional((0..ds.n_tasks()).collect());
+    let vanilla_report = serve(&mut vanilla_ex, &vplan, frames, 64, None)?;
+
+    println!("\nserving 50 frames (simulated MSP430FR5994):");
+    println!(
+        "  vanilla: {:.2} ms/frame, {:.3} mJ/frame",
+        vanilla_report.sim_time_per_frame_s * 1e3,
+        vanilla_report.sim_energy_per_frame_j * 1e3
+    );
+    println!(
+        "  antler:  {:.2} ms/frame, {:.3} mJ/frame  ({:.1}x faster, {:.0}% energy saved)",
+        antler_report.sim_time_per_frame_s * 1e3,
+        antler_report.sim_energy_per_frame_j * 1e3,
+        vanilla_report.sim_time_per_frame_s / antler_report.sim_time_per_frame_s,
+        (1.0 - antler_report.sim_energy_per_frame_j / vanilla_report.sim_energy_per_frame_j)
+            * 100.0
+    );
+    println!(
+        "  host throughput: antler {:.0} fps (layer execs {} / skips {})",
+        antler_report.throughput_fps, antler_report.layer_execs, antler_report.layer_skips
+    );
+    Ok(())
+}

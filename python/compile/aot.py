@@ -1,0 +1,152 @@
+"""AOT lowering: every L2 entry point -> HLO *text* artifact + manifest.
+
+HLO text (NOT lowered.compiler_ir().serialize() / jax.export bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the rust crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (per DESIGN.md):
+  layer_{arch}_{i}[_c{ncls}]_b{batch}.hlo.txt   (x, w, b) -> (y,)
+  train_{arch}_c{ncls}.hlo.txt                  (x, y, lr, *params) -> (loss, *new)
+  eval_{arch}_c{ncls}.hlo.txt                   (x, *params) -> (logits,)
+plus manifest.json describing shapes for the rust loader.
+
+Usage: python -m compile.aot --out ../artifacts   (from python/)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_entry(fn, arg_specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def build_entries():
+    """Yield (name, fn, arg_specs, meta) for every artifact."""
+    for arch, spec in M.ARCHS.items():
+        ncls_list = M.NCLS_BY_ARCH[arch]
+        nlayers = len(spec["layers"])
+        for i, (kind, cfg) in enumerate(spec["layers"]):
+            cls_variants = ncls_list if kind == "logits" else [None]
+            for ncls in cls_variants:
+                eff = ncls if ncls is not None else 2
+                pshapes, ain, aout = M.layer_shapes(arch, i, eff)
+                for batch in (M.BATCH_SERVE, M.BATCH_PROFILE):
+                    suffix = f"_c{ncls}" if ncls is not None else ""
+                    name = f"layer_{arch}_{i}{suffix}_b{batch}"
+                    args = [_spec((batch,) + ain)] + [_spec(s) for s in pshapes]
+                    meta = {
+                        "kind": "layer", "arch": arch, "layer": i,
+                        "layer_kind": kind, "ncls": ncls, "batch": batch,
+                        "inputs": [list(a.shape) for a in args],
+                        "outputs": [[batch] + list(aout)],
+                    }
+                    yield name, M.layer_entry(arch, i, eff), args, meta
+        for ncls in ncls_list:
+            ps = [_spec(s) for s in M.param_shapes(arch, ncls)]
+            x_train = _spec((M.BATCH_TRAIN,) + tuple(spec["input"]))
+            y_train = _spec((M.BATCH_TRAIN,), jnp.int32)
+            lr = _spec((), jnp.float32)
+            name = f"train_{arch}_c{ncls}"
+            meta = {
+                "kind": "train", "arch": arch, "ncls": ncls,
+                "batch": M.BATCH_TRAIN,
+                "inputs": ([list(x_train.shape), list(y_train.shape), []]
+                           + [list(p.shape) for p in ps]),
+                "outputs": [[]] + [list(p.shape) for p in ps],
+            }
+            yield name, M.train_entry(arch, ncls), [x_train, y_train, lr] + ps, meta
+
+            x_eval = _spec((M.BATCH_EVAL,) + tuple(spec["input"]))
+            name = f"eval_{arch}_c{ncls}"
+            meta = {
+                "kind": "eval", "arch": arch, "ncls": ncls,
+                "batch": M.BATCH_EVAL,
+                "inputs": [list(x_eval.shape)] + [list(p.shape) for p in ps],
+                "outputs": [[M.BATCH_EVAL, ncls]],
+            }
+            yield name, M.eval_entry(arch, ncls), [x_eval] + ps, meta
+
+
+def arch_manifest():
+    out = {}
+    for arch, spec in M.ARCHS.items():
+        layers = []
+        shape = tuple(spec["input"])
+        for i, (kind, cfg) in enumerate(spec["layers"]):
+            pshapes, ain, aout = M.layer_shapes(arch, i, 2)
+            if kind == "conv_pool":
+                # conv output (pre-pool) spatial size = input spatial size
+                macs = ain[0] * ain[1] * cfg["kh"] * cfg["kw"] * cfg["cin"] * cfg["cout"]
+            else:
+                macs = cfg["din"] * (cfg["dout"] or 2)
+            layers.append({
+                "kind": kind, "cfg": cfg, "in": list(ain), "out": list(aout),
+                "macs_per_sample": macs,
+            })
+        out[arch] = {
+            "input": list(spec["input"]),
+            "layers": layers,
+            "ncls": M.NCLS_BY_ARCH[arch],
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names (debugging)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "archs": arch_manifest(), "entries": []}
+    t0 = time.time()
+    count = 0
+    for name, fn, specs, meta in build_entries():
+        if args.only and args.only not in name:
+            continue
+        path = os.path.join(args.out, name + ".hlo.txt")
+        text = lower_entry(fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["name"] = name
+        meta["file"] = name + ".hlo.txt"
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["entries"].append(meta)
+        count += 1
+        print(f"[{time.time() - t0:7.1f}s] {name} ({len(text)} chars)",
+              file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {count} artifacts + manifest.json to {args.out}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for the Antler common network architectures."""
+
+from . import ref  # noqa: F401
+from .conv2d import conv2d  # noqa: F401
+from .dense import dense, matmul  # noqa: F401
+from .pool import conv_pool, maxpool2x2  # noqa: F401

@@ -1,0 +1,61 @@
+"""Pallas direct-convolution kernel (same padding, stride 1) + maxpool.
+
+The MCU implementation of the paper walks the image in SRAM with the
+weights streamed from FRAM; the TPU adaptation tiles over the batch grid —
+each program instance holds one padded input image, the full (KH,KW,Cin,
+Cout) filter bank, and the (H,W,Cout) accumulator in VMEM. For the paper's
+layer sizes (<= 32x32x32) that working set is ~0.3 MiB, comfortably within
+VMEM; the KH*KW static unroll turns the conv into MXU-shaped (H*W, Cin) @
+(Cin, Cout) contractions.
+
+interpret=True throughout (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh: int, kw: int,
+                 activation: bool):
+    """One batch element: x_ref (1, H+kh-1, W+kw-1, Cin) pre-padded."""
+    _, hp, wp, cin = x_ref.shape
+    _, h, w, cout = o_ref.shape
+    x = x_ref[0]
+    acc = jnp.zeros((h * w, cout), dtype=jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = x[dh:dh + h, dw:dw + w, :].reshape(h * w, cin)
+            acc += jnp.dot(patch, w_ref[dh, dw],
+                           preferred_element_type=jnp.float32)
+    y = acc.reshape(h, w, cout) + b_ref[...]
+    if activation:
+        y = jnp.where(y > 0, y, ref.LEAKY_SLOPE * y)
+    o_ref[0] = y
+
+
+def conv2d(x, w, b, activation=True):
+    """Same-padded stride-1 conv, NHWC / HWIO, fused bias + leaky-ReLU."""
+    bsz, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, (x.shape, w.shape)
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    hp, wp = h + kh - 1, wd + kw - 1
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw, activation=activation),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((1, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, wd, cout), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), w.astype(jnp.float32),
+      b.reshape(1, cout).astype(jnp.float32))

@@ -1,0 +1,129 @@
+"""Pallas dense (fully-connected) kernel — the MXU-shaped matmul hot path.
+
+TPU adaptation of the paper's MCU dense layer (DESIGN.md
+§Hardware-Adaptation): the MCU streams FRAM->SRAM weight pages; here the
+BlockSpec grid expresses the analogous HBM->VMEM schedule. The contraction
+is tiled (block_m x block_k) @ (block_k x block_n) with an f32 accumulator
+held in the output block across the K steps of the grid — the canonical
+systolic-friendly layout.
+
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md), so kernels lower to plain
+HLO and correctness/structure are what we validate here; device timing in
+the benchmarks comes from the L3 cost models.
+
+The kernel carries a custom VJP whose backward pass is also expressed with
+the same Pallas matmul, so `jax.grad` through a dense layer stays on the
+kernel path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default VMEM-friendly tile sizes. For the paper's layer sizes (K,N <= 512)
+# a (32, 128, 128) tiling keeps the working set
+# (bm*bk + bk*bn + bm*bn) * 4B  <= ~80 KiB, far below a 16 MiB VMEM budget,
+# leaving room for double buffering; see DESIGN.md §Perf.
+BLOCK_M = 32
+BLOCK_K = 128
+BLOCK_N = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Grid (Mi, Nj, Kk); accumulates partial products into the output block."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x, w, *, block_m=BLOCK_M, block_k=BLOCK_K, block_n=BLOCK_N):
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N), f32 accumulate."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = min(block_m, m), min(block_k, k), min(block_n, n)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), wp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+def _bias_act_kernel(y_ref, b_ref, o_ref, *, activation: bool):
+    y = y_ref[...] + b_ref[...]
+    if activation:
+        y = jnp.where(y > 0, y, ref.LEAKY_SLOPE * y)
+    o_ref[...] = y
+
+
+def _bias_act(y, b, activation: bool):
+    m, n = y.shape
+    return pl.pallas_call(
+        functools.partial(_bias_act_kernel, activation=activation),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(y, b.reshape(1, n).astype(jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, activation=True):
+    """Dense layer on the Pallas path: leaky_relu(x @ w + b) (or no act).
+
+    Accepts (B, ...) inputs; flattens trailing dims (the architecture's
+    flatten-into-fc1 step).
+    """
+    y, _ = _dense_fwd(x, w, b, activation)
+    return y
+
+
+def _dense_fwd(x, w, b, activation):
+    x2 = x.reshape(x.shape[0], -1)
+    pre = _bias_act(matmul(x2, w), b, False)
+    y = _bias_act(pre, jnp.zeros_like(b), True) if activation else pre
+    return y, (x2, w, pre, x.shape)
+
+
+def _dense_bwd(activation, res, g):
+    x2, w, pre, xshape = res
+    if activation:
+        g = g * jnp.where(pre > 0, 1.0, ref.LEAKY_SLOPE)
+    # Backward matmuls stay on the Pallas kernel path.
+    dx = matmul(g, w.T).reshape(xshape)
+    dw = matmul(x2.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

@@ -1,0 +1,32 @@
+"""Pallas 2x2 max-pooling kernel (stride 2), batch-gridded like conv2d."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    _, h, w, c = x_ref.shape
+    x = x_ref[0]
+    o_ref[0] = x.reshape(h // 2, 2, w // 2, 2, c).max(axis=(1, 3))
+
+
+def maxpool2x2(x):
+    """x: (B, H, W, C) with even H, W -> (B, H/2, W/2, C)."""
+    bsz, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, x.shape
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h // 2, w // 2, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h // 2, w // 2, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+def conv_pool(x, w, b):
+    """Fused "conv layer" of the common architecture on the Pallas path."""
+    from .conv2d import conv2d as _conv2d
+
+    return maxpool2x2(_conv2d(x, w, b, activation=True))

@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package must match these functions to float32
+tolerance under pytest/hypothesis sweeps (python/tests/test_kernel.py).
+The training graph (model.train_step) also uses the conv reference for its
+backward pass — see DESIGN.md, Substitutions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.01
+
+
+def leaky_relu(x):
+    return jnp.where(x > 0, x, LEAKY_SLOPE * x)
+
+
+def dense(x, w, b, activation=True):
+    """y = x @ w + b, optionally leaky-ReLU. x: (B, K) or (B, ...) flattened."""
+    x = x.reshape(x.shape[0], -1)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return leaky_relu(y) if activation else y
+
+
+def matmul(x, w):
+    """Plain matmul (used by the dense kernel's custom VJP)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def conv2d(x, w, b, activation=True):
+    """Same-padded stride-1 conv. x: (B, H, W, Cin) NHWC; w: (KH, KW, Cin, Cout)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b
+    return leaky_relu(y) if activation else y
+
+
+def maxpool2x2(x):
+    """2x2 max pooling, stride 2. x: (B, H, W, C) with even H, W."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def conv_pool(x, w, b):
+    """The fused "conv layer" of the common architecture: conv+bias+leaky+pool."""
+    return maxpool2x2(conv2d(x, w, b, activation=True))

@@ -1,0 +1,208 @@
+"""L2 — the Antler common network architectures as JAX per-layer blocks.
+
+The paper (§2.1) instantiates ONE common architecture per application
+domain and trains it per task; task graphs then share *prefixes* of the
+layer list. To let the rust coordinator (L3) implement block sharing,
+load-skipping and branch-point activation caching, every layer is lowered
+to its own HLO artifact (weights are runtime arguments), plus a
+whole-network forward for batch eval and a `train_step` that returns the
+SGD-updated parameters.
+
+Architectures mirror Table 2 / §7 at reduced input resolution:
+  cnn5 — "5-layer CNN, 2 conv + 3 dense" (audio / LeNet-5 class)
+  cnn7 — "7-layer CNN, 3 conv + 4 dense" (image / §7.2)
+  dnn4 — 4 dense layers (IMU / DeepSense-lite analog)
+
+Forward layers call the L1 Pallas kernels; the conv backward pass uses the
+jnp reference (kernels.ref) — see DESIGN.md Substitutions. Dense layers
+differentiate through the Pallas kernel via its custom VJP.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+# ---------------------------------------------------------------------------
+# Architecture specs. A layer is (kind, cfg); `dout == 0` on the logits layer
+# means "number of classes, chosen at instantiation time".
+# ---------------------------------------------------------------------------
+
+ARCHS = {
+    "cnn5": {
+        "input": (16, 16, 1),
+        "layers": [
+            ("conv_pool", {"kh": 3, "kw": 3, "cin": 1, "cout": 8}),
+            ("conv_pool", {"kh": 3, "kw": 3, "cin": 8, "cout": 16}),
+            ("dense", {"din": 4 * 4 * 16, "dout": 64}),
+            ("dense", {"din": 64, "dout": 32}),
+            ("logits", {"din": 32, "dout": 0}),
+        ],
+    },
+    "cnn7": {
+        "input": (32, 32, 1),
+        "layers": [
+            ("conv_pool", {"kh": 3, "kw": 3, "cin": 1, "cout": 8}),
+            ("conv_pool", {"kh": 3, "kw": 3, "cin": 8, "cout": 16}),
+            ("conv_pool", {"kh": 3, "kw": 3, "cin": 16, "cout": 32}),
+            ("dense", {"din": 4 * 4 * 32, "dout": 128}),
+            ("dense", {"din": 128, "dout": 64}),
+            ("dense", {"din": 64, "dout": 32}),
+            ("logits", {"din": 32, "dout": 0}),
+        ],
+    },
+    "dnn4": {
+        "input": (128,),
+        "layers": [
+            ("dense", {"din": 128, "dout": 64}),
+            ("dense", {"din": 64, "dout": 64}),
+            ("dense", {"din": 64, "dout": 32}),
+            ("logits", {"din": 32, "dout": 0}),
+        ],
+    },
+}
+
+
+def layer_shapes(arch: str, idx: int, ncls: int):
+    """(param shapes, input activation shape, output activation shape),
+    activation shapes without the batch dim."""
+    spec = ARCHS[arch]
+    kind, cfg = spec["layers"][idx]
+    # activation shape entering layer idx
+    shape = tuple(spec["input"])
+    for k, c in spec["layers"][:idx]:
+        shape = _out_shape(k, c, shape, ncls)
+    out = _out_shape(kind, cfg, shape, ncls)
+    if kind == "conv_pool":
+        pshapes = [(cfg["kh"], cfg["kw"], cfg["cin"], cfg["cout"]),
+                   (cfg["cout"],)]
+    else:
+        dout = cfg["dout"] or ncls
+        pshapes = [(cfg["din"], dout), (dout,)]
+    return pshapes, shape, out
+
+
+def _out_shape(kind, cfg, in_shape, ncls):
+    if kind == "conv_pool":
+        h, w, _ = in_shape
+        return (h // 2, w // 2, cfg["cout"])
+    dout = cfg["dout"] or ncls
+    return (dout,)
+
+
+def param_shapes(arch: str, ncls: int):
+    """Flat list of parameter shapes [w0, b0, w1, b1, ...]."""
+    out = []
+    for i in range(len(ARCHS[arch]["layers"])):
+        out.extend(layer_shapes(arch, i, ncls)[0])
+    return out
+
+
+def init_params(arch: str, ncls: int, key):
+    """He-style init, flat [w0, b0, ...] list (matches the rust WeightStore)."""
+    params = []
+    for shp in param_shapes(arch, ncls):
+        if len(shp) > 1:
+            fan_in = 1
+            for d in shp[:-1]:
+                fan_in *= d
+            key, sub = jax.random.split(key)
+            params.append(jax.random.normal(sub, shp, jnp.float32)
+                          * jnp.sqrt(2.0 / fan_in))
+        else:
+            params.append(jnp.zeros(shp, jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer forward functions
+# ---------------------------------------------------------------------------
+
+def layer_apply(kind: str, x, w, b, *, use_pallas=True):
+    R = K if use_pallas else K.ref
+    if kind == "conv_pool":
+        if use_pallas:
+            return K.conv_pool(x, w, b)
+        return K.ref.conv_pool(x, w, b)
+    if kind == "dense":
+        return R.dense(x, w, b, True)
+    if kind == "logits":
+        return R.dense(x, w, b, False)
+    raise ValueError(kind)
+
+
+def forward(arch: str, ncls: int, x, params, *, use_pallas=True,
+            train_mode=False):
+    """Whole-network forward. In train_mode convs use the jnp reference
+    (differentiable); dense stays on the Pallas custom-VJP path."""
+    i = 0
+    for kind, _ in ARCHS[arch]["layers"]:
+        w, b = params[i], params[i + 1]
+        if train_mode and kind == "conv_pool":
+            x = K.ref.conv_pool(x, w, b)
+        else:
+            x = layer_apply(kind, x, w, b, use_pallas=use_pallas)
+        i += 2
+    return x
+
+
+def loss_fn(arch, ncls, params, x, y):
+    """Mean softmax cross-entropy; y: int32 labels."""
+    logits = forward(arch, ncls, x, params, train_mode=True)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).squeeze(-1)
+    return jnp.mean(nll)
+
+
+def train_step(arch: str, ncls: int, x, y, lr, *params):
+    """One SGD step. Returns (loss, *updated_params) — the L3 trainer
+    simply swaps the returned tensors into the block weight store."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(arch, ncls, p, x, y))(list(params))
+    new = [p - lr * g for p, g in zip(params, grads)]
+    return (loss, *new)
+
+
+def eval_logits(arch: str, ncls: int, x, *params):
+    """Batch forward on the Pallas path (serving parity) -> logits."""
+    return (forward(arch, ncls, x, list(params), use_pallas=True),)
+
+
+def layer_entry(arch: str, idx: int, ncls: int):
+    """The (x, w, b) -> (y,) function lowered per layer artifact."""
+    kind, _ = ARCHS[arch]["layers"][idx]
+
+    def fn(x, w, b):
+        return (layer_apply(kind, x, w, b, use_pallas=True),)
+
+    return fn
+
+
+def train_entry(arch: str, ncls: int):
+    def fn(x, y, lr, *params):
+        return train_step(arch, ncls, x, y, lr, *params)
+
+    return fn
+
+
+def eval_entry(arch: str, ncls: int):
+    def fn(x, *params):
+        return eval_logits(arch, ncls, x, *params)
+
+    return fn
+
+
+# Class-count requirements per architecture (datasets: one-vs-rest binary
+# tasks; deployments: §7.1 audio {2,11,5,3}, §7.2 image {2,5,3}).
+NCLS_BY_ARCH = {
+    "cnn5": [2, 3, 5, 11],
+    "cnn7": [2, 3, 5],
+    "dnn4": [2],
+}
+
+BATCH_SERVE = 1
+BATCH_PROFILE = 32
+BATCH_TRAIN = 32
+BATCH_EVAL = 64

@@ -1,0 +1,63 @@
+"""AOT pipeline: entry enumeration, HLO text validity, manifest schema."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entry_inventory_complete():
+    names = [meta["name"] for _, _, _, meta in
+             (lambda gen: [(n, f, s, dict(m, name=n)) for n, f, s, m in gen])(
+                 aot.build_entries())]
+    # every arch has train+eval per ncls and per-layer b1/b32 artifacts
+    for arch in M.ARCHS:
+        for ncls in M.NCLS_BY_ARCH[arch]:
+            assert f"train_{arch}_c{ncls}" in names
+            assert f"eval_{arch}_c{ncls}" in names
+        for i, (kind, _) in enumerate(M.ARCHS[arch]["layers"]):
+            if kind == "logits":
+                for ncls in M.NCLS_BY_ARCH[arch]:
+                    assert f"layer_{arch}_{i}_c{ncls}_b1" in names
+            else:
+                assert f"layer_{arch}_{i}_b1" in names
+                assert f"layer_{arch}_{i}_b32" in names
+    assert len(names) == len(set(names))
+
+
+def test_lower_one_layer_hlo_text():
+    for name, fn, specs, meta in aot.build_entries():
+        if name == "layer_dnn4_0_b1":
+            text = aot.lower_entry(fn, specs)
+            assert text.startswith("HloModule")
+            assert "f32[1,128]" in text
+            return
+    pytest.fail("entry not found")
+
+
+def test_arch_manifest_macs():
+    m = aot.arch_manifest()
+    # cnn5 conv1: 16*16*3*3*1*8
+    assert m["cnn5"]["layers"][0]["macs_per_sample"] == 16 * 16 * 9 * 8
+    # dense layer macs = din*dout
+    assert m["cnn5"]["layers"][2]["macs_per_sample"] == 256 * 64
+    for arch in M.ARCHS:
+        assert m[arch]["ncls"] == M.NCLS_BY_ARCH[arch]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_on_disk_matches_entries():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    names = {e["name"] for e in man["entries"]}
+    expected = {n for n, _, _, _ in aot.build_entries()}
+    assert names == expected
+    for e in man["entries"]:
+        assert os.path.exists(os.path.join(ARTIFACTS, e["file"])), e["file"]

@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes/dtypes per the repro brief; assert_allclose
+against ref. These tests are the CORE correctness signal for everything the
+rust runtime later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- dense ---
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 160),
+    n=st.integers(1, 96),
+    act=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+    got = K.dense(x, w, b, act)
+    want = K.ref.dense(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(1, 96),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.matmul(x, w)), np.asarray(K.ref.matmul(x, w)),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dense_dtypes(dtype):
+    x = _rand(0, (8, 40), dtype)
+    w = _rand(1, (40, 24), dtype)
+    b = _rand(2, (24,), dtype)
+    got = np.asarray(K.dense(x, w, b, True), dtype=np.float32)
+    want = np.asarray(
+        K.ref.dense(x.astype(jnp.float32), w.astype(jnp.float32),
+                    b.astype(jnp.float32), True))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_dense_flattens_trailing_dims():
+    x = _rand(3, (4, 4, 4, 16), jnp.float32)
+    w = _rand(4, (256, 8), jnp.float32)
+    b = _rand(5, (8,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.dense(x, w, b, True)),
+        np.asarray(K.ref.dense(x, w, b, True)), rtol=1e-4, atol=1e-4)
+
+
+@given(m=st.integers(1, 16), k=st.integers(1, 64), n=st.integers(1, 48),
+       act=st.booleans(), seed=st.integers(0, 2**16))
+def test_dense_vjp_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+
+    def f_pallas(x, w, b):
+        return K.dense(x, w, b, act).sum()
+
+    def f_ref(x, w, b):
+        return K.ref.dense(x, w, b, act).sum()
+
+    g = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- conv ---
+
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([4, 6, 8, 12, 16]),
+    w=st.sampled_from([4, 6, 8, 12, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    ksz=st.sampled_from([1, 3, 5]),
+    act=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(b, h, w, cin, cout, ksz, act, seed):
+    x = _rand(seed, (b, h, w, cin), jnp.float32)
+    wt = _rand(seed + 1, (ksz, ksz, cin, cout), jnp.float32)
+    bias = _rand(seed + 2, (cout,), jnp.float32)
+    got = K.conv2d(x, wt, bias, act)
+    want = K.ref.conv2d(x, wt, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_asymmetric_kernel():
+    x = _rand(0, (2, 8, 8, 3), jnp.float32)
+    wt = _rand(1, (1, 3, 3, 5), jnp.float32)
+    bias = _rand(2, (5,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.conv2d(x, wt, bias, True)),
+        np.asarray(K.ref.conv2d(x, wt, bias, True)), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- pool ---
+
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([2, 4, 8, 16]),
+    w=st.sampled_from([2, 4, 8, 16]),
+    c=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_maxpool_matches_ref(b, h, w, c, seed):
+    x = _rand(seed, (b, h, w, c), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.maxpool2x2(x)), np.asarray(K.ref.maxpool2x2(x)),
+        rtol=1e-6, atol=1e-6)
+
+
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([4, 8, 16]),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_pool_matches_ref(b, hw, cin, cout, seed):
+    x = _rand(seed, (b, hw, hw, cin), jnp.float32)
+    wt = _rand(seed + 1, (3, 3, cin, cout), jnp.float32)
+    bias = _rand(seed + 2, (cout,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(K.conv_pool(x, wt, bias)),
+        np.asarray(K.ref.conv_pool(x, wt, bias)), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ edge cases --
+
+def test_dense_zero_input():
+    x = jnp.zeros((4, 10))
+    w = _rand(0, (10, 6), jnp.float32)
+    b = _rand(1, (6,), jnp.float32)
+    np.testing.assert_allclose(np.asarray(K.dense(x, w, b, False)),
+                               np.tile(np.asarray(b), (4, 1)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_leaky_relu_negative_side():
+    x = -jnp.ones((2, 4))
+    w = jnp.eye(4)
+    b = jnp.zeros((4,))
+    got = np.asarray(K.dense(x, w, b, True))
+    np.testing.assert_allclose(got, -0.01 * np.ones((2, 4)), rtol=1e-6,
+                               atol=1e-6)

@@ -1,0 +1,102 @@
+"""L2 correctness: architecture shapes, Pallas/ref forward parity,
+train_step learns, parameter layout matches the manifest contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.mark.parametrize("arch", list(M.ARCHS))
+def test_param_shapes_consistent(arch):
+    shapes = M.param_shapes(arch, 2)
+    assert len(shapes) == 2 * len(M.ARCHS[arch]["layers"])
+    params = M.init_params(arch, 2, jax.random.PRNGKey(0))
+    for p, s in zip(params, shapes):
+        assert tuple(p.shape) == tuple(s)
+
+
+@pytest.mark.parametrize("arch", list(M.ARCHS))
+@pytest.mark.parametrize("ncls", [2, 3])
+def test_forward_shapes(arch, ncls):
+    params = M.init_params(arch, ncls, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2),
+                          (4,) + tuple(M.ARCHS[arch]["input"]))
+    logits = M.forward(arch, ncls, x, params)
+    assert logits.shape == (4, ncls)
+
+
+@pytest.mark.parametrize("arch", list(M.ARCHS))
+def test_pallas_matches_ref_forward(arch):
+    """Serving path (pallas) and reference graph agree end to end."""
+    params = M.init_params(arch, 2, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4),
+                          (3,) + tuple(M.ARCHS[arch]["input"]))
+    got = M.forward(arch, 2, x, params, use_pallas=True)
+    want = M.forward(arch, 2, x, params, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", list(M.ARCHS))
+def test_train_mode_matches_eval_forward(arch):
+    """The training graph's forward equals the serving forward (so weights
+    trained through it are valid for the Pallas serving path)."""
+    params = M.init_params(arch, 2, jax.random.PRNGKey(5))
+    x = jax.random.normal(jax.random.PRNGKey(6),
+                          (3,) + tuple(M.ARCHS[arch]["input"]))
+    got = M.forward(arch, 2, x, params, train_mode=True)
+    want = M.forward(arch, 2, x, params, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_layer_shapes_chain():
+    """Per-layer activation shapes chain correctly through each arch."""
+    for arch, spec in M.ARCHS.items():
+        prev_out = tuple(spec["input"])
+        for i in range(len(spec["layers"])):
+            _, ain, aout = M.layer_shapes(arch, i, 2)
+            assert ain == prev_out
+            prev_out = aout
+        assert prev_out == (2,)
+
+
+def test_train_step_reduces_loss():
+    arch, ncls = "dnn4", 2
+    key = jax.random.PRNGKey(7)
+    params = M.init_params(arch, ncls, key)
+    # separable synthetic data
+    x = jax.random.normal(jax.random.PRNGKey(8), (M.BATCH_TRAIN, 128))
+    y = (x[:, 0] > 0).astype(jnp.int32)
+    x = x + 2.0 * y[:, None]
+    lr = jnp.float32(0.05)
+    losses = []
+    for _ in range(30):
+        out = M.train_step(arch, ncls, x, y, lr, *params)
+        losses.append(float(out[0]))
+        params = list(out[1:])
+    assert losses[-1] < losses[0] * 0.5, losses[:3] + losses[-3:]
+
+
+def test_train_step_param_count():
+    arch, ncls = "cnn5", 3
+    params = M.init_params(arch, ncls, jax.random.PRNGKey(9))
+    x = jnp.zeros((M.BATCH_TRAIN,) + tuple(M.ARCHS[arch]["input"]))
+    y = jnp.zeros((M.BATCH_TRAIN,), jnp.int32)
+    out = M.train_step(arch, ncls, x, y, jnp.float32(0.01), *params)
+    assert len(out) == 1 + len(params)
+    for new, old in zip(out[1:], params):
+        assert new.shape == old.shape
+
+
+def test_loss_is_cross_entropy():
+    """Uniform logits -> loss == log(ncls)."""
+    arch, ncls = "dnn4", 2
+    params = [jnp.zeros(s) for s in M.param_shapes(arch, ncls)]
+    x = jnp.zeros((8, 128))
+    y = jnp.zeros((8,), jnp.int32)
+    loss = M.loss_fn(arch, ncls, params, x, y)
+    np.testing.assert_allclose(float(loss), np.log(ncls), rtol=1e-5)

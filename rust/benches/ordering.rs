@@ -1,0 +1,49 @@
+//! `cargo bench` target: the ordering solvers (Table 3's machinery).
+//! Custom harness (no criterion in the offline mirror) — see
+//! `antler::bench::harness`.
+
+use antler::bench::bench_fn;
+use antler::ordering::{
+    solve_brute, solve_genetic, solve_held_karp, GaConfig, OrderingProblem,
+};
+use antler::testkit::gen;
+use antler::tsplib::table3_instances;
+use antler::util::rng::Pcg32;
+
+fn random_problem(n: usize, seed: u64) -> OrderingProblem {
+    let mut rng = Pcg32::seed(seed);
+    let flat = gen::sym_cost_matrix(&mut rng, n, 100.0);
+    let cost: Vec<Vec<f64>> =
+        (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+    OrderingProblem::from_matrix(cost)
+}
+
+fn main() {
+    println!("== ordering solver benchmarks ==");
+    for n in [8usize, 10] {
+        let p = random_problem(n, n as u64);
+        bench_fn(&format!("brute_force/n={n}"), 1, 10, || {
+            let _ = solve_brute(&p);
+        });
+    }
+    for n in [10usize, 14, 17] {
+        let p = random_problem(n, n as u64);
+        bench_fn(&format!("held_karp/n={n}"), 1, if n > 14 { 3 } else { 10 }, || {
+            let _ = solve_held_karp(&p);
+        });
+    }
+    for n in [10usize, 17, 24] {
+        let p = random_problem(n, n as u64);
+        let cfg = GaConfig::default();
+        bench_fn(&format!("genetic/n={n}"), 1, 3, || {
+            let _ = solve_genetic(&p, &cfg);
+        });
+    }
+    // the actual Table 3 regeneration, timed end to end
+    bench_fn("table3/all_nine_instances", 0, 1, || {
+        for inst in table3_instances() {
+            let _ = solve_held_karp(&inst.problem);
+            let _ = solve_genetic(&inst.problem, &GaConfig::default());
+        }
+    });
+}

@@ -1,0 +1,20 @@
+//! `cargo bench` target: regenerate every simulation-backed table/figure
+//! of the paper and time the regeneration itself. (The training-backed
+//! figures — fig12/14/15/16/table5 — run via `antler bench all` and the
+//! examples; they need `make artifacts` and real SGD, so they are not
+//! part of the default bench loop.)
+
+use antler::bench::{bench_fn, run_driver};
+use antler::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(
+        ["bench", "--max-graphs", "300"].iter().map(|s| s.to_string()),
+    );
+    for id in ["fig3", "fig7", "fig8", "table3", "fig9", "fig10", "fig11", "table4"] {
+        println!("\n################ {id} ################");
+        bench_fn(&format!("regen/{id}"), 0, 1, || {
+            run_driver(id, &args).expect("driver runs");
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! `cargo bench` target: the serving hot path on the real PJRT runtime —
+//! per-layer execution, whole-task execution with and without activation
+//! caching, and the end-to-end serve loop. This is the §Perf measurement
+//! harness (EXPERIMENTS.md).
+
+use antler::bench::bench_fn;
+use antler::coordinator::{serve, BlockExecutor, ServePlan};
+use antler::device::Device;
+use antler::model::manifest::default_artifacts_dir;
+use antler::model::Tensor;
+use antler::runtime::Engine;
+use antler::taskgraph::{Partition, TaskGraph};
+use antler::trainer::GraphWeights;
+use antler::util::rng::Pcg32;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_hotpath: artifacts not built (run `make artifacts`), skipping");
+        return;
+    }
+    let eng = Engine::load(&dir).expect("engine");
+    let arch = eng.manifest().arch("cnn5").unwrap().clone();
+    let graph = TaskGraph::new(
+        5,
+        vec![1, 3, 4],
+        vec![
+            Partition(vec![0, 0, 0, 0, 0]),
+            Partition(vec![0, 0, 0, 1, 1]),
+            Partition(vec![0, 1, 1, 2, 2]),
+            Partition::singletons(5),
+        ],
+    )
+    .unwrap();
+    let ncls = vec![2usize; 5];
+    let mut rng = Pcg32::seed(1);
+    let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+    let mut ex = BlockExecutor::new(
+        &eng,
+        Device::msp430(),
+        arch.clone(),
+        graph.clone(),
+        ncls.clone(),
+        store,
+    );
+    ex.warmup().unwrap();
+
+    // single layer execution (the innermost hot path)
+    let x1 = Tensor::full(vec![1, 16, 16, 1], 0.2);
+    let w = Tensor::he_init(arch.layers[0].param_shapes(2)[0].clone(), &mut rng);
+    let b = Tensor::zeros(arch.layers[0].param_shapes(2)[1].clone());
+    bench_fn("layer/cnn5_conv0_b1", 5, 200, || {
+        let _ = eng.run_layer("cnn5", 0, None, &x1, &w, &b).unwrap();
+    });
+
+    // one full task, fresh sample every time (no activation reuse)
+    let mut sid = 0u64;
+    bench_fn("task/full_path_no_reuse", 3, 100, || {
+        sid += 1;
+        let _ = ex.run_task(sid, 0, &x1).unwrap();
+    });
+
+    // all five tasks on ONE sample (activation reuse across tasks)
+    bench_fn("round/5_tasks_shared_sample", 2, 50, || {
+        sid += 1;
+        for t in 0..5 {
+            let _ = ex.run_task(sid, t, &x1).unwrap();
+        }
+    });
+
+    // the serve loop end to end
+    let frames: Vec<(u64, Tensor)> = (0..20u64)
+        .map(|i| {
+            let data = (0..256).map(|k| ((i as usize + k) % 7) as f32 * 0.1).collect();
+            (i, Tensor::new(vec![1, 16, 16, 1], data))
+        })
+        .collect();
+    let plan = ServePlan::unconditional(vec![0, 1, 2, 3, 4]);
+    bench_fn("serve/20_frames_x_5_tasks", 1, 10, || {
+        let _ = serve(&mut ex, &plan, frames.clone(), 32, None).unwrap();
+    });
+    println!(
+        "counters: layer_execs={} layer_skips={} ({:.0}% compute avoided)",
+        ex.layer_execs,
+        ex.layer_skips,
+        ex.layer_skips as f64 / (ex.layer_execs + ex.layer_skips) as f64 * 100.0
+    );
+}

@@ -1,0 +1,194 @@
+//! Task affinity (§3.1): how similar two tasks' learned representations
+//! are at each branch point.
+//!
+//! Step 1 — per task, at each branch point, profile K samples: the K×K
+//! matrix of pairwise *dissimilarities* (inverse Pearson) between the
+//! samples' activation vectors, flattened (upper triangle) into a
+//! representation profile.
+//!
+//! Step 2 — for every task pair and branch point, Spearman's rank
+//! correlation between the two profiles gives the affinity score
+//! S[ρ][i][j], a D×n×n tensor.
+
+use crate::model::Tensor;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+/// Affinity scores S[ρ][i][j] ∈ [-1, 1]; symmetric in (i, j), diag = 1.
+#[derive(Debug, Clone)]
+pub struct AffinityTensor {
+    pub d: usize,
+    pub n: usize,
+    s: Vec<f64>,
+}
+
+impl AffinityTensor {
+    pub fn new(d: usize, n: usize) -> AffinityTensor {
+        let mut t = AffinityTensor { d, n, s: vec![0.0; d * n * n] };
+        for rho in 0..d {
+            for i in 0..n {
+                *t.at_mut(rho, i, i) = 1.0;
+            }
+        }
+        t
+    }
+
+    pub fn at(&self, rho: usize, i: usize, j: usize) -> f64 {
+        self.s[(rho * self.n + i) * self.n + j]
+    }
+
+    pub fn at_mut(&mut self, rho: usize, i: usize, j: usize) -> &mut f64 {
+        &mut self.s[(rho * self.n + i) * self.n + j]
+    }
+
+    pub fn set_sym(&mut self, rho: usize, i: usize, j: usize, v: f64) {
+        *self.at_mut(rho, i, j) = v;
+        *self.at_mut(rho, j, i) = v;
+    }
+
+    /// Dissimilarity 1 - S, clamped to [0, 2].
+    pub fn dissimilarity(&self, rho: usize, i: usize, j: usize) -> f64 {
+        (1.0 - self.at(rho, i, j)).clamp(0.0, 2.0)
+    }
+}
+
+/// Step 1: representation profile of one task at one branch point.
+/// `acts` holds the task's activation tensor for K profiling samples at
+/// that branch point, shape [K, features...]. Output: flattened upper
+/// triangle (i<j) of the K×K inverse-Pearson dissimilarity matrix.
+pub fn representation_profile(acts: &Tensor) -> Vec<f64> {
+    let k = acts.shape[0];
+    let feat: usize = acts.shape[1..].iter().product();
+    let row = |i: usize| &acts.data[i * feat..(i + 1) * feat];
+    let mut out = Vec::with_capacity(k * (k - 1) / 2);
+    for i in 0..k {
+        for j in (i + 1)..k {
+            out.push(1.0 - stats::pearson(row(i), row(j)));
+        }
+    }
+    out
+}
+
+/// Step 2: assemble the affinity tensor from per-task, per-branch-point
+/// profiles. `profiles[task][rho]` is the output of
+/// [`representation_profile`].
+pub fn affinity_from_profiles(profiles: &[Vec<Vec<f64>>]) -> AffinityTensor {
+    let n = profiles.len();
+    assert!(n > 0);
+    let d = profiles[0].len();
+    let mut t = AffinityTensor::new(d, n);
+    for rho in 0..d {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let s = stats::spearman(&profiles[i][rho], &profiles[j][rho]);
+                t.set_sym(rho, i, j, s);
+            }
+        }
+    }
+    t
+}
+
+/// Synthetic affinity for algorithm-level experiments and tests: tasks get
+/// latent unit vectors; affinity at branch point ρ is their cosine pushed
+/// toward 1 for early branch points (early layers encode shared basic
+/// patterns — §2.2) and toward the raw cosine for late ones.
+pub fn synthetic_affinity(n: usize, d: usize, rng: &mut Pcg32) -> AffinityTensor {
+    let dim = 8;
+    let latents: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            let v: Vec<f64> = (0..dim).map(|_| rng.gauss() as f64).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            v.into_iter().map(|x| x / norm).collect()
+        })
+        .collect();
+    let mut t = AffinityTensor::new(d, n);
+    for rho in 0..d {
+        // depth factor: 0 at the first branch point, 1 at the last
+        let depth = if d == 1 { 1.0 } else { rho as f64 / (d - 1) as f64 };
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let cos: f64 =
+                    latents[i].iter().zip(&latents[j]).map(|(a, b)| a * b).sum();
+                // early layers: high affinity for everyone; later: task-specific
+                let s = (1.0 - depth) * (0.75 + 0.25 * cos) + depth * cos;
+                t.set_sym(rho, i, j, s.clamp(-1.0, 1.0));
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(shape: Vec<usize>, f: impl Fn(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, (0..n).map(f).collect())
+    }
+
+    #[test]
+    fn profile_length_is_upper_triangle() {
+        let acts = tensor(vec![5, 7], |i| (i as f32).sin());
+        assert_eq!(representation_profile(&acts).len(), 10);
+    }
+
+    #[test]
+    fn identical_tasks_have_affinity_one() {
+        let acts = tensor(vec![4, 6], |i| (i * i % 17) as f32);
+        let p = representation_profile(&acts);
+        let t = affinity_from_profiles(&[vec![p.clone()], vec![p]]);
+        assert!((t.at(0, 0, 1) - 1.0).abs() < 1e-9);
+        assert!((t.at(0, 1, 0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diagonal_is_one_and_symmetric() {
+        let mut rng = Pcg32::seed(3);
+        let t = synthetic_affinity(6, 3, &mut rng);
+        for rho in 0..3 {
+            for i in 0..6 {
+                assert!((t.at(rho, i, i) - 1.0).abs() < 1e-12);
+                for j in 0..6 {
+                    assert_eq!(t.at(rho, i, j), t.at(rho, j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn early_branch_points_show_higher_affinity() {
+        let mut rng = Pcg32::seed(5);
+        let t = synthetic_affinity(8, 3, &mut rng);
+        let avg = |rho: usize| {
+            let mut s = 0.0;
+            let mut c = 0;
+            for i in 0..8 {
+                for j in (i + 1)..8 {
+                    s += t.at(rho, i, j);
+                    c += 1;
+                }
+            }
+            s / c as f64
+        };
+        assert!(avg(0) > avg(2), "early {} late {}", avg(0), avg(2));
+    }
+
+    #[test]
+    fn dissimilarity_clamped() {
+        let mut t = AffinityTensor::new(1, 2);
+        t.set_sym(0, 0, 1, -1.0);
+        assert_eq!(t.dissimilarity(0, 0, 1), 2.0);
+        t.set_sym(0, 0, 1, 1.0);
+        assert_eq!(t.dissimilarity(0, 0, 1), 0.0);
+    }
+
+    #[test]
+    fn opposite_profiles_low_affinity() {
+        // profiles that rank sample pairs in opposite order -> spearman -1
+        let p1 = vec![vec![1.0, 2.0, 3.0, 4.0]];
+        let p2 = vec![vec![4.0, 3.0, 2.0, 1.0]];
+        let t = affinity_from_profiles(&[p1, p2]);
+        assert!((t.at(0, 0, 1) + 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,281 @@
+//! The four comparison systems of §6 and their cost/memory/accuracy
+//! models, all sharing the same `ExecSim` semantics so differences come
+//! from the *mechanisms*, not the accounting:
+//!
+//!  * Vanilla — independently trained classifiers, run sequentially,
+//!    full weight reload per task visit (disjoint graph, cold slots).
+//!  * NWV [32] — everything packed into RAM via page merging: zero
+//!    switching cost, but every task still executes its full network and
+//!    packing pressure costs accuracy.
+//!  * NWS [33] — NWV plus the top-7% weights task-private in flash:
+//!    small reload per switch, accuracy ≈ Vanilla.
+//!  * YONO [27] — codebook-compressed, all-in-RAM: zero switching cost,
+//!    full execution per task.
+//!  * Antler — task graph + optimal order + activation caching.
+
+pub mod quant;
+
+pub use quant::{kmeans, nws_pack, nwv_pack, yono_pack, Packed};
+
+use crate::device::{Cost, Device};
+use crate::memory::ExecSim;
+use crate::model::ArchSpec;
+use crate::taskgraph::TaskGraph;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemKind {
+    Vanilla,
+    Antler,
+    Nwv,
+    Nws,
+    Yono,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Vanilla => "Vanilla",
+            SystemKind::Antler => "Antler",
+            SystemKind::Nwv => "NWV",
+            SystemKind::Nws => "NWS",
+            SystemKind::Yono => "YONO",
+        }
+    }
+
+    pub fn all() -> [SystemKind; 5] {
+        [
+            SystemKind::Vanilla,
+            SystemKind::Antler,
+            SystemKind::Nwv,
+            SystemKind::Nws,
+            SystemKind::Yono,
+        ]
+    }
+}
+
+/// Per-round cost of a system on a device (Figures 9–11). `antler_graph`
+/// and `antler_order` are the selected task graph and its optimal order;
+/// `nws_ext_bytes` is NWS's per-task flash-private weight footprint.
+pub struct CostInputs<'a> {
+    pub device: &'a Device,
+    pub arch: &'a ArchSpec,
+    pub ncls: &'a [usize],
+    pub antler_graph: &'a TaskGraph,
+    pub antler_order: &'a [usize],
+    pub nws_ext_bytes_per_task: usize,
+}
+
+/// Steady-state per-round (one input sample, all tasks) cost of `system`.
+pub fn round_cost(system: SystemKind, inp: &CostInputs) -> Cost {
+    let n = inp.ncls.len();
+    let bounds = inp.antler_graph.bounds.clone();
+    match system {
+        SystemKind::Antler => {
+            let mut sim =
+                ExecSim::new(inp.device, inp.arch, inp.antler_graph, inp.ncls);
+            sim.steady_round_cost(inp.antler_order, 4)
+        }
+        SystemKind::Vanilla => {
+            let g = TaskGraph::disjoint(n, bounds);
+            let order: Vec<usize> = (0..n).collect();
+            let mut sim = ExecSim::new(inp.device, inp.arch, &g, inp.ncls);
+            sim.steady_round_cost(&order, 4)
+        }
+        SystemKind::Nwv | SystemKind::Yono => {
+            // full in-memory execution of every network, zero loads
+            let g = TaskGraph::disjoint(n, bounds);
+            let order: Vec<usize> = (0..n).collect();
+            let mut sim = ExecSim::new(inp.device, inp.arch, &g, inp.ncls);
+            sim.all_resident = true;
+            sim.steady_round_cost(&order, 4)
+        }
+        SystemKind::Nws => {
+            let g = TaskGraph::disjoint(n, bounds);
+            let order: Vec<usize> = (0..n).collect();
+            let mut sim = ExecSim::new(inp.device, inp.arch, &g, inp.ncls);
+            sim.all_resident = true;
+            let mut c = sim.steady_round_cost(&order, 4);
+            // per task visit: reload its private high-significance weights
+            for _ in 0..n {
+                c.add(inp.device.load_cost(inp.nws_ext_bytes_per_task));
+            }
+            c
+        }
+    }
+}
+
+/// Total weight storage (Table 4 / Table 5). For the in-memory systems
+/// this is the packed RAM footprint; for Vanilla/Antler it is the full
+/// stored model.
+pub fn memory_bytes(
+    system: SystemKind,
+    arch: &ArchSpec,
+    ncls: &[usize],
+    antler_graph: &TaskGraph,
+    packed_ram: Option<usize>,
+    nws_ext_total: usize,
+) -> usize {
+    let n = ncls.len();
+    match system {
+        SystemKind::Vanilla => {
+            ncls.iter().map(|&c| arch.total_params(c) * 4).sum()
+        }
+        SystemKind::Antler => antler_graph.model_bytes(arch, ncls),
+        SystemKind::Nwv | SystemKind::Yono => packed_ram.unwrap_or_else(|| {
+            // fallback heuristic when no trained weights are available:
+            // a single network image plus per-task heads
+            arch.total_params(2) * 4 + n * 256
+        }),
+        SystemKind::Nws => {
+            packed_ram.unwrap_or_else(|| arch.total_params(2) * 4) + nws_ext_total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::Partition;
+
+    const TINY: &str = r#"{
+      "version": 1,
+      "archs": {"cnn5": {"input": [16,16,1], "ncls": [2],
+        "layers": [
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
+          {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
+          {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+          {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}
+        ]}},
+      "entries": []
+    }"#;
+
+    fn arch() -> ArchSpec {
+        crate::model::manifest::Manifest::from_json(
+            std::path::PathBuf::from("/tmp"),
+            &crate::util::json::Json::parse(TINY).unwrap(),
+        )
+        .unwrap()
+        .arch("cnn5")
+        .unwrap()
+        .clone()
+    }
+
+    fn antler_graph(n: usize) -> TaskGraph {
+        // all share segments 0-1, split into two groups at segment 2
+        let half: Vec<usize> = (0..n).map(|t| (t >= n / 2) as usize).collect();
+        TaskGraph::new(
+            n,
+            vec![1, 3, 4],
+            vec![
+                Partition::one_group(n),
+                Partition::one_group(n),
+                Partition(half),
+                Partition::singletons(n),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn inputs<'a>(
+        device: &'a Device,
+        arch: &'a ArchSpec,
+        ncls: &'a [usize],
+        g: &'a TaskGraph,
+        order: &'a [usize],
+    ) -> CostInputs<'a> {
+        CostInputs {
+            device,
+            arch,
+            ncls,
+            antler_graph: g,
+            antler_order: order,
+            nws_ext_bytes_per_task: 5 * 1024,
+        }
+    }
+
+    #[test]
+    fn antler_beats_all_baselines_on_16bit() {
+        let device = Device::msp430();
+        let arch = arch();
+        let ncls = vec![2usize; 6];
+        let g = antler_graph(6);
+        let order: Vec<usize> = (0..6).collect();
+        let inp = inputs(&device, &arch, &ncls, &g, &order);
+        let antler = round_cost(SystemKind::Antler, &inp).time();
+        for sys in [SystemKind::Vanilla, SystemKind::Nwv, SystemKind::Nws, SystemKind::Yono] {
+            let t = round_cost(sys, &inp).time();
+            assert!(antler < t, "{}: antler {} vs {}", sys.name(), antler, t);
+        }
+    }
+
+    #[test]
+    fn antler_speedup_increases_with_sharing() {
+        // the paper's 2.3x–4.6x band is checked end-to-end in the fig9
+        // bench with the *selected* graphs; here: monotonicity + a sane
+        // upper bound for a deliberately extreme (deeply shared) graph
+        let device = Device::msp430();
+        let arch = arch();
+        let ncls = vec![2usize; 10];
+        let deep = antler_graph(10);
+        let shallow = TaskGraph::new(
+            10,
+            vec![1, 3, 4],
+            vec![
+                Partition::one_group(10),
+                Partition::singletons(10),
+                Partition::singletons(10),
+                Partition::singletons(10),
+            ],
+        )
+        .unwrap();
+        let order: Vec<usize> = (0..10).collect();
+        let vanilla =
+            round_cost(SystemKind::Vanilla, &inputs(&device, &arch, &ncls, &deep, &order))
+                .time();
+        let t_deep =
+            round_cost(SystemKind::Antler, &inputs(&device, &arch, &ncls, &deep, &order))
+                .time();
+        let t_shallow = round_cost(
+            SystemKind::Antler,
+            &inputs(&device, &arch, &ncls, &shallow, &order),
+        )
+        .time();
+        assert!(t_deep < t_shallow, "{t_deep} vs {t_shallow}");
+        assert!(vanilla / t_shallow > 1.0);
+        assert!(vanilla / t_deep < 40.0);
+    }
+
+    #[test]
+    fn in_memory_systems_have_zero_load() {
+        let device = Device::msp430();
+        let arch = arch();
+        let ncls = vec![2usize; 4];
+        let g = antler_graph(4);
+        let order: Vec<usize> = (0..4).collect();
+        let inp = inputs(&device, &arch, &ncls, &g, &order);
+        assert_eq!(round_cost(SystemKind::Nwv, &inp).load_s, 0.0);
+        assert_eq!(round_cost(SystemKind::Yono, &inp).load_s, 0.0);
+        assert!(round_cost(SystemKind::Nws, &inp).load_s > 0.0);
+        assert!(round_cost(SystemKind::Vanilla, &inp).load_s > 0.0);
+    }
+
+    #[test]
+    fn memory_ordering_matches_table4() {
+        // Table 4: Vanilla > Antler > NWS > NWV >= YONO
+        let arch = arch();
+        let ncls = vec![2usize; 10];
+        let g = antler_graph(10);
+        let vanilla =
+            memory_bytes(SystemKind::Vanilla, &arch, &ncls, &g, None, 0);
+        let antler = memory_bytes(SystemKind::Antler, &arch, &ncls, &g, None, 0);
+        let nws =
+            memory_bytes(SystemKind::Nws, &arch, &ncls, &g, Some(50_000), 25_000);
+        let nwv = memory_bytes(SystemKind::Nwv, &arch, &ncls, &g, Some(55_000), 0);
+        let yono = memory_bytes(SystemKind::Yono, &arch, &ncls, &g, Some(45_000), 0);
+        assert!(vanilla > antler, "{vanilla} vs {antler}");
+        assert!(antler > nws);
+        assert!(nws > nwv);
+        assert!(nwv > yono);
+    }
+}

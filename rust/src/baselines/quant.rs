@@ -1,0 +1,356 @@
+//! Weight-transform mechanisms behind the baseline systems:
+//!  * NWV (Neural Weight Virtualization, [32]) — pack every task's
+//!    weights into a fixed RAM budget by k-means page merging: weight
+//!    pages across tasks that land in the same cluster share one
+//!    physical page.
+//!  * NWS (Weight Separation, [33]) — keep the top-|magnitude| fraction
+//!    of weights task-private (in flash), merge the rest in RAM.
+//!  * YONO ([27]) — product-quantization codebook compression: weights
+//!    split into sub-vectors, k-means to a small codebook, stored as
+//!    1-byte indices + the codebook.
+//!
+//! All transforms consume per-task flat parameter lists (biases are kept
+//! exact everywhere — they are tiny and every scheme stores them raw).
+
+use crate::model::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Plain k-means on `points` (row-major, `dim` wide). Returns (centroids,
+/// assignment). Deterministic from `rng`; `iters` Lloyd steps.
+pub fn kmeans(
+    points: &[f32],
+    dim: usize,
+    k: usize,
+    iters: usize,
+    rng: &mut Pcg32,
+) -> (Vec<f32>, Vec<usize>) {
+    let n = points.len() / dim;
+    assert!(n > 0 && k > 0);
+    let k = k.min(n);
+    // init: random distinct points
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut centroids: Vec<f32> = Vec::with_capacity(k * dim);
+    for &i in idx.iter().take(k) {
+        centroids.extend_from_slice(&points[i * dim..(i + 1) * dim]);
+    }
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        // assign
+        for i in 0..n {
+            let p = &points[i * dim..(i + 1) * dim];
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..k {
+                let q = &centroids[c * dim..(c + 1) * dim];
+                let mut d = 0.0f32;
+                for j in 0..dim {
+                    let t = p[j] - q[j];
+                    d += t * t;
+                }
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            assign[i] = best.1;
+        }
+        // update
+        let mut sums = vec![0.0f32; k * dim];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i];
+            counts[c] += 1;
+            for j in 0..dim {
+                sums[c * dim + j] += points[i * dim + j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..dim {
+                    centroids[c * dim + j] = sums[c * dim + j] / counts[c] as f32;
+                }
+            }
+        }
+    }
+    (centroids, assign)
+}
+
+fn is_weight(t: &Tensor) -> bool {
+    t.rank() > 1
+}
+
+fn flat_weights(params: &[Vec<Tensor>]) -> Vec<f32> {
+    params
+        .iter()
+        .flat_map(|p| p.iter())
+        .filter(|t| is_weight(t))
+        .flat_map(|t| t.data.iter().copied())
+        .collect()
+}
+
+fn scatter_weights(params: &mut [Vec<Tensor>], flat: &[f32]) {
+    let mut off = 0;
+    for p in params.iter_mut() {
+        for t in p.iter_mut() {
+            if is_weight(t) {
+                let len = t.data.len();
+                t.data.copy_from_slice(&flat[off..off + len]);
+                off += len;
+            }
+        }
+    }
+    assert_eq!(off, flat.len());
+}
+
+fn bias_bytes(params: &[Vec<Tensor>]) -> usize {
+    params
+        .iter()
+        .flat_map(|p| p.iter())
+        .filter(|t| !is_weight(t))
+        .map(|t| t.bytes())
+        .sum()
+}
+
+/// Result of a baseline weight transform.
+#[derive(Debug, Clone)]
+pub struct Packed {
+    /// Transformed per-task parameter lists (for accuracy evaluation).
+    pub params: Vec<Vec<Tensor>>,
+    /// Bytes resident in RAM.
+    pub ram_bytes: usize,
+    /// Bytes that stay in external memory and reload per task switch.
+    pub ext_bytes_per_task: usize,
+}
+
+/// NWV: merge weight pages across all tasks into `budget_bytes` of RAM.
+pub fn nwv_pack(
+    params: &[Vec<Tensor>],
+    budget_bytes: usize,
+    page: usize,
+    rng: &mut Pcg32,
+) -> Packed {
+    let mut out = params.to_vec();
+    let flat = flat_weights(params);
+    let n_pages = flat.len().div_ceil(page);
+    let bias = bias_bytes(params);
+    let budget_pages = budget_bytes.saturating_sub(bias) / (page * 4);
+    let k = budget_pages.clamp(1, n_pages);
+    // pad to page multiple
+    let mut padded = flat.clone();
+    padded.resize(n_pages * page, 0.0);
+    let (centroids, assign) = kmeans(&padded, page, k, 6, rng);
+    let mut merged = vec![0.0f32; padded.len()];
+    for (i, &c) in assign.iter().enumerate() {
+        merged[i * page..(i + 1) * page]
+            .copy_from_slice(&centroids[c * page..(c + 1) * page]);
+    }
+    merged.truncate(flat.len());
+    scatter_weights(&mut out, &merged);
+    let unique = assign
+        .iter()
+        .collect::<std::collections::HashSet<_>>()
+        .len();
+    Packed {
+        params: out,
+        ram_bytes: unique * page * 4 + bias,
+        ext_bytes_per_task: 0,
+    }
+}
+
+/// NWS: top `keep_frac` |weights| stay exact (flash-resident, reloaded per
+/// task), the rest are NWV-merged into RAM.
+pub fn nws_pack(
+    params: &[Vec<Tensor>],
+    budget_bytes: usize,
+    keep_frac: f64,
+    page: usize,
+    rng: &mut Pcg32,
+) -> Packed {
+    let flat = flat_weights(params);
+    let n = flat.len();
+    let keep = ((n as f64) * keep_frac) as usize;
+    // magnitude threshold
+    let mut mags: Vec<f32> = flat.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let thresh = if keep == 0 { f32::INFINITY } else { mags[keep - 1] };
+    // merge only the small weights
+    let small: Vec<f32> = flat
+        .iter()
+        .map(|&x| if x.abs() >= thresh { 0.0 } else { x })
+        .collect();
+    let n_pages = small.len().div_ceil(page);
+    let bias = bias_bytes(params);
+    let budget_pages = budget_bytes.saturating_sub(bias) / (page * 4);
+    let k = budget_pages.clamp(1, n_pages);
+    let mut padded = small.clone();
+    padded.resize(n_pages * page, 0.0);
+    let (centroids, assign) = kmeans(&padded, page, k, 6, rng);
+    let mut merged = vec![0.0f32; padded.len()];
+    for (i, &c) in assign.iter().enumerate() {
+        merged[i * page..(i + 1) * page]
+            .copy_from_slice(&centroids[c * page..(c + 1) * page]);
+    }
+    merged.truncate(n);
+    // exact large weights override the merged values
+    let mut final_flat = merged;
+    let mut kept = 0usize;
+    for (i, &x) in flat.iter().enumerate() {
+        if x.abs() >= thresh {
+            final_flat[i] = x;
+            kept += 1;
+        }
+    }
+    let mut out = params.to_vec();
+    scatter_weights(&mut out, &final_flat);
+    let unique = assign
+        .iter()
+        .collect::<std::collections::HashSet<_>>()
+        .len();
+    Packed {
+        params: out,
+        ram_bytes: unique * page * 4 + bias,
+        ext_bytes_per_task: kept * 4 / params.len().max(1),
+    }
+}
+
+/// YONO: product quantization with `dim`-wide sub-vectors and a `k`-entry
+/// codebook (k ≤ 256 so indices are one byte).
+pub fn yono_pack(params: &[Vec<Tensor>], dim: usize, k: usize, rng: &mut Pcg32) -> Packed {
+    assert!(k <= 256, "one-byte codebook indices");
+    let flat = flat_weights(params);
+    let n_sub = flat.len().div_ceil(dim);
+    let mut padded = flat.clone();
+    padded.resize(n_sub * dim, 0.0);
+    let (centroids, assign) = kmeans(&padded, dim, k, 8, rng);
+    let mut quant = vec![0.0f32; padded.len()];
+    for (i, &c) in assign.iter().enumerate() {
+        quant[i * dim..(i + 1) * dim]
+            .copy_from_slice(&centroids[c * dim..(c + 1) * dim]);
+    }
+    quant.truncate(flat.len());
+    let mut out = params.to_vec();
+    scatter_weights(&mut out, &quant);
+    Packed {
+        params: out,
+        ram_bytes: k * dim * 4 + n_sub + bias_bytes(params),
+        ext_bytes_per_task: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_params(tasks: usize, seed: u64) -> Vec<Vec<Tensor>> {
+        let mut rng = Pcg32::seed(seed);
+        (0..tasks)
+            .map(|_| {
+                vec![
+                    Tensor::he_init(vec![16, 8], &mut rng),
+                    Tensor::zeros(vec![8]),
+                    Tensor::he_init(vec![8, 2], &mut rng),
+                    Tensor::zeros(vec![2]),
+                ]
+            })
+            .collect()
+    }
+
+    fn raw_bytes(p: &[Vec<Tensor>]) -> usize {
+        p.iter().flat_map(|t| t.iter()).map(|t| t.bytes()).sum()
+    }
+
+    #[test]
+    fn kmeans_clusters_separated_points() {
+        let mut rng = Pcg32::seed(1);
+        let mut pts = Vec::new();
+        for i in 0..40 {
+            let base = if i % 2 == 0 { 0.0 } else { 10.0 };
+            pts.extend([base + rng.f32() * 0.1, base - rng.f32() * 0.1]);
+        }
+        let (_, assign) = kmeans(&pts, 2, 2, 5, &mut rng);
+        for i in (0..40).step_by(2) {
+            assert_eq!(assign[i], assign[0]);
+            assert_eq!(assign[i + 1], assign[1]);
+        }
+        assert_ne!(assign[0], assign[1]);
+    }
+
+    #[test]
+    fn nwv_fits_budget_and_degrades_with_pressure() {
+        let params = toy_params(4, 2);
+        let mut rng = Pcg32::seed(3);
+        let raw = raw_bytes(&params);
+        let tight = nwv_pack(&params, raw / 8, 16, &mut rng);
+        let loose = nwv_pack(&params, raw, 16, &mut Pcg32::seed(3));
+        assert!(tight.ram_bytes <= raw / 8 + 256);
+        assert!(tight.ram_bytes < loose.ram_bytes);
+        // distortion grows as the budget shrinks
+        let dist = |packed: &Packed| -> f64 {
+            packed
+                .params
+                .iter()
+                .zip(&params)
+                .flat_map(|(a, b)| a.iter().zip(b.iter()))
+                .map(|(a, b)| a.l2_dist(b))
+                .sum()
+        };
+        assert!(dist(&tight) > dist(&loose));
+    }
+
+    #[test]
+    fn nws_keeps_large_weights_exact() {
+        let params = toy_params(3, 4);
+        let mut rng = Pcg32::seed(5);
+        let raw = raw_bytes(&params);
+        let packed = nws_pack(&params, raw / 10, 0.07, 16, &mut rng);
+        // the largest-magnitude weight must be preserved exactly
+        let (mut max_val, mut loc) = (0.0f32, (0, 0, 0));
+        for (t, p) in params.iter().enumerate() {
+            for (j, tensor) in p.iter().enumerate() {
+                for (i, &v) in tensor.data.iter().enumerate() {
+                    if v.abs() > max_val {
+                        max_val = v.abs();
+                        loc = (t, j, i);
+                    }
+                }
+            }
+        }
+        let (t, j, i) = loc;
+        assert_eq!(packed.params[t][j].data[i], params[t][j].data[i]);
+        assert!(packed.ext_bytes_per_task > 0);
+    }
+
+    #[test]
+    fn yono_codebook_compresses_hard() {
+        // larger toy nets: codebook overhead must amortize
+        let mut rng0 = Pcg32::seed(60);
+        let params: Vec<Vec<Tensor>> = (0..6)
+            .map(|_| {
+                vec![
+                    Tensor::he_init(vec![64, 32], &mut rng0),
+                    Tensor::zeros(vec![32]),
+                    Tensor::he_init(vec![32, 8], &mut rng0),
+                    Tensor::zeros(vec![8]),
+                ]
+            })
+            .collect();
+        let mut rng = Pcg32::seed(7);
+        let raw = raw_bytes(&params);
+        let packed = yono_pack(&params, 8, 64, &mut rng);
+        assert!(packed.ram_bytes < raw / 4, "{} vs {}", packed.ram_bytes, raw);
+        assert_eq!(packed.ext_bytes_per_task, 0);
+        // quantized weights remain finite and close-ish
+        for (a, b) in packed.params.iter().flatten().zip(params.iter().flatten()) {
+            assert!(a.data.iter().all(|v| v.is_finite()));
+            assert_eq!(a.shape, b.shape);
+        }
+    }
+
+    #[test]
+    fn transforms_preserve_bias_exactly() {
+        let mut params = toy_params(2, 8);
+        params[0][1].data.iter_mut().for_each(|v| *v = 0.5);
+        let mut rng = Pcg32::seed(9);
+        let packed = nwv_pack(&params, 512, 16, &mut rng);
+        assert!(packed.params[0][1].data.iter().all(|&v| v == 0.5));
+    }
+}

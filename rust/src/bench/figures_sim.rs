@@ -1,0 +1,463 @@
+//! Simulation-only figure/table drivers (no training needed): Fig. 3,
+//! Fig. 7, Fig. 8, Table 3, Fig. 9, Fig. 10, Fig. 11, Table 4.
+//!
+//! Cost figures use the *selected* task graph per dataset, chosen from
+//! affinity-guided enumeration over a synthetic affinity tensor seeded
+//! per dataset (training-derived affinity is exercised by the fig12/15
+//! drivers and the examples; the cost figures only need graph *shape*).
+
+use anyhow::Result;
+
+use super::{fmt_energy, fmt_time, print_table};
+use crate::affinity::{synthetic_affinity, AffinityTensor};
+use crate::baselines::{self, SystemKind};
+use crate::data::standard_datasets;
+use crate::device::Device;
+use crate::model::{manifest::default_artifacts_dir, ArchSpec};
+use crate::ordering::{solve_genetic, solve_held_karp, GaConfig};
+use crate::taskgraph::select::{
+    budget_extremes, score_graph, select_tradeoff, tradeoff_curve, GraphScore,
+};
+use crate::taskgraph::{enumerate, TaskGraph};
+use crate::tsplib::{table3_instances, Variant};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+
+/// Arch specs come from the manifest when artifacts are built, otherwise
+/// from an embedded copy so the sim figures work standalone.
+pub fn arch_specs() -> std::collections::BTreeMap<String, ArchSpec> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        if let Ok(m) = crate::model::manifest::Manifest::load(&dir) {
+            return m.archs;
+        }
+    }
+    crate::model::manifest::Manifest::from_json(
+        std::path::PathBuf::from("."),
+        &crate::util::json::Json::parse(EMBEDDED_ARCHS).unwrap(),
+    )
+    .expect("embedded manifest parses")
+    .archs
+}
+
+const EMBEDDED_ARCHS: &str = r#"{
+  "version": 1,
+  "archs": {
+    "cnn5": {"input": [16,16,1], "ncls": [2,3,5,11], "layers": [
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
+      {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
+      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]},
+    "cnn7": {"input": [32,32,1], "ncls": [2,3,5], "layers": [
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[32,32,1],"out":[16,16,8],"macs_per_sample":73728},
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[16,16,8],"out":[8,8,16],"macs_per_sample":294912},
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":16,"cout":32},"in":[8,8,16],"out":[4,4,32],"macs_per_sample":294912},
+      {"kind":"dense","cfg":{"din":512,"dout":128},"in":[4,4,32],"out":[128],"macs_per_sample":65536},
+      {"kind":"dense","cfg":{"din":128,"dout":64},"in":[128],"out":[64],"macs_per_sample":8192},
+      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]},
+    "dnn4": {"input": [128], "ncls": [2], "layers": [
+      {"kind":"dense","cfg":{"din":128,"dout":64},"in":[128],"out":[64],"macs_per_sample":8192},
+      {"kind":"dense","cfg":{"din":64,"dout":64},"in":[64],"out":[64],"macs_per_sample":4096},
+      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]}
+  },
+  "entries": []
+}"#;
+
+/// Score a dataset's candidate graphs under a device; shared by several
+/// drivers.
+pub fn dataset_scores(
+    ds_name: &str,
+    arch: &ArchSpec,
+    n_tasks: usize,
+    seed: u64,
+    device: &Device,
+    branch_points: usize,
+    max_graphs: usize,
+) -> (AffinityTensor, Vec<GraphScore>) {
+    let bounds = TaskGraph::default_bounds(arch.n_layers(), branch_points);
+    let mut rng = Pcg32::seed(seed ^ 0xD5);
+    let aff = synthetic_affinity(n_tasks, bounds.len(), &mut rng);
+    let graphs = if n_tasks <= 5 {
+        enumerate::enumerate_all(n_tasks, &bounds, Some(max_graphs))
+    } else {
+        enumerate::clustered(&aff, &bounds, max_graphs)
+    };
+    let ncls = vec![2usize; n_tasks];
+    let scores = graphs
+        .iter()
+        .map(|g| score_graph(g, &aff, arch, &ncls, device))
+        .collect();
+    let _ = ds_name;
+    (aff, scores)
+}
+
+// ------------------------------------------------------------------ fig3
+
+/// Fig. 3: variety vs execution cost tradeoff as the model-size budget
+/// sweeps, for five image tasks on the 5-layer CNN.
+pub fn fig3_tradeoff(args: &Args) -> Result<()> {
+    let archs = arch_specs();
+    let arch = &archs["cnn5"];
+    let device = Device::msp430();
+    let max_graphs = args.usize("max-graphs", 2000);
+    let (_aff, scores) =
+        dataset_scores("mnist-s", arch, 5, 42, &device, 3, max_graphs);
+    let curve = tradeoff_curve(&scores);
+    let chosen = select_tradeoff(&scores);
+    println!(
+        "Fig 3: {} candidate graphs, budget sweep ({} points); * = selected",
+        scores.len(),
+        curve.len()
+    );
+    let rows: Vec<Vec<String>> = curve
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.1}KB", p.budget_bytes as f64 / 1024.0),
+                format!("{:.3}", p.variety_norm),
+                format!("{:.3}", p.cost_norm),
+                if p.pick == chosen { "*".into() } else { "".into() },
+            ]
+        })
+        .collect();
+    print_table(&["budget", "variety(norm)", "exec-cost(norm)", "sel"], &rows);
+    let s = &scores[chosen];
+    println!(
+        "selected: variety={:.3} size={:.1}KB round={}",
+        s.variety,
+        s.model_bytes as f64 / 1024.0,
+        fmt_time(s.exec_time)
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig7
+
+/// Fig. 7: branch point count BP ∈ {3,5,7} vs variety and overhead.
+pub fn fig7_branch_points(args: &Args) -> Result<()> {
+    let archs = arch_specs();
+    let device = Device::msp430();
+    let max_graphs = args.usize("max-graphs", 400);
+    let mut rows = Vec::new();
+    for ds in standard_datasets() {
+        let arch = &archs[ds.arch];
+        for bp in [3usize, 5, 7] {
+            let eff_bp = bp.min(arch.n_layers() - 1);
+            let (_a, scores) = dataset_scores(
+                ds.name, arch, ds.n_classes, ds.seed + bp as u64, &device,
+                eff_bp, max_graphs,
+            );
+            let sel = select_tradeoff(&scores);
+            rows.push(vec![
+                ds.name.to_string(),
+                format!("{bp}{}", if eff_bp != bp { "(clamped)" } else { "" }),
+                format!("{:.3}", scores[sel].variety),
+                fmt_time(scores[sel].exec_time),
+            ]);
+        }
+    }
+    println!("Fig 7: branch points vs variety (lower=better) and overhead");
+    print_table(&["dataset", "BP", "variety", "round-time"], &rows);
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig8
+
+/// Fig. 8: variety vs execution cost at min / tradeoff / max budget.
+pub fn fig8_budget_tradeoff(args: &Args) -> Result<()> {
+    let archs = arch_specs();
+    let device = Device::msp430();
+    let max_graphs = args.usize("max-graphs", 400);
+    let mut rows = Vec::new();
+    for ds in standard_datasets() {
+        let arch = &archs[ds.arch];
+        let (_a, scores) =
+            dataset_scores(ds.name, arch, ds.n_classes, ds.seed, &device, 3, max_graphs);
+        let (lo, mid, hi) = budget_extremes(&scores);
+        for (label, i) in [("min", lo), ("tradeoff", mid), ("max", hi)] {
+            rows.push(vec![
+                ds.name.to_string(),
+                label.to_string(),
+                format!("{:.3}", scores[i].variety),
+                fmt_time(scores[i].exec_time),
+                format!("{:.1}KB", scores[i].model_bytes as f64 / 1024.0),
+            ]);
+        }
+    }
+    println!("Fig 8: budget extremes vs the selected tradeoff point");
+    print_table(&["dataset", "budget", "variety", "round-time", "size"], &rows);
+    Ok(())
+}
+
+// ---------------------------------------------------------------- table3
+
+/// Table 3: genetic algorithm vs exact optimum on the TSPLIB-style
+/// ordering instances (regular / precedence / conditional).
+pub fn table3_ga(args: &Args) -> Result<()> {
+    let seed = args.u64("seed", 0xA417);
+    let mut rows = Vec::new();
+    for inst in table3_instances() {
+        let optimal = solve_held_karp(&inst.problem)
+            .expect("feasible instance")
+            .cost;
+        let ga = solve_genetic(&inst.problem, &GaConfig { seed, ..Default::default() })
+            .expect("ga solution");
+        let variant = match inst.variant {
+            Variant::Regular => "Regular",
+            Variant::Precedence => "Precedence",
+            Variant::Conditional => "Conditional",
+        };
+        rows.push(vec![
+            variant.to_string(),
+            inst.name.to_string(),
+            format!("{}/{}/{}", inst.nodes, inst.n_precedence, inst.n_conditional),
+            format!("{:.0}", optimal),
+            format!("{:.0}", ga.cost),
+            format!("{:+.1}%", (ga.cost / optimal - 1.0) * 100.0),
+        ]);
+    }
+    println!("Table 3: GA vs exact optimal task ordering");
+    print_table(
+        &["variant", "instance", "node/pre/cnd", "optimal", "antler(GA)", "gap"],
+        &rows,
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------- fig9/fig10
+
+fn comparison(args: &Args, energy: bool) -> Result<()> {
+    let archs = arch_specs();
+    let max_graphs = args.usize("max-graphs", 400);
+    for device in [Device::msp430(), Device::stm32h747()] {
+        println!(
+            "\nFig {}: per-input all-task {} on {}",
+            if energy { 10 } else { 9 },
+            if energy { "energy" } else { "execution time" },
+            device.name
+        );
+        let mut rows = Vec::new();
+        for ds in standard_datasets() {
+            let arch = &archs[ds.arch];
+            let (_a, scores) = dataset_scores(
+                ds.name, arch, ds.n_classes, ds.seed, &device, 3, max_graphs,
+            );
+            let sel = select_tradeoff(&scores);
+            let graph = &scores[sel].graph;
+            let ncls = vec![2usize; ds.n_classes];
+            let net_bytes = arch.total_params(2) * 4;
+            let inp = baselines::CostInputs {
+                device: &device,
+                arch,
+                ncls: &ncls,
+                antler_graph: graph,
+                antler_order: &scores[sel].order,
+                nws_ext_bytes_per_task: (net_bytes as f64 * 0.07) as usize,
+            };
+            let mut row = vec![ds.name.to_string()];
+            let mut antler_v = 0.0;
+            let mut worst: f64 = 0.0;
+            for sys in SystemKind::all() {
+                let c = baselines::round_cost(sys, &inp);
+                let v = if energy { c.energy() } else { c.time() };
+                if sys == SystemKind::Antler {
+                    antler_v = v;
+                }
+                worst = worst.max(v);
+                row.push(if energy { fmt_energy(v) } else { fmt_time(v) });
+            }
+            row.push(format!("{:.1}x", worst / antler_v.max(1e-12)));
+            rows.push(row);
+        }
+        print_table(
+            &["dataset", "Vanilla", "Antler", "NWV", "NWS", "YONO", "win"],
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 9: execution time vs baselines, both platforms.
+pub fn fig9_time(args: &Args) -> Result<()> {
+    comparison(args, false)
+}
+
+/// Fig. 10: energy vs baselines, both platforms.
+pub fn fig10_energy(args: &Args) -> Result<()> {
+    comparison(args, true)
+}
+
+// ----------------------------------------------------------------- fig11
+
+/// Fig. 11: time/energy split into inference vs weight-reload overhead
+/// for Antler / Vanilla / NWS, averaged over datasets, per platform.
+pub fn fig11_breakdown(args: &Args) -> Result<()> {
+    let archs = arch_specs();
+    let max_graphs = args.usize("max-graphs", 400);
+    for device in [Device::msp430(), Device::stm32h747()] {
+        let mut acc: std::collections::BTreeMap<&str, (f64, f64, f64, f64)> =
+            Default::default();
+        let mut n_ds = 0.0;
+        for ds in standard_datasets() {
+            let arch = &archs[ds.arch];
+            let (_a, scores) = dataset_scores(
+                ds.name, arch, ds.n_classes, ds.seed, &device, 3, max_graphs,
+            );
+            let sel = select_tradeoff(&scores);
+            let ncls = vec![2usize; ds.n_classes];
+            let net_bytes = arch.total_params(2) * 4;
+            let inp = baselines::CostInputs {
+                device: &device,
+                arch,
+                ncls: &ncls,
+                antler_graph: &scores[sel].graph,
+                antler_order: &scores[sel].order,
+                nws_ext_bytes_per_task: (net_bytes as f64 * 0.07) as usize,
+            };
+            for sys in [SystemKind::Vanilla, SystemKind::Antler, SystemKind::Nws] {
+                let c = baselines::round_cost(sys, &inp);
+                let e = acc.entry(sys.name()).or_default();
+                e.0 += c.exec_s;
+                e.1 += c.load_s;
+                e.2 += c.exec_j;
+                e.3 += c.load_j;
+            }
+            n_ds += 1.0;
+        }
+        println!("\nFig 11 ({}): inference vs reload breakdown (mean over datasets)", device.name);
+        let rows: Vec<Vec<String>> = acc
+            .iter()
+            .map(|(name, (es, ls, ej, lj))| {
+                vec![
+                    name.to_string(),
+                    fmt_time(es / n_ds),
+                    fmt_time(ls / n_ds),
+                    format!("{:.1}%", ls / (es + ls) * 100.0),
+                    fmt_energy(ej / n_ds),
+                    fmt_energy(lj / n_ds),
+                ]
+            })
+            .collect();
+        print_table(
+            &["system", "inference", "reload", "reload%", "inf-energy", "reload-energy"],
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- table4
+
+/// Table 4: total weight memory per system (10-task cnn5 set, packed
+/// budgets from the mechanism transforms on He-initialized nets — packing
+/// geometry does not depend on training).
+pub fn table4_memory(args: &Args) -> Result<()> {
+    let archs = arch_specs();
+    let arch = &archs["cnn5"];
+    let device = Device::msp430();
+    let n = 10usize;
+    let ncls = vec![2usize; n];
+    let (_a, scores) =
+        dataset_scores("mnist-s", arch, n, 42, &device, 3, args.usize("max-graphs", 400));
+    let sel = select_tradeoff(&scores);
+    let mut rng = Pcg32::seed(4);
+    let per_task: Vec<Vec<crate::model::Tensor>> = (0..n)
+        .map(|_| {
+            arch.flat_param_shapes(2)
+                .into_iter()
+                .map(|s| crate::model::Tensor::he_init(s, &mut rng))
+                .collect()
+        })
+        .collect();
+    let ram_budget = 128 * 1024; // the in-memory systems' RAM budget
+    let nwv = baselines::nwv_pack(&per_task, ram_budget, 256, &mut rng);
+    let nws = baselines::nws_pack(&per_task, ram_budget, 0.07, 256, &mut rng);
+    let yono = baselines::yono_pack(&per_task, 8, 256, &mut rng);
+    let rows: Vec<Vec<String>> = [
+        ("Vanilla", baselines::memory_bytes(SystemKind::Vanilla, arch, &ncls, &scores[sel].graph, None, 0)),
+        ("Antler", baselines::memory_bytes(SystemKind::Antler, arch, &ncls, &scores[sel].graph, None, 0)),
+        ("NWS", nws.ram_bytes + nws.ext_bytes_per_task * n),
+        ("NWV", nwv.ram_bytes),
+        ("YONO", yono.ram_bytes),
+    ]
+    .iter()
+    .map(|(name, bytes)| vec![name.to_string(), format!("{:.0}KB", *bytes as f64 / 1024.0)])
+    .collect();
+    println!("Table 4: weight memory consumption (10 tasks, cnn5)");
+    print_table(&["system", "memory"], &rows);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::parse(["x", "--max-graphs", "120"].iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn all_sim_drivers_run() {
+        let a = args();
+        fig3_tradeoff(&a).unwrap();
+        fig8_budget_tradeoff(&a).unwrap();
+        table4_memory(&a).unwrap();
+    }
+
+    #[test]
+    fn fig9_shape_antler_wins() {
+        // the headline claim: Antler's round cost is the lowest of all
+        // five systems on both platforms, for every dataset
+        let archs = arch_specs();
+        for device in [Device::msp430(), Device::stm32h747()] {
+            for ds in standard_datasets().into_iter().take(3) {
+                let arch = &archs[ds.arch];
+                let (_a, scores) =
+                    dataset_scores(ds.name, arch, ds.n_classes, ds.seed, &device, 3, 150);
+                let sel = select_tradeoff(&scores);
+                let ncls = vec![2usize; ds.n_classes];
+                let inp = baselines::CostInputs {
+                    device: &device,
+                    arch,
+                    ncls: &ncls,
+                    antler_graph: &scores[sel].graph,
+                    antler_order: &scores[sel].order,
+                    nws_ext_bytes_per_task: (arch.total_params(2) * 4) * 7 / 100,
+                };
+                let antler =
+                    baselines::round_cost(SystemKind::Antler, &inp).time();
+                for sys in [SystemKind::Vanilla, SystemKind::Nwv, SystemKind::Nws, SystemKind::Yono] {
+                    let t = baselines::round_cost(sys, &inp).time();
+                    assert!(
+                        antler <= t * 1.001,
+                        "{} {} {}: antler {} vs {}",
+                        device.name,
+                        ds.name,
+                        sys.name(),
+                        antler,
+                        t
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table3_ga_close_to_optimal() {
+        for inst in table3_instances() {
+            let optimal = solve_held_karp(&inst.problem).unwrap().cost;
+            let ga =
+                solve_genetic(&inst.problem, &GaConfig::default()).unwrap();
+            assert!(
+                ga.cost <= optimal * 1.08 + 1e-9,
+                "{}: ga {} vs opt {}",
+                inst.name,
+                ga.cost,
+                optimal
+            );
+        }
+    }
+}

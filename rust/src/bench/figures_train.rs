@@ -1,0 +1,295 @@
+//! Training-backed figure drivers (need `make artifacts`): Fig. 12
+//! accuracy comparison, and the §7 deployment set Fig. 14/15/16 +
+//! Table 5. Step counts are CLI-tunable; defaults are sized for a
+//! single-core CI run.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::{fmt_energy, fmt_time, print_table};
+use crate::baselines;
+use crate::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
+use crate::data::{audio_stream_spec, image_stream_spec, standard_datasets};
+use crate::device::Device;
+use crate::model::manifest::default_artifacts_dir;
+use crate::runtime::Engine;
+use crate::taskgraph::TaskGraph;
+use crate::trainer::{self, GraphWeights};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+
+fn engine() -> Result<Engine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return Err(anyhow!(
+            "artifacts not built — run `make artifacts` first (dir: {})",
+            dir.display()
+        ));
+    }
+    Engine::load(&dir)
+}
+
+fn cfg_from_args(args: &Args, device: Device) -> pipeline::PrepareConfig {
+    pipeline::PrepareConfig {
+        steps_individual: args.usize("steps-ind", 80),
+        steps_retrain: args.usize("steps-re", 100),
+        lr: args.f64("lr", 0.05) as f32,
+        branch_points: args.usize("bp", 3),
+        max_graphs: args.usize("max-graphs", 200),
+        device,
+        ..Default::default()
+    }
+}
+
+// ----------------------------------------------------------------- fig12
+
+/// Fig. 12: mean inference accuracy of all five systems per dataset.
+/// Vanilla/Antler accuracies come from real training; NWV/NWS/YONO apply
+/// their packing transforms to the Vanilla weights and re-evaluate.
+pub fn fig12_accuracy(args: &Args) -> Result<()> {
+    let eng = engine()?;
+    let n_datasets = args.usize("datasets", 9);
+    let samples = args.usize("samples", 400);
+    let mut rows = Vec::new();
+    for ds_spec in standard_datasets().into_iter().take(n_datasets) {
+        let arch = eng.manifest().arch(ds_spec.arch)?.clone();
+        let ds = ds_spec.generate(&arch.input, samples);
+        let cfg = cfg_from_args(args, Device::msp430());
+        let prep = pipeline::prepare(&eng, ds_spec.arch, &ds, &cfg)?;
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+
+        // in-memory baselines: pack the Vanilla weights, re-evaluate
+        let mut rng = Pcg32::seed(ds_spec.seed ^ 0xFACE);
+        let ram_budget = (arch.total_params(2) * 4 * 13) / 10; // 1.3 nets
+        let packs = [
+            ("NWV", baselines::nwv_pack(&prep.task_params, ram_budget, 256, &mut rng)),
+            ("NWS", baselines::nws_pack(&prep.task_params, ram_budget, 0.07, 256, &mut rng)),
+            ("YONO", baselines::yono_pack(&prep.task_params, 8, 256, &mut rng)),
+        ];
+        let mut packed_acc = HashMap::new();
+        for (name, pack) in &packs {
+            let mut accs = Vec::new();
+            for t in 0..ds.n_tasks() {
+                let (xt, yt) = {
+                    let (_, test) = ds.split();
+                    ds.gather(&test, t)
+                };
+                accs.push(trainer::evaluate(&eng, &arch, 2, &pack.params[t], &xt, &yt)?);
+            }
+            packed_acc.insert(*name, mean(&accs));
+        }
+        rows.push(vec![
+            ds_spec.name.to_string(),
+            format!("{:.1}%", mean(&prep.vanilla_acc) * 100.0),
+            format!("{:.1}%", mean(&prep.antler_acc) * 100.0),
+            format!("{:.1}%", packed_acc["NWV"] * 100.0),
+            format!("{:.1}%", packed_acc["NWS"] * 100.0),
+            format!("{:.1}%", packed_acc["YONO"] * 100.0),
+        ]);
+    }
+    println!("Fig 12: mean task accuracy per system");
+    print_table(&["dataset", "Vanilla", "Antler", "NWV", "NWS", "YONO"], &rows);
+    Ok(())
+}
+
+// ------------------------------------------------- deployment shared prep
+
+pub struct DeploymentBundle {
+    pub prep: pipeline::Prepared,
+    pub data: crate::data::deployment::DeploymentData,
+    pub device: Device,
+}
+
+thread_local! {
+    static DEPLOY_CACHE: RefCell<HashMap<String, Rc<DeploymentBundle>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Prepare (and cache per-process) one §7 deployment.
+pub fn deployment_bundle(which: &str, args: &Args) -> Result<(Rc<DeploymentBundle>, Engine)> {
+    let eng = engine()?;
+    let key = format!(
+        "{which}-{}-{}",
+        args.usize("steps-ind", 80),
+        args.usize("steps-re", 100)
+    );
+    if let Some(b) = DEPLOY_CACHE.with(|c| c.borrow().get(&key).cloned()) {
+        return Ok((b, eng));
+    }
+    let (spec, device) = match which {
+        "audio" => (audio_stream_spec(), Device::msp430()),
+        "image" => (image_stream_spec(), Device::stm32h747()),
+        other => return Err(anyhow!("unknown deployment {other}")),
+    };
+    let data = spec.generate(args.usize("samples", 600));
+    let cfg = cfg_from_args(args, device.clone());
+    let prep = pipeline::prepare(&eng, spec.arch, &data, &cfg)?;
+    let bundle = Rc::new(DeploymentBundle { prep, data, device });
+    DEPLOY_CACHE.with(|c| c.borrow_mut().insert(key, Rc::clone(&bundle)));
+    Ok((bundle, eng))
+}
+
+// ----------------------------------------------------------------- fig14
+
+/// Fig. 14: the selected multitask inference graphs for both deployments.
+pub fn fig14_deployment_graphs(args: &Args) -> Result<()> {
+    for which in ["audio", "image"] {
+        let (b, _eng) = deployment_bundle(which, args)?;
+        let g = &b.prep.graph;
+        println!("\nFig 14 ({which}): bounds {:?}, order {:?}", g.bounds, b.prep.order);
+        for (s, p) in g.partitions.iter().enumerate() {
+            let layers = g.segment_layers(&b.prep.arch, s);
+            println!(
+                "  segment {s} (layers {:?}): groups {:?}",
+                layers,
+                p.groups()
+            );
+        }
+        println!(
+            "  blocks={} size={:.0}KB (vanilla {:.0}KB)",
+            g.n_blocks(),
+            g.model_bytes(&b.prep.arch, &b.prep.ncls) as f64 / 1024.0,
+            b.prep
+                .ncls
+                .iter()
+                .map(|&c| b.prep.arch.total_params(c) * 4)
+                .sum::<usize>() as f64
+                / 1024.0
+        );
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- fig15
+
+/// Fig. 15: per-frame time and energy for Vanilla vs Antler, Antler-PC
+/// (presence precedence) and Antler-CC (presence conditional, live
+/// skipping), on the real serving loop.
+pub fn fig15_deployment_cost(args: &Args) -> Result<()> {
+    let frames_n = args.usize("frames", 40);
+    for which in ["audio", "image"] {
+        let (b, eng) = deployment_bundle(which, args)?;
+        let prep = &b.prep;
+        let n = prep.ncls.len();
+        let presence = 0usize;
+
+        // orders for the three Antler variants
+        let order_free = prep.order.clone();
+        let prec: Vec<(usize, usize)> =
+            (1..n).map(|t| (presence, t)).collect();
+        let order_pc = pipeline::deployment_order(prep, &b.device, prec.clone(), vec![])?;
+        let cond: Vec<(usize, usize, f64)> = (1..n)
+            .map(|t| (presence, t, b.data.spec.presence_prob))
+            .collect();
+        let order_cc = pipeline::deployment_order(prep, &b.device, vec![], cond)?;
+
+        let frames: Vec<(u64, crate::model::Tensor)> = (0..frames_n)
+            .map(|i| (i as u64, b.data.x.slice_batch(i % b.data.len(), 1)))
+            .collect();
+
+        let mut rows = Vec::new();
+        let variants: Vec<(&str, TaskGraph, Vec<usize>, Vec<(usize, usize)>)> = vec![
+            (
+                "Vanilla",
+                TaskGraph::disjoint(n, prep.graph.bounds.clone()),
+                (0..n).collect(),
+                vec![],
+            ),
+            ("Antler", prep.graph.clone(), order_free, vec![]),
+            ("Antler-PC", prep.graph.clone(), order_pc, vec![]),
+            (
+                "Antler-CC",
+                prep.graph.clone(),
+                order_cc,
+                (1..n).map(|t| (presence, t)).collect(),
+            ),
+        ];
+        for (name, graph, order, conditional) in variants {
+            let store = if name == "Vanilla" {
+                GraphWeights::from_task_params(&graph, &prep.arch, &prep.task_params)
+            } else {
+                prep.store.clone()
+            };
+            let mut ex = BlockExecutor::new(
+                &eng,
+                b.device.clone(),
+                prep.arch.clone(),
+                graph,
+                prep.ncls.clone(),
+                store,
+            );
+            ex.warmup()?;
+            let plan = ServePlan { order: order.clone(), conditional };
+            let report = serve(&mut ex, &plan, frames.clone(), 64, None)?;
+            rows.push(vec![
+                name.to_string(),
+                fmt_time(report.sim_time_per_frame_s),
+                fmt_energy(report.sim_energy_per_frame_j),
+                format!("{:.1}", report.throughput_fps),
+                format!("{:.1}ms", report.latency_p50_ms),
+                format!("{}", report.tasks_skipped),
+            ]);
+        }
+        println!("\nFig 15 ({which}, {}): per-frame cost over {frames_n} frames", b.device.name);
+        print_table(
+            &["system", "sim-time", "sim-energy", "host-fps", "host-p50", "skipped"],
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- fig16
+
+/// Fig. 16: per-task accuracy, Vanilla vs Antler, both deployments.
+pub fn fig16_deployment_accuracy(args: &Args) -> Result<()> {
+    for which in ["audio", "image"] {
+        let (b, _eng) = deployment_bundle(which, args)?;
+        println!("\nFig 16 ({which}): per-task accuracy");
+        let rows: Vec<Vec<String>> = (0..b.prep.ncls.len())
+            .map(|t| {
+                vec![
+                    b.data.spec.tasks[t].name.to_string(),
+                    format!("{}", b.prep.ncls[t]),
+                    format!("{:.1}%", b.prep.vanilla_acc[t] * 100.0),
+                    format!("{:.1}%", b.prep.antler_acc[t] * 100.0),
+                    format!(
+                        "{:+.1}%",
+                        (b.prep.antler_acc[t] - b.prep.vanilla_acc[t]) * 100.0
+                    ),
+                ]
+            })
+            .collect();
+        print_table(&["task", "classes", "Vanilla", "Antler", "delta"], &rows);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- table5
+
+/// Table 5: deployment memory usage, Vanilla vs Antler.
+pub fn table5_deployment_memory(args: &Args) -> Result<()> {
+    let mut rows = Vec::new();
+    for which in ["audio", "image"] {
+        let (b, _eng) = deployment_bundle(which, args)?;
+        let vanilla: usize = b
+            .prep
+            .ncls
+            .iter()
+            .map(|&c| b.prep.arch.total_params(c) * 4)
+            .sum();
+        let antler = b.prep.graph.model_bytes(&b.prep.arch, &b.prep.ncls);
+        rows.push(vec![
+            which.to_string(),
+            format!("{:.0}KB", vanilla as f64 / 1024.0),
+            format!("{:.0}KB", antler as f64 / 1024.0),
+            format!("{:.2}x", vanilla as f64 / antler as f64),
+        ]);
+    }
+    println!("Table 5: deployment memory usage");
+    print_table(&["deployment", "Vanilla", "Antler", "reduction"], &rows);
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Benchmark harness + the drivers that regenerate every table and
+//! figure of the paper's evaluation (§6–§7). `antler bench <id>` runs a
+//! driver; the `cargo bench` targets call the same drivers plus wall-time
+//! micro-benchmarks of the hot paths.
+
+pub mod figures_sim;
+pub mod figures_train;
+pub mod harness;
+
+pub use harness::{bench_fn, BenchResult};
+
+use crate::util::cli::Args;
+
+/// Dispatch a bench/figure driver by id. Returns false for unknown ids.
+pub fn run_driver(id: &str, args: &Args) -> anyhow::Result<bool> {
+    match id {
+        "fig3" => figures_sim::fig3_tradeoff(args)?,
+        "fig7" => figures_sim::fig7_branch_points(args)?,
+        "fig8" => figures_sim::fig8_budget_tradeoff(args)?,
+        "table3" => figures_sim::table3_ga(args)?,
+        "fig9" => figures_sim::fig9_time(args)?,
+        "fig10" => figures_sim::fig10_energy(args)?,
+        "fig11" => figures_sim::fig11_breakdown(args)?,
+        "table4" => figures_sim::table4_memory(args)?,
+        "fig12" => figures_train::fig12_accuracy(args)?,
+        "fig14" => figures_train::fig14_deployment_graphs(args)?,
+        "fig15" => figures_train::fig15_deployment_cost(args)?,
+        "fig16" => figures_train::fig16_deployment_accuracy(args)?,
+        "table5" => figures_train::table5_deployment_memory(args)?,
+        "all-sim" => {
+            for id in ["fig3", "fig7", "fig8", "table3", "fig9", "fig10", "fig11", "table4"] {
+                println!("\n################ {id} ################");
+                run_driver(id, args)?;
+            }
+        }
+        "all" => {
+            for id in [
+                "fig3", "fig7", "fig8", "table3", "fig9", "fig10", "fig11",
+                "table4", "fig12", "fig14", "fig15", "fig16", "table5",
+            ] {
+                println!("\n################ {id} ################");
+                run_driver(id, args)?;
+            }
+        }
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+/// Simple fixed-width table printer used by all drivers.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// Pretty time: µs/ms/s with 3 significant digits.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// Pretty energy: µJ/mJ/J.
+pub fn fmt_energy(j: f64) -> String {
+    if j < 1e-3 {
+        format!("{:.1}uJ", j * 1e6)
+    } else if j < 1.0 {
+        format!("{:.2}mJ", j * 1e3)
+    } else {
+        format!("{:.2}J", j)
+    }
+}

@@ -1,0 +1,260 @@
+//! The live block executor: the same §2.3 state machine as
+//! `memory::ExecSim`, but actually running the AOT layer artifacts via
+//! PJRT. `ExecSim` plans each task's segment actions (cached / execute /
+//! load+execute) and accounts simulated device time+energy; this executor
+//! obeys the plan, reusing cached branch-point activations so shared
+//! blocks genuinely execute once per sample — the runtime and the cost
+//! model cannot drift apart.
+
+use anyhow::{anyhow, Result};
+
+use crate::device::{Cost, Device};
+use crate::memory::{ExecSim, SegmentAction};
+use crate::model::{ArchSpec, Tensor};
+use crate::runtime::Engine;
+use crate::taskgraph::TaskGraph;
+use crate::trainer::GraphWeights;
+
+pub struct BlockExecutor<'a> {
+    pub engine: &'a Engine,
+    pub arch: ArchSpec,
+    pub graph: TaskGraph,
+    pub ncls: Vec<usize>,
+    pub store: GraphWeights,
+    sim: OwnedSim,
+    /// Cached output activation per segment: (sample, group, tensor).
+    act: Vec<Option<(u64, usize, Tensor)>>,
+    /// PJRT layer executions actually performed (hot-path perf counter).
+    pub layer_execs: u64,
+    /// Layer executions skipped thanks to activation caching.
+    pub layer_skips: u64,
+}
+
+/// ExecSim borrows device/arch/graph; to keep the executor self-contained
+/// we own those and rebuild the sim with unsafe-free cloning instead.
+struct OwnedSim {
+    device: Device,
+    resident: Vec<Option<usize>>,
+    act_cache: Vec<Option<(u64, usize)>>,
+}
+
+impl<'a> BlockExecutor<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        device: Device,
+        arch: ArchSpec,
+        graph: TaskGraph,
+        ncls: Vec<usize>,
+        store: GraphWeights,
+    ) -> BlockExecutor<'a> {
+        let nseg = graph.n_segments();
+        BlockExecutor {
+            engine,
+            arch,
+            graph,
+            ncls,
+            store,
+            sim: OwnedSim {
+                device,
+                resident: vec![None; nseg],
+                act_cache: vec![None; nseg],
+            },
+            act: vec![None; nseg],
+            layer_execs: 0,
+            layer_skips: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        let nseg = self.graph.n_segments();
+        self.sim.resident = vec![None; nseg];
+        self.sim.act_cache = vec![None; nseg];
+        self.act = vec![None; nseg];
+    }
+
+    /// Pre-compile every layer artifact this graph needs (startup).
+    pub fn warmup(&self) -> Result<usize> {
+        let mut n = 0;
+        for l in 0..self.arch.n_layers() {
+            let is_logits = self.arch.layers[l].cfg.get("dout") == Some(&0);
+            if is_logits {
+                let mut seen = std::collections::BTreeSet::new();
+                for &c in &self.ncls {
+                    if seen.insert(c) {
+                        let name = self
+                            .engine
+                            .manifest()
+                            .layer_artifact(&self.arch.name, l, Some(c), 1);
+                        self.engine.executable(&name)?;
+                        n += 1;
+                    }
+                }
+            } else {
+                let name =
+                    self.engine.manifest().layer_artifact(&self.arch.name, l, None, 1);
+                self.engine.executable(&name)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    fn plan(&mut self, sample: u64, task: usize) -> (Vec<SegmentAction>, Cost) {
+        let mut sim =
+            ExecSim::new(&self.sim.device, &self.arch, &self.graph, &self.ncls);
+        sim.restore(self.sim.resident.clone(), self.sim.act_cache.clone());
+        let (plan, cost) = sim.plan_and_cost(sample, task);
+        let (r, a) = sim.snapshot();
+        self.sim.resident = r;
+        self.sim.act_cache = a;
+        (plan, cost)
+    }
+
+    /// Execute `task` on a batch-1 `input` sample. Returns (predicted
+    /// class, simulated device cost).
+    pub fn run_task(
+        &mut self,
+        sample: u64,
+        task: usize,
+        input: &Tensor,
+    ) -> Result<(usize, Cost)> {
+        assert_eq!(input.shape[0], 1, "serving path is batch-1");
+        let (plan, cost) = self.plan(sample, task);
+        let mut x: Option<Tensor> = None;
+        for (s, action) in plan.iter().enumerate() {
+            let group = self.graph.group_of(s, task);
+            match action {
+                SegmentAction::CachedActivation => {
+                    let cached = self.act[s]
+                        .as_ref()
+                        .filter(|(sm, g, _)| *sm == sample && *g == group)
+                        .ok_or_else(|| anyhow!("plan says cached but buffer empty"))?;
+                    self.layer_skips +=
+                        self.graph.segment_layers(&self.arch, s).len() as u64;
+                    x = Some(cached.2.clone());
+                }
+                SegmentAction::Execute | SegmentAction::LoadAndExecute => {
+                    let mut cur = match x {
+                        Some(t) => t,
+                        None => input.clone(),
+                    };
+                    let weights = &self.store.blocks[s][group];
+                    let mut wi = 0;
+                    for l in self.graph.segment_layers(&self.arch, s) {
+                        let is_logits =
+                            self.arch.layers[l].cfg.get("dout") == Some(&0);
+                        let ncls = is_logits.then_some(self.ncls[task]);
+                        cur = self.engine.run_layer(
+                            &self.arch.name,
+                            l,
+                            ncls,
+                            &cur,
+                            &weights[wi],
+                            &weights[wi + 1],
+                        )?;
+                        wi += 2;
+                        self.layer_execs += 1;
+                    }
+                    self.act[s] = Some((sample, group, cur.clone()));
+                    x = Some(cur);
+                }
+            }
+        }
+        let logits = x.ok_or_else(|| anyhow!("no segments executed"))?;
+        let pred = logits
+            .data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok((pred, cost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::default_artifacts_dir;
+    use crate::taskgraph::Partition;
+    use crate::util::rng::Pcg32;
+
+    fn setup(engine: &Engine) -> BlockExecutor<'_> {
+        let arch = engine.manifest().arch("cnn5").unwrap().clone();
+        let graph = TaskGraph::new(
+            3,
+            vec![1, 3, 4],
+            vec![
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 1]),
+                Partition(vec![0, 1, 2]),
+                Partition::singletons(3),
+            ],
+        )
+        .unwrap();
+        let ncls = vec![2, 2, 2];
+        let mut rng = Pcg32::seed(11);
+        let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+        BlockExecutor::new(engine, Device::msp430(), arch, graph, ncls, store)
+    }
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Engine::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn shared_prefix_executes_once_per_sample() {
+        let Some(eng) = engine() else { return };
+        let mut ex = setup(&eng);
+        let x = Tensor::full(vec![1, 16, 16, 1], 0.3);
+        let (_, c0) = ex.run_task(0, 0, &x).unwrap();
+        let execs_after_first = ex.layer_execs;
+        assert_eq!(execs_after_first, 5); // all five layers
+        let (_, c1) = ex.run_task(0, 1, &x).unwrap();
+        // task 1 shares segments 0,1 (layers 0,1,2) -> only 2 more layers
+        assert_eq!(ex.layer_execs, execs_after_first + 2);
+        assert_eq!(ex.layer_skips, 3);
+        assert!(c1.time() < c0.time());
+    }
+
+    #[test]
+    fn matches_whole_network_inference() {
+        // blockwise execution must equal running the task's full param
+        // list through the batch eval artifact
+        let Some(eng) = engine() else { return };
+        let mut ex = setup(&eng);
+        let mut rng = Pcg32::seed(13);
+        let data: Vec<f32> = (0..256).map(|_| rng.gauss()).collect();
+        let x = Tensor::new(vec![1, 16, 16, 1], data);
+        let (pred, _) = ex.run_task(0, 2, &x).unwrap();
+        // reference: assemble params, batch-64 eval on a padded batch
+        let params = ex.store.assemble(&ex.graph, &ex.arch, 2);
+        let mut big = vec![0.0f32; 64 * 256];
+        big[..256].copy_from_slice(&x.data);
+        let xb = Tensor::new(vec![64, 16, 16, 1], big);
+        let acc_pred = {
+            let mut args = vec![crate::runtime::Arg::F32(&xb)];
+            for p in &params {
+                args.push(crate::runtime::Arg::F32(p));
+            }
+            let out = eng.run("eval_cnn5_c2", &args).unwrap();
+            let row = &out[0].data[0..2];
+            (row[1] > row[0]) as usize
+        };
+        assert_eq!(pred, acc_pred);
+    }
+
+    #[test]
+    fn new_sample_recomputes() {
+        let Some(eng) = engine() else { return };
+        let mut ex = setup(&eng);
+        let x = Tensor::full(vec![1, 16, 16, 1], 0.3);
+        ex.run_task(0, 0, &x).unwrap();
+        let execs = ex.layer_execs;
+        ex.run_task(1, 0, &x).unwrap();
+        assert_eq!(ex.layer_execs, execs + 5); // full path again
+    }
+}

@@ -1,0 +1,313 @@
+//! The offline preparation pipeline (§5.3's "application development
+//! tool", in rust): individually train task networks → profile affinity
+//! at the branch points → enumerate + select the task graph → multitask
+//! retrain the graph → solve the execution order → hand back a
+//! ready-to-serve executor state.
+
+use anyhow::Result;
+
+use crate::affinity::{affinity_from_profiles, representation_profile, AffinityTensor};
+use crate::device::Device;
+use crate::memory::cost_matrix;
+use crate::model::{ArchSpec, Tensor};
+use crate::ordering::{solve_held_karp, OrderingProblem};
+use crate::runtime::Engine;
+use crate::taskgraph::select::{score_graph, select_tradeoff, GraphScore};
+use crate::taskgraph::{enumerate, TaskGraph};
+use crate::trainer::{self, GraphWeights};
+use crate::util::rng::Pcg32;
+
+/// Anything that can feed the pipeline: the dataset analogs (binary
+/// one-vs-rest tasks) or the §7 deployment streams (multi-class tasks).
+pub trait TaskSource {
+    fn n_tasks(&self) -> usize;
+    fn ncls(&self, task: usize) -> usize;
+    /// A training batch of TRAIN_BATCH samples for `task`.
+    fn train_batch(&self, task: usize, rng: &mut Pcg32) -> (Tensor, Vec<i32>);
+    /// The full test set for `task`.
+    fn test_set(&self, task: usize) -> (Tensor, Vec<i32>);
+    /// `k` unlabeled samples for affinity profiling.
+    fn profile_samples(&self, k: usize) -> Tensor;
+}
+
+impl TaskSource for crate::data::Dataset {
+    fn n_tasks(&self) -> usize {
+        self.spec.n_classes
+    }
+    fn ncls(&self, _task: usize) -> usize {
+        2
+    }
+    fn train_batch(&self, task: usize, rng: &mut Pcg32) -> (Tensor, Vec<i32>) {
+        let (train, _) = self.split();
+        self.balanced_batch(task, &train, trainer::TRAIN_BATCH, rng)
+    }
+    fn test_set(&self, task: usize) -> (Tensor, Vec<i32>) {
+        let (_, test) = self.split();
+        self.gather(&test, task)
+    }
+    fn profile_samples(&self, k: usize) -> Tensor {
+        self.x.slice_batch(0, k.min(self.len()))
+    }
+}
+
+impl TaskSource for crate::data::deployment::DeploymentData {
+    fn n_tasks(&self) -> usize {
+        self.spec.n_tasks()
+    }
+    fn ncls(&self, task: usize) -> usize {
+        self.spec.tasks[task].ncls
+    }
+    fn train_batch(&self, task: usize, rng: &mut Pcg32) -> (Tensor, Vec<i32>) {
+        let (train, _) = self.split();
+        self.batch(task, &train, trainer::TRAIN_BATCH, rng)
+    }
+    fn test_set(&self, task: usize) -> (Tensor, Vec<i32>) {
+        let (_, test) = self.split();
+        self.gather(task, &test)
+    }
+    fn profile_samples(&self, k: usize) -> Tensor {
+        self.x.slice_batch(0, k.min(self.len()))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PrepareConfig {
+    /// SGD steps for each individually trained network.
+    pub steps_individual: usize,
+    /// SGD steps for the multitask retraining of the selected graph.
+    pub steps_retrain: usize,
+    pub lr: f32,
+    /// Branch points D (Table: BP = 3 by default, §5.3).
+    pub branch_points: usize,
+    /// Profiling samples K for affinity.
+    pub profile_k: usize,
+    /// Cap on enumerated graphs (exhaustive ≤ this, else clustered).
+    pub max_graphs: usize,
+    pub seed: u64,
+    pub device: Device,
+}
+
+impl Default for PrepareConfig {
+    fn default() -> PrepareConfig {
+        PrepareConfig {
+            steps_individual: 150,
+            steps_retrain: 200,
+            lr: 0.05,
+            branch_points: 3,
+            profile_k: 24,
+            max_graphs: 600,
+            seed: 0xA1,
+            device: Device::msp430(),
+        }
+    }
+}
+
+/// Everything the serving side needs, plus the intermediate artifacts the
+/// benchmarks report on.
+pub struct Prepared {
+    pub arch: ArchSpec,
+    pub ncls: Vec<usize>,
+    pub affinity: AffinityTensor,
+    pub scores: Vec<GraphScore>,
+    pub selected: usize,
+    pub graph: TaskGraph,
+    pub order: Vec<usize>,
+    pub store: GraphWeights,
+    /// Individually trained per-task parameter lists (Vanilla baseline).
+    pub task_params: Vec<Vec<Tensor>>,
+    /// Per-task accuracy of the Vanilla nets.
+    pub vanilla_acc: Vec<f64>,
+    /// Per-task accuracy of the retrained task graph.
+    pub antler_acc: Vec<f64>,
+}
+
+/// Run the full §5.3 pipeline.
+pub fn prepare<S: TaskSource>(
+    engine: &Engine,
+    arch_name: &str,
+    source: &S,
+    cfg: &PrepareConfig,
+) -> Result<Prepared> {
+    let arch = engine.manifest().arch(arch_name)?.clone();
+    let n = source.n_tasks();
+    let ncls: Vec<usize> = (0..n).map(|t| source.ncls(t)).collect();
+    let mut rng = Pcg32::seed(cfg.seed);
+
+    // 1. individual training (also the Vanilla baseline)
+    let mut task_params = Vec::with_capacity(n);
+    let mut vanilla_acc = Vec::with_capacity(n);
+    for t in 0..n {
+        let (params, _losses) = trainer::train_individual(
+            engine,
+            &arch,
+            ncls[t],
+            cfg.steps_individual,
+            cfg.lr,
+            &mut rng,
+            |r| source.train_batch(t, r),
+        )?;
+        let (xt, yt) = source.test_set(t);
+        vanilla_acc.push(trainer::evaluate(engine, &arch, ncls[t], &params, &xt, &yt)?);
+        task_params.push(params);
+    }
+
+    // 2. affinity profiling at the branch points
+    let bounds = TaskGraph::default_bounds(arch.n_layers(), cfg.branch_points);
+    let affinity = profile_affinity(engine, &arch, &bounds, &task_params, source, cfg)?;
+
+    // 3. enumerate + score + select
+    let graphs = if n <= 6 {
+        enumerate::enumerate_all(n, &bounds, Some(cfg.max_graphs))
+    } else {
+        enumerate::clustered(&affinity, &bounds, cfg.max_graphs)
+    };
+    let scores: Vec<GraphScore> = graphs
+        .iter()
+        .map(|g| score_graph(g, &affinity, &arch, &ncls, &cfg.device))
+        .collect();
+    let selected = select_tradeoff(&scores);
+    let graph = scores[selected].graph.clone();
+
+    // 4. multitask retraining of the selected graph, seeded from the
+    //    individually trained nets
+    let mut store = GraphWeights::from_task_params(&graph, &arch, &task_params);
+    let _losses = trainer::train_graph(
+        engine,
+        &arch,
+        &graph,
+        &ncls,
+        &mut store,
+        cfg.steps_retrain,
+        cfg.lr * 0.5,
+        &mut rng,
+        |task, r| source.train_batch(task, r),
+    )?;
+    let mut antler_acc = Vec::with_capacity(n);
+    for t in 0..n {
+        let params = store.assemble(&graph, &arch, t);
+        let (xt, yt) = source.test_set(t);
+        antler_acc.push(trainer::evaluate(engine, &arch, ncls[t], &params, &xt, &yt)?);
+    }
+
+    // 5. optimal order for the selected graph
+    let order = scores[selected].order.clone();
+
+    Ok(Prepared {
+        arch,
+        ncls,
+        affinity,
+        scores,
+        selected,
+        graph,
+        order,
+        store,
+        task_params,
+        vanilla_acc,
+        antler_acc,
+    })
+}
+
+/// §3.1 profiling: run each task's trained network over K samples up to
+/// the last branch point, capture activations at every branch point, and
+/// assemble the affinity tensor.
+pub fn profile_affinity<S: TaskSource>(
+    engine: &Engine,
+    arch: &ArchSpec,
+    bounds: &[usize],
+    task_params: &[Vec<Tensor>],
+    source: &S,
+    cfg: &PrepareConfig,
+) -> Result<AffinityTensor> {
+    let k = cfg.profile_k;
+    let x0 = source.profile_samples(k);
+    // layer artifacts are lowered at batch 32; pad K up to 32
+    let batch = 32usize;
+    let x0 = if x0.shape[0] < batch {
+        let pad = x0.slice_batch(0, batch - x0.shape[0]);
+        Tensor::concat_batch(&[&x0, &pad])
+    } else {
+        x0.slice_batch(0, batch)
+    };
+    let last = *bounds.last().unwrap();
+    let mut profiles: Vec<Vec<Vec<f64>>> = Vec::with_capacity(task_params.len());
+    for params in task_params {
+        let mut x = x0.clone();
+        let mut per_bp = Vec::with_capacity(bounds.len());
+        for l in 0..last {
+            x = engine.run_layer(
+                &arch.name,
+                l,
+                None,
+                &x,
+                &params[2 * l],
+                &params[2 * l + 1],
+            )?;
+            if bounds.contains(&(l + 1)) {
+                per_bp.push(representation_profile(&x.slice_batch(0, k.min(batch))));
+            }
+        }
+        profiles.push(per_bp);
+    }
+    Ok(affinity_from_profiles(&profiles))
+}
+
+/// Build an ordering problem for a prepared deployment with §7's
+/// constraints (presence precedence / conditional).
+pub fn deployment_order(
+    prepared: &Prepared,
+    device: &Device,
+    precedence: Vec<(usize, usize)>,
+    conditional: Vec<(usize, usize, f64)>,
+) -> Result<Vec<usize>> {
+    let c = cost_matrix(device, &prepared.arch, &prepared.graph, &prepared.ncls, false);
+    let p = OrderingProblem::from_matrix(c)
+        .with_precedence(precedence)
+        .with_conditional(conditional);
+    Ok(solve_held_karp(&p)
+        .map(|s| s.order)
+        .unwrap_or_else(|| (0..prepared.ncls.len()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset_by_name;
+    use crate::model::manifest::default_artifacts_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Engine::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn pipeline_end_to_end_on_imu_tasks() {
+        let Some(eng) = engine() else { return };
+        let ds = dataset_by_name("hhar-s").unwrap().generate(&[128], 360);
+        let cfg = PrepareConfig {
+            steps_individual: 40,
+            steps_retrain: 60,
+            max_graphs: 150,
+            ..Default::default()
+        };
+        let prep = prepare(&eng, "dnn4", &ds, &cfg).unwrap();
+        assert_eq!(prep.ncls, vec![2; 6]);
+        assert!(!prep.scores.is_empty());
+        assert!(prep.selected < prep.scores.len());
+        // orders are permutations
+        let mut o = prep.order.clone();
+        o.sort_unstable();
+        assert_eq!(o, (0..6).collect::<Vec<_>>());
+        // accuracy sanity: both systems beat chance on average
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&prep.vanilla_acc) > 0.6, "{:?}", prep.vanilla_acc);
+        assert!(mean(&prep.antler_acc) > 0.6, "{:?}", prep.antler_acc);
+        // the selected graph must actually share something
+        assert!(prep.graph.model_bytes(&prep.arch, &prep.ncls)
+            <= 6 * prep.arch.total_params(2) * 4);
+        // affinity is a D x 6 x 6 tensor
+        assert_eq!(prep.affinity.n, 6);
+        assert_eq!(prep.affinity.d, prep.graph.d());
+    }
+}

@@ -1,0 +1,256 @@
+//! §7 deployment analogs: multi-factor sensor streams where EVERY task
+//! labels the SAME sample (five audio tasks, four image tasks), including
+//! the presence factor that drives the precedence/conditional experiments.
+
+use crate::model::Tensor;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct TaskDef {
+    pub name: &'static str,
+    pub ncls: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct DeploymentSpec {
+    pub name: &'static str,
+    pub arch: &'static str,
+    pub input_shape: Vec<usize>,
+    pub tasks: Vec<TaskDef>,
+    /// Index of the presence-detection task (τ0 in both deployments).
+    pub presence_task: usize,
+    /// P(presence) in the stream — the paper's conditional experiments
+    /// execute the remaining tasks at 80%.
+    pub presence_prob: f64,
+    pub seed: u64,
+}
+
+/// §7.1: five audio tasks on the 16-bit system.
+pub fn audio_stream_spec() -> DeploymentSpec {
+    DeploymentSpec {
+        name: "audio",
+        arch: "cnn5",
+        input_shape: vec![16, 16, 1],
+        tasks: vec![
+            TaskDef { name: "presence", ncls: 2 },
+            TaskDef { name: "command", ncls: 11 },
+            TaskDef { name: "speaker", ncls: 5 },
+            TaskDef { name: "emotion", ncls: 3 },
+            TaskDef { name: "distance", ncls: 2 },
+        ],
+        presence_task: 0,
+        presence_prob: 0.8,
+        seed: 710,
+    }
+}
+
+/// §7.2: four image tasks on the 32-bit system.
+pub fn image_stream_spec() -> DeploymentSpec {
+    DeploymentSpec {
+        name: "image",
+        arch: "cnn7",
+        input_shape: vec![32, 32, 1],
+        tasks: vec![
+            TaskDef { name: "presence", ncls: 2 },
+            TaskDef { name: "mask", ncls: 2 },
+            TaskDef { name: "identity", ncls: 5 },
+            TaskDef { name: "emotion", ncls: 3 },
+        ],
+        presence_task: 0,
+        presence_prob: 0.8,
+        seed: 720,
+    }
+}
+
+/// Materialized stream: every sample labelled by every task.
+#[derive(Debug, Clone)]
+pub struct DeploymentData {
+    pub spec: DeploymentSpec,
+    pub x: Tensor,
+    /// labels[task][sample]
+    pub labels: Vec<Vec<usize>>,
+}
+
+impl DeploymentSpec {
+    pub fn ncls_vec(&self) -> Vec<usize> {
+        self.tasks.iter().map(|t| t.ncls).collect()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Generate `n` stream samples. Each non-presence factor contributes
+    /// an additive class pattern scaled by presence; tasks therefore
+    /// share latent structure (→ affinity) and absence makes dependent
+    /// labels trivial/skippable (→ conditional experiments).
+    pub fn generate(&self, n: usize) -> DeploymentData {
+        let mut rng = Pcg32::seed(self.seed);
+        let feat: usize = self.input_shape.iter().product();
+        // per task, per class, a smooth pattern on a shared coarse basis
+        let shared: Vec<f32> = (0..feat).map(|_| rng.gauss() * 0.5).collect();
+        let patterns: Vec<Vec<Vec<f32>>> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                (0..t.ncls)
+                    .map(|_| {
+                        (0..feat)
+                            .map(|i| rng.gauss() + 0.6 * shared[i])
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut data = Vec::with_capacity(n * feat);
+        let mut labels = vec![Vec::with_capacity(n); self.n_tasks()];
+        for _ in 0..n {
+            let present = rng.chance(self.presence_prob);
+            let mut sample = vec![0.0f32; feat];
+            for (t, task) in self.tasks.iter().enumerate() {
+                let label = if t == self.presence_task {
+                    present as usize
+                } else if present {
+                    rng.below(task.ncls)
+                } else {
+                    0 // undefined when nothing is present
+                };
+                labels[t].push(label);
+                if present {
+                    let scale = if t == self.presence_task { 1.4 } else { 1.0 };
+                    for i in 0..feat {
+                        sample[i] += scale * patterns[t][label][i]
+                            / (self.n_tasks() as f32).sqrt() * 1.6;
+                    }
+                }
+            }
+            for i in 0..feat {
+                data.push(sample[i] + rng.gauss() * 0.4);
+            }
+        }
+        let mut shape = vec![n];
+        shape.extend_from_slice(&self.input_shape);
+        DeploymentData { spec: self.clone(), x: Tensor::new(shape, data), labels }
+    }
+}
+
+impl DeploymentData {
+    pub fn len(&self) -> usize {
+        self.labels[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn split(&self) -> (Vec<usize>, Vec<usize>) {
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for i in 0..self.len() {
+            if i % 5 == 4 {
+                test.push(i);
+            } else {
+                train.push(i);
+            }
+        }
+        (train, test)
+    }
+
+    /// Gather a batch for one task: (x, labels) with class-stratified
+    /// sampling so every class appears.
+    pub fn batch(
+        &self,
+        task: usize,
+        pool: &[usize],
+        bsz: usize,
+        rng: &mut Pcg32,
+    ) -> (Tensor, Vec<i32>) {
+        let ncls = self.spec.tasks[task].ncls;
+        let by_class: Vec<Vec<usize>> = (0..ncls)
+            .map(|c| {
+                pool.iter()
+                    .copied()
+                    .filter(|&i| self.labels[task][i] == c)
+                    .collect()
+            })
+            .collect();
+        let mut idx = Vec::with_capacity(bsz);
+        let mut c = 0usize;
+        while idx.len() < bsz {
+            let class = &by_class[c % ncls];
+            c += 1;
+            if class.is_empty() {
+                continue;
+            }
+            idx.push(*rng.choose(class));
+        }
+        self.gather(task, &idx)
+    }
+
+    pub fn gather(&self, task: usize, idx: &[usize]) -> (Tensor, Vec<i32>) {
+        let feat: usize = self.spec.input_shape.iter().product();
+        let mut data = Vec::with_capacity(idx.len() * feat);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            data.extend_from_slice(&self.x.data[i * feat..(i + 1) * feat]);
+            y.push(self.labels[task][i] as i32);
+        }
+        let mut shape = vec![idx.len()];
+        shape.extend_from_slice(&self.spec.input_shape);
+        (Tensor::new(shape, data), y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_section7() {
+        let a = audio_stream_spec();
+        assert_eq!(a.ncls_vec(), vec![2, 11, 5, 3, 2]);
+        assert_eq!(a.arch, "cnn5");
+        let i = image_stream_spec();
+        assert_eq!(i.ncls_vec(), vec![2, 2, 5, 3]);
+        assert_eq!(i.arch, "cnn7");
+    }
+
+    #[test]
+    fn presence_rate_near_spec() {
+        let d = audio_stream_spec().generate(1000);
+        let present =
+            d.labels[0].iter().filter(|&&l| l == 1).count() as f64 / 1000.0;
+        assert!((present - 0.8).abs() < 0.05, "{present}");
+    }
+
+    #[test]
+    fn absent_samples_have_default_labels() {
+        let d = audio_stream_spec().generate(500);
+        for i in 0..d.len() {
+            if d.labels[0][i] == 0 {
+                for t in 1..d.spec.n_tasks() {
+                    assert_eq!(d.labels[t][i], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_covers_all_classes() {
+        let d = audio_stream_spec().generate(2000);
+        let (train, _) = d.split();
+        let mut rng = Pcg32::seed(5);
+        let (x, y) = d.batch(1, &train, 33, &mut rng); // command, 11 classes
+        assert_eq!(x.shape[0], 33);
+        let seen: std::collections::HashSet<i32> = y.into_iter().collect();
+        assert!(seen.len() >= 8, "classes seen: {:?}", seen);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = image_stream_spec().generate(64);
+        let b = image_stream_spec().generate(64);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+    }
+}

@@ -1,0 +1,19 @@
+//! Synthetic dataset generators — the stand-ins for the nine public
+//! datasets of Table 2 and the §7 deployment recordings (no network or
+//! human-subject data exists in this environment; see DESIGN.md,
+//! Substitutions).
+//!
+//! Design requirements the generators satisfy so Antler's claims are
+//! exercised for real:
+//!  * tasks over one domain share low-level latent structure (class
+//!    templates are mixtures over a *shared* basis), so early-layer
+//!    representations correlate across tasks → meaningful affinity;
+//!  * classes are separable by the small common architectures at the
+//!    paper's ~90% accuracy level, tunable via the noise scale;
+//!  * everything is deterministic from a seed.
+
+pub mod deployment;
+pub mod synthetic;
+
+pub use deployment::{audio_stream_spec, image_stream_spec, DeploymentSpec};
+pub use synthetic::{dataset_by_name, standard_datasets, Dataset, DatasetSpec};

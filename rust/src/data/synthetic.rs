@@ -1,0 +1,285 @@
+//! Dataset-analog generators for the nine Table 2 datasets. One-vs-rest
+//! binary tasks ("each task on a dataset corresponds to recognizing one
+//! class"), 10 tasks per dataset except the HHAR analog's 6.
+
+use crate::model::Tensor;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Which common architecture this dataset's tasks use (Table 2).
+    pub arch: &'static str,
+    pub modality: &'static str, // image | audio | imu
+    pub n_classes: usize,
+    pub seed: u64,
+    /// Class-pattern vs noise mix (higher = easier).
+    pub signal: f32,
+}
+
+/// The nine dataset analogs (paper Table 2: 10 tasks each, HHAR 6).
+pub fn standard_datasets() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec { name: "mnist-s", arch: "cnn5", modality: "image", n_classes: 10, seed: 101, signal: 2.2 },
+        DatasetSpec { name: "fmnist-s", arch: "cnn5", modality: "image", n_classes: 10, seed: 102, signal: 1.8 },
+        DatasetSpec { name: "cifar10-s", arch: "cnn7", modality: "image", n_classes: 10, seed: 103, signal: 1.4 },
+        DatasetSpec { name: "svhn-s", arch: "cnn7", modality: "image", n_classes: 10, seed: 104, signal: 1.5 },
+        DatasetSpec { name: "gtsrb-s", arch: "cnn5", modality: "image", n_classes: 10, seed: 105, signal: 2.0 },
+        DatasetSpec { name: "gsc-s", arch: "cnn5", modality: "audio", n_classes: 10, seed: 106, signal: 1.7 },
+        DatasetSpec { name: "esc-s", arch: "cnn5", modality: "audio", n_classes: 10, seed: 107, signal: 1.5 },
+        DatasetSpec { name: "us8k-s", arch: "cnn5", modality: "audio", n_classes: 10, seed: 108, signal: 1.6 },
+        DatasetSpec { name: "hhar-s", arch: "dnn4", modality: "imu", n_classes: 6, seed: 109, signal: 2.0 },
+    ]
+}
+
+pub fn dataset_by_name(name: &str) -> Option<DatasetSpec> {
+    standard_datasets().into_iter().find(|d| d.name == name)
+}
+
+/// A materialized dataset: samples + integer class labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    /// [N, input...] samples.
+    pub x: Tensor,
+    pub labels: Vec<usize>,
+    pub input_shape: Vec<usize>,
+}
+
+impl DatasetSpec {
+    /// Generate `n` samples with the architecture's input shape.
+    pub fn generate(&self, input_shape: &[usize], n: usize) -> Dataset {
+        let mut rng = Pcg32::seed(self.seed);
+        let feat: usize = input_shape.iter().product();
+        // shared basis: 4 latent patterns every class template mixes —
+        // this is what creates cross-task affinity at early layers
+        let basis: Vec<Vec<f32>> = (0..4)
+            .map(|_| smooth_pattern(input_shape, &mut rng))
+            .collect();
+        let templates: Vec<Vec<f32>> = (0..self.n_classes)
+            .map(|_| {
+                let own = smooth_pattern(input_shape, &mut rng);
+                let mix: Vec<f32> = (0..4).map(|_| rng.f32() * 0.8).collect();
+                (0..feat)
+                    .map(|i| {
+                        own[i] * 0.9
+                            + basis.iter().zip(&mix).map(|(b, m)| b[i] * m).sum::<f32>()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut data = Vec::with_capacity(n * feat);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % self.n_classes; // balanced
+            labels.push(c);
+            for f in 0..feat {
+                data.push(self.signal * templates[c][f] + rng.gauss() * 0.8);
+            }
+        }
+        let mut shape = vec![n];
+        shape.extend_from_slice(input_shape);
+        Dataset {
+            spec: self.clone(),
+            x: Tensor::new(shape, data),
+            labels,
+            input_shape: input_shape.to_vec(),
+        }
+    }
+}
+
+/// Low-frequency random pattern: a coarse 4-grid (per leading spatial dim)
+/// bilinearly upsampled — learnable by 3x3 convs, unlike white noise.
+fn smooth_pattern(shape: &[usize], rng: &mut Pcg32) -> Vec<f32> {
+    match shape.len() {
+        1 => {
+            let n = shape[0];
+            let coarse: Vec<f32> = (0..8).map(|_| rng.gauss()).collect();
+            (0..n)
+                .map(|i| {
+                    let pos = i as f32 / n as f32 * 7.0;
+                    let lo = pos.floor() as usize;
+                    let t = pos - lo as f32;
+                    coarse[lo] * (1.0 - t) + coarse[(lo + 1).min(7)] * t
+                })
+                .collect()
+        }
+        3 => {
+            let (h, w, c) = (shape[0], shape[1], shape[2]);
+            let g = 4usize;
+            let coarse: Vec<f32> = (0..g * g * c).map(|_| rng.gauss()).collect();
+            let mut out = Vec::with_capacity(h * w * c);
+            for y in 0..h {
+                for x in 0..w {
+                    for ch in 0..c {
+                        let fy = y as f32 / h as f32 * (g - 1) as f32;
+                        let fx = x as f32 / w as f32 * (g - 1) as f32;
+                        let (y0, x0) = (fy.floor() as usize, fx.floor() as usize);
+                        let (ty, tx) = (fy - y0 as f32, fx - x0 as f32);
+                        let at = |yy: usize, xx: usize| {
+                            coarse[(yy.min(g - 1) * g + xx.min(g - 1)) * c + ch]
+                        };
+                        let v = at(y0, x0) * (1.0 - ty) * (1.0 - tx)
+                            + at(y0, x0 + 1) * (1.0 - ty) * tx
+                            + at(y0 + 1, x0) * ty * (1.0 - tx)
+                            + at(y0 + 1, x0 + 1) * ty * tx;
+                        out.push(v);
+                    }
+                }
+            }
+            out
+        }
+        other => panic!("unsupported input rank {other}"),
+    }
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.spec.n_classes
+    }
+
+    /// Binary one-vs-rest label for `task` on sample `i`.
+    pub fn binary_label(&self, task: usize, i: usize) -> i32 {
+        (self.labels[i] == task) as i32
+    }
+
+    /// Train/test split indices (80/20, deterministic round-robin).
+    pub fn split(&self) -> (Vec<usize>, Vec<usize>) {
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for i in 0..self.len() {
+            if i % 5 == 4 {
+                test.push(i);
+            } else {
+                train.push(i);
+            }
+        }
+        (train, test)
+    }
+
+    /// Draw a class-balanced binary batch for `task`: half positives,
+    /// half negatives (one-vs-rest with 10 classes is 90/10 imbalanced
+    /// otherwise). Returns (x, y).
+    pub fn balanced_batch(
+        &self,
+        task: usize,
+        pool: &[usize],
+        bsz: usize,
+        rng: &mut Pcg32,
+    ) -> (Tensor, Vec<i32>) {
+        let pos: Vec<usize> =
+            pool.iter().copied().filter(|&i| self.labels[i] == task).collect();
+        let neg: Vec<usize> =
+            pool.iter().copied().filter(|&i| self.labels[i] != task).collect();
+        assert!(!pos.is_empty() && !neg.is_empty(), "degenerate task {task}");
+        let mut idx = Vec::with_capacity(bsz);
+        for k in 0..bsz {
+            if k % 2 == 0 {
+                idx.push(*rng.choose(&pos));
+            } else {
+                idx.push(*rng.choose(&neg));
+            }
+        }
+        self.gather(&idx, task)
+    }
+
+    /// Gather samples by index into a batch tensor with binary labels.
+    pub fn gather(&self, idx: &[usize], task: usize) -> (Tensor, Vec<i32>) {
+        let feat: usize = self.input_shape.iter().product();
+        let mut data = Vec::with_capacity(idx.len() * feat);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            data.extend_from_slice(&self.x.data[i * feat..(i + 1) * feat]);
+            y.push(self.binary_label(task, i));
+        }
+        let mut shape = vec![idx.len()];
+        shape.extend_from_slice(&self.input_shape);
+        (Tensor::new(shape, data), y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_datasets_with_paper_task_counts() {
+        let all = standard_datasets();
+        assert_eq!(all.len(), 9);
+        assert_eq!(all.iter().filter(|d| d.n_classes == 10).count(), 8);
+        assert_eq!(dataset_by_name("hhar-s").unwrap().n_classes, 6);
+        assert!(dataset_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_balanced() {
+        let spec = dataset_by_name("mnist-s").unwrap();
+        let a = spec.generate(&[16, 16, 1], 100);
+        let b = spec.generate(&[16, 16, 1], 100);
+        assert_eq!(a.x, b.x);
+        for c in 0..10 {
+            assert_eq!(a.labels.iter().filter(|&&l| l == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn classes_are_separated_in_input_space() {
+        // within-class distance must be smaller than between-class
+        let spec = dataset_by_name("mnist-s").unwrap();
+        let d = spec.generate(&[16, 16, 1], 200);
+        let feat = 256;
+        let row = |i: usize| &d.x.data[i * feat..(i + 1) * feat];
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let (mut within, mut wn, mut between, mut bn) = (0.0, 0, 0.0, 0);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let dd = dist(row(i), row(j));
+                if d.labels[i] == d.labels[j] {
+                    within += dd;
+                    wn += 1;
+                } else {
+                    between += dd;
+                    bn += 1;
+                }
+            }
+        }
+        assert!((within / wn as f32) < (between / bn as f32));
+    }
+
+    #[test]
+    fn split_is_80_20() {
+        let spec = dataset_by_name("gsc-s").unwrap();
+        let d = spec.generate(&[16, 16, 1], 500);
+        let (train, test) = d.split();
+        assert_eq!(train.len(), 400);
+        assert_eq!(test.len(), 100);
+    }
+
+    #[test]
+    fn balanced_batch_is_half_positive() {
+        let spec = dataset_by_name("esc-s").unwrap();
+        let d = spec.generate(&[16, 16, 1], 300);
+        let (train, _) = d.split();
+        let mut rng = Pcg32::seed(7);
+        let (x, y) = d.balanced_batch(3, &train, 32, &mut rng);
+        assert_eq!(x.shape, vec![32, 16, 16, 1]);
+        assert_eq!(y.iter().filter(|&&l| l == 1).count(), 16);
+    }
+
+    #[test]
+    fn imu_dataset_is_1d() {
+        let spec = dataset_by_name("hhar-s").unwrap();
+        let d = spec.generate(&[128], 60);
+        assert_eq!(d.x.shape, vec![60, 128]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Device cost models — the substitute for the paper's physical testbeds
+//! (Table 1): a 16-bit TI MSP430FR5994 custom board with external SPI FRAM
+//! and a 32-bit ARM Cortex-M7 STM32H747 with on-package eFlash. Every time
+//! and energy number reported by the benchmark harness is derived from
+//! these models: t = MACs·cpm/f + bytes/bandwidth, E = P·t + e_byte·bytes.
+//!
+//! Calibration targets (from the paper):
+//!  * per-MAC latency ratio MSP430:STM32 ≈ 100× (§6.3 "execution time on
+//!    STM32H747 is 100X faster")
+//!  * weight reloading overhead is a visible fraction of total time on the
+//!    16-bit system and "almost invisible" on the 32-bit one (Fig. 11)
+
+/// Where weights live when not resident in RAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExtMemory {
+    /// External SPI FRAM (the custom MSP430 board's 2 MB expansion).
+    SpiFram,
+    /// On-package embedded flash (STM32H747, 2 MB).
+    EFlash,
+}
+
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    pub bits: u32,
+    pub freq_hz: f64,
+    /// Average CPU cycles per multiply-accumulate (word-width dependent).
+    pub cycles_per_mac: f64,
+    /// Average CPU cycles per non-MAC activation element op (pool, relu...).
+    pub cycles_per_elem: f64,
+    /// Active power draw in watts while computing.
+    pub active_power_w: f64,
+    /// Usable RAM for weights + activation buffers, bytes.
+    pub ram_bytes: usize,
+    pub ext: ExtMemory,
+    /// External memory read bandwidth, bytes/second.
+    pub ext_read_bps: f64,
+    /// Extra energy per byte read from external memory, joules.
+    pub ext_energy_per_byte: f64,
+}
+
+impl Device {
+    /// 16-bit TI MSP430FR5994 custom board (Table 1):
+    /// 16 MHz, 8 KB SRAM (+ FRAM used as main memory for the network
+    /// image), 512 KB + 2 MB external FRAM, 118 µA/MHz @ 3.0 V.
+    pub fn msp430() -> Device {
+        Device {
+            name: "msp430fr5994",
+            bits: 16,
+            freq_hz: 16e6,
+            // no pipelined MAC; 16-bit HW multiplier + load/store ≈ 4 cyc
+            cycles_per_mac: 4.0,
+            cycles_per_elem: 2.0,
+            // 118 uA/MHz * 16 MHz * 3.0 V
+            active_power_w: 118e-6 * 16.0 * 3.0,
+            // static allocation budget for the common-arch image + buffers
+            ram_bytes: 256 * 1024,
+            ext: ExtMemory::SpiFram,
+            // QSPI FRAM @ 40 MHz -> ~4 MB/s sustained. Calibration note:
+            // Fig. 11a shows weight reload as a visible *minority* share
+            // of Vanilla's total on the 16-bit board (were loads dominant,
+            // the zero-load in-memory baselines would have beaten Antler,
+            // contradicting Fig. 9) — 4 MB/s puts reload at ~40% of a
+            // Vanilla round, matching the paper's breakdown shape.
+            ext_read_bps: 4.0e6,
+            ext_energy_per_byte: 15e-9,
+        }
+    }
+
+    /// 32-bit STM32H747 (Cortex-M7 core, Table 1): 480 MHz, 1 MB SRAM,
+    /// 2 MB eFlash, ~100 mA @ 3.3 V.
+    pub fn stm32h747() -> Device {
+        Device {
+            name: "stm32h747",
+            bits: 32,
+            freq_hz: 480e6,
+            // dual-issue M7 with SIMD MAC, but f32 path ≈ 1.2 cyc/MAC
+            cycles_per_mac: 1.2,
+            cycles_per_elem: 0.6,
+            active_power_w: 0.100 * 3.3,
+            ram_bytes: 1024 * 1024,
+            ext: ExtMemory::EFlash,
+            // memory-mapped (XIP) 64-bit eFlash behind the ART cache:
+            // effectively GB/s-class — the paper's Fig. 11 shows the
+            // 32-bit board's reload overhead as "almost invisible"
+            ext_read_bps: 2.0e9,
+            ext_energy_per_byte: 1e-9,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name {
+            "msp430" | "msp430fr5994" | "16bit" => Some(Device::msp430()),
+            "stm32" | "stm32h747" | "32bit" => Some(Device::stm32h747()),
+            _ => None,
+        }
+    }
+
+    /// Seconds to execute `macs` multiply-accumulates plus `elems`
+    /// element-wise ops in RAM.
+    pub fn exec_time(&self, macs: u64, elems: u64) -> f64 {
+        (macs as f64 * self.cycles_per_mac + elems as f64 * self.cycles_per_elem)
+            / self.freq_hz
+    }
+
+    /// Seconds to load `bytes` from external memory into RAM.
+    pub fn load_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.ext_read_bps
+    }
+
+    /// Joules for a period of `secs` of active computation.
+    pub fn exec_energy(&self, secs: f64) -> f64 {
+        self.active_power_w * secs
+    }
+
+    /// Joules for loading `bytes` from external memory (bus active power
+    /// plus per-byte access energy).
+    pub fn load_energy(&self, bytes: usize) -> f64 {
+        self.active_power_w * self.load_time(bytes)
+            + self.ext_energy_per_byte * bytes as f64
+    }
+}
+
+/// A cost sample split into the two components Fig. 11 reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cost {
+    pub exec_s: f64,
+    pub load_s: f64,
+    pub exec_j: f64,
+    pub load_j: f64,
+}
+
+impl Cost {
+    pub fn time(&self) -> f64 {
+        self.exec_s + self.load_s
+    }
+    pub fn energy(&self) -> f64 {
+        self.exec_j + self.load_j
+    }
+    pub fn add(&mut self, other: Cost) {
+        self.exec_s += other.exec_s;
+        self.load_s += other.load_s;
+        self.exec_j += other.exec_j;
+        self.load_j += other.load_j;
+    }
+    pub fn scaled(&self, k: f64) -> Cost {
+        Cost {
+            exec_s: self.exec_s * k,
+            load_s: self.load_s * k,
+            exec_j: self.exec_j * k,
+            load_j: self.load_j * k,
+        }
+    }
+}
+
+impl Device {
+    /// Cost of executing a compute region (MACs + element ops) in RAM.
+    pub fn exec_cost(&self, macs: u64, elems: u64) -> Cost {
+        let t = self.exec_time(macs, elems);
+        Cost { exec_s: t, exec_j: self.exec_energy(t), ..Default::default() }
+    }
+
+    /// Cost of loading weight bytes from external memory.
+    pub fn load_cost(&self, bytes: usize) -> Cost {
+        Cost {
+            load_s: self.load_time(bytes),
+            load_j: self.load_energy(bytes),
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_mac_ratio_near_100x() {
+        let a = Device::msp430();
+        let b = Device::stm32h747();
+        let ratio = (a.cycles_per_mac / a.freq_hz) / (b.cycles_per_mac / b.freq_hz);
+        assert!((50.0..200.0).contains(&ratio), "ratio {}", ratio);
+    }
+
+    #[test]
+    fn switching_overhead_visible_only_on_16bit() {
+        // Load a ~70 KB network image vs executing ~500 K MACs — the paper's
+        // Fig. 11 shape: reload cost is a significant share on MSP430 and
+        // negligible on STM32.
+        let bytes = 70 * 1024;
+        let macs = 500_000;
+        for (dev, visible) in
+            [(Device::msp430(), true), (Device::stm32h747(), false)]
+        {
+            let load = dev.load_time(bytes);
+            let exec = dev.exec_time(macs, 0);
+            let share = load / (load + exec);
+            if visible {
+                assert!(share > 0.08, "{} share {}", dev.name, share);
+            } else {
+                assert!(share < 0.05, "{} share {}", dev.name, share);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_positive_and_monotone() {
+        let d = Device::msp430();
+        assert!(d.load_energy(1000) > 0.0);
+        assert!(d.load_energy(2000) > d.load_energy(1000));
+        assert!(d.exec_energy(0.5) > d.exec_energy(0.1));
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let d = Device::stm32h747();
+        let mut c = d.exec_cost(1_000_000, 1000);
+        c.add(d.load_cost(4096));
+        assert!(c.time() > 0.0 && c.energy() > 0.0);
+        assert!((c.time() - (c.exec_s + c.load_s)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        assert_eq!(Device::by_name("16bit").unwrap().name, "msp430fr5994");
+        assert_eq!(Device::by_name("stm32").unwrap().name, "stm32h747");
+        assert!(Device::by_name("esp32").is_none());
+    }
+}

@@ -1,0 +1,7 @@
+//! Minimal concurrency substrate (the offline mirror has no tokio):
+//! a fixed thread pool with a shared injector queue, plus a `parallel_map`
+//! helper used by the enumeration sweeps and the serving coordinator.
+
+pub mod pool;
+
+pub use pool::{parallel_map, ThreadPool};

@@ -1,0 +1,173 @@
+//! Fixed-size thread pool over a `Mutex<VecDeque>` injector queue with a
+//! condvar. Deliberately simple: the coordinator's workloads are coarse
+//! (one job = one inference or one graph scored), so queue contention is
+//! negligible; see EXPERIMENTS.md §Perf for measurements.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("antler-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Number of jobs waiting (not including running ones).
+    pub fn backlog(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+/// Map `f` over `items` on `threads` threads, preserving order.
+/// Falls back to a sequential loop for a single thread (avoids overhead).
+pub fn parallel_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let f = Arc::new(f);
+    let n = items.len();
+    let slots: Arc<Mutex<Vec<Option<R>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let pool = ThreadPool::new(threads.min(n));
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    for (i, item) in items.into_iter().enumerate() {
+        let f = Arc::clone(&f);
+        let slots = Arc::clone(&slots);
+        let tx = tx.clone();
+        pool.execute(move || {
+            let r = f(item);
+            slots.lock().unwrap()[i] = Some(r);
+            let _ = tx.send(());
+        });
+    }
+    drop(tx);
+    for _ in 0..n {
+        rx.recv().expect("worker panicked");
+    }
+    Arc::try_unwrap(slots)
+        .ok()
+        .expect("slots still shared")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("missing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v: Vec<usize> = (0..64).collect();
+        let out = parallel_map(4, v, |x| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread() {
+        let out = parallel_map(1, vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

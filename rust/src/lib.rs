@@ -1,0 +1,25 @@
+//! Antler: efficient multitask inference for resource-constrained systems.
+//!
+//! Reproduction of Luo et al., "Efficient Multitask Learning on
+//! Resource-Constrained Systems" (2023). Three-layer architecture:
+//!   L1: Pallas kernels (build-time python, `python/compile/kernels/`)
+//!   L2: JAX per-layer model blocks, AOT-lowered to HLO text
+//!   L3: this crate — the Antler coordinator: task graphs, affinity,
+//!       ordering, memory-hierarchy simulation, serving runtime.
+
+pub mod affinity;
+pub mod bench;
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod exec;
+pub mod memory;
+pub mod model;
+pub mod ordering;
+pub mod runtime;
+pub mod taskgraph;
+pub mod tsplib;
+pub mod testkit;
+pub mod trainer;
+pub mod util;

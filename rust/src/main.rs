@@ -1,0 +1,219 @@
+//! `antler` — CLI for the Antler multitask-inference coordinator.
+//!
+//!   antler bench <fig3|fig7|fig8|table3|fig9|fig10|fig11|table4|
+//!                 fig12|fig14|fig15|fig16|table5|all-sim|all> [opts]
+//!   antler order  --nodes N [--precedence a>b,c>d] [--cyclic]
+//!   antler graph  --dataset <name> [--bp 3] [--max-graphs 400]
+//!   antler serve  --deployment <audio|image> [--frames 100]
+//!                 [--conditional] [--steps-ind N] [--steps-re N]
+//!   antler check  # verify artifacts + runtime round-trip
+
+use anyhow::{anyhow, Result};
+
+use antler::bench;
+use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
+use antler::data;
+use antler::device::Device;
+use antler::model::manifest::default_artifacts_dir;
+use antler::ordering::{solve_held_karp, OrderingProblem};
+use antler::runtime::Engine;
+use antler::taskgraph::select::select_tradeoff;
+use antler::testkit::gen;
+use antler::util::cli::Args;
+use antler::util::rng::Pcg32;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("bench") => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all-sim");
+            if !bench::run_driver(id, args)? {
+                return Err(anyhow!("unknown bench id {id:?}"));
+            }
+            Ok(())
+        }
+        Some("order") => cmd_order(args),
+        Some("graph") => cmd_graph(args),
+        Some("serve") => cmd_serve(args),
+        Some("check") => cmd_check(),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "antler — efficient multitask inference for resource-constrained systems\n\
+         \n\
+         subcommands:\n\
+         \x20 bench <id>      regenerate a paper table/figure (fig3..table5, all-sim, all)\n\
+         \x20 order           solve a random task-ordering instance exactly\n\
+         \x20 graph           enumerate+select a task graph for a dataset analog\n\
+         \x20 serve           run the live serving loop on a deployment stream\n\
+         \x20 check           verify artifacts + PJRT round-trip"
+    );
+}
+
+fn cmd_order(args: &Args) -> Result<()> {
+    let n = args.usize("nodes", 8);
+    let seed = args.u64("seed", 1);
+    let mut rng = Pcg32::seed(seed);
+    let flat = gen::sym_cost_matrix(&mut rng, n, 100.0);
+    let cost: Vec<Vec<f64>> =
+        (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+    let mut p = OrderingProblem::from_matrix(cost);
+    if args.flag("cyclic") {
+        p = p.cyclic();
+    }
+    if let Some(spec) = args.get("precedence") {
+        let prec: Vec<(usize, usize)> = spec
+            .split(',')
+            .filter_map(|pair| {
+                let (a, b) = pair.split_once('>')?;
+                Some((a.parse().ok()?, b.parse().ok()?))
+            })
+            .collect();
+        p = p.with_precedence(prec);
+    }
+    let s = solve_held_karp(&p).ok_or_else(|| anyhow!("infeasible instance"))?;
+    println!("order: {:?}\ncost:  {:.2}", s.order, s.cost);
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> Result<()> {
+    let name = args.get_or("dataset", "mnist-s");
+    let ds = data::dataset_by_name(name)
+        .ok_or_else(|| anyhow!("unknown dataset {name:?}"))?;
+    let archs = bench::figures_sim::arch_specs();
+    let arch = &archs[ds.arch];
+    let device = Device::by_name(args.get_or("device", "msp430"))
+        .ok_or_else(|| anyhow!("unknown device"))?;
+    let (_aff, scores) = bench::figures_sim::dataset_scores(
+        ds.name,
+        arch,
+        ds.n_classes,
+        ds.seed,
+        &device,
+        args.usize("bp", 3),
+        args.usize("max-graphs", 400),
+    );
+    let sel = select_tradeoff(&scores);
+    let g = &scores[sel].graph;
+    println!(
+        "dataset {} ({} tasks, arch {}): {} candidates scored",
+        ds.name,
+        ds.n_classes,
+        ds.arch,
+        scores.len()
+    );
+    println!("selected graph: bounds {:?}", g.bounds);
+    for (s, p) in g.partitions.iter().enumerate() {
+        println!("  segment {s}: {:?}", p.groups());
+    }
+    println!(
+        "variety {:.3}, size {:.1}KB, round {} on {}, order {:?}",
+        scores[sel].variety,
+        scores[sel].model_bytes as f64 / 1024.0,
+        bench::fmt_time(scores[sel].exec_time),
+        device.name,
+        scores[sel].order
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let which = args.get_or("deployment", "audio");
+    let (bundle, eng) = bench::figures_train::deployment_bundle(which, args)?;
+    let prep = &bundle.prep;
+    let n = prep.ncls.len();
+    let frames_n = args.usize("frames", 100);
+    let frames: Vec<(u64, antler::model::Tensor)> = (0..frames_n)
+        .map(|i| (i as u64, bundle.data.x.slice_batch(i % bundle.data.len(), 1)))
+        .collect();
+    let conditional = if args.flag("conditional") {
+        (1..n).map(|t| (0usize, t)).collect()
+    } else {
+        vec![]
+    };
+    let mut ex = BlockExecutor::new(
+        &eng,
+        bundle.device.clone(),
+        prep.arch.clone(),
+        prep.graph.clone(),
+        prep.ncls.clone(),
+        prep.store.clone(),
+    );
+    let warmed = ex.warmup()?;
+    println!(
+        "serving {which}: {n} tasks, order {:?}, {warmed} executables warm",
+        prep.order
+    );
+    let plan = ServePlan { order: prep.order.clone(), conditional };
+    let report = serve(&mut ex, &plan, frames, 64, None)?;
+    println!(
+        "frames={} dropped={} wall={:.2}s throughput={:.1} fps",
+        report.frames, report.dropped, report.wall_s, report.throughput_fps
+    );
+    println!(
+        "host latency p50/p95/p99 = {:.2}/{:.2}/{:.2} ms",
+        report.latency_p50_ms, report.latency_p95_ms, report.latency_p99_ms
+    );
+    println!(
+        "simulated device ({}): {}/frame, {}/frame; tasks skipped {}",
+        bundle.device.name,
+        bench::fmt_time(report.sim_time_per_frame_s),
+        bench::fmt_energy(report.sim_energy_per_frame_j),
+        report.tasks_skipped
+    );
+    println!(
+        "layer execs {} / skips {} ({:.0}% compute avoided by sharing)",
+        report.layer_execs,
+        report.layer_skips,
+        report.layer_skips as f64
+            / (report.layer_execs + report.layer_skips).max(1) as f64
+            * 100.0
+    );
+    let _ = pipeline::deployment_order(prep, &bundle.device, vec![], vec![])?;
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let eng = Engine::load(&dir)?;
+    let n = eng.manifest().entries.len();
+    println!("manifest: {} artifacts, {} archs", n, eng.manifest().archs.len());
+    // round-trip one layer per arch
+    for arch in eng.manifest().archs.clone().values() {
+        let mut rng = Pcg32::seed(0);
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&arch.input);
+        let x = antler::model::Tensor::he_init(shape, &mut rng);
+        let ps = arch.layers[0].param_shapes(2);
+        let w = antler::model::Tensor::he_init(ps[0].clone(), &mut rng);
+        let b = antler::model::Tensor::zeros(ps[1].clone());
+        let y = eng.run_layer(&arch.name, 0, None, &x, &w, &b)?;
+        println!("  {}: layer0 {:?} -> {:?} ok", arch.name, x.shape, y.shape);
+    }
+    println!("check OK");
+    Ok(())
+}

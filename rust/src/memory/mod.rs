@@ -1,0 +1,402 @@
+//! Memory-hierarchy execution simulator (§2.3): the block-granular
+//! runtime semantics of Antler on a memory-constrained device.
+//!
+//! RAM is statically allocated as one slot per segment of the common
+//! architecture plus one activation buffer per branch point. Executing a
+//! task walks its root→leaf path: a segment whose *output activation* is
+//! cached for the current sample is skipped entirely; otherwise its weight
+//! block is loaded from external memory unless already resident, then the
+//! segment executes. The same state machine drives both the cost
+//! simulator here (figures 9–11/15) and the real PJRT executor
+//! (`coordinator::executor`), so the cost model and the live system share
+//! their notion of "what work happens".
+
+use crate::device::{Cost, Device};
+use crate::model::ArchSpec;
+use crate::taskgraph::TaskGraph;
+
+/// Runtime residency/cache state for one device+graph instance.
+#[derive(Debug, Clone)]
+pub struct ExecSim<'a> {
+    pub device: &'a Device,
+    pub arch: &'a ArchSpec,
+    pub graph: &'a TaskGraph,
+    pub ncls: &'a [usize],
+    /// Weight block resident in each segment slot: group id of that
+    /// segment's partition, or None when the slot is cold.
+    resident: Vec<Option<usize>>,
+    /// Activation cached at each segment output: (sample id, group id).
+    act_cache: Vec<Option<(u64, usize)>>,
+    /// When true, all weights are RAM-resident (in-memory baselines:
+    /// NWV / YONO) and loads never happen.
+    pub all_resident: bool,
+}
+
+/// What happened for one segment of one task execution — the real
+/// executor consumes this plan to decide which PJRT calls to make.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentAction {
+    /// Output activation cache hit: nothing to do.
+    CachedActivation,
+    /// Weights resident, execute only.
+    Execute,
+    /// Load weights then execute.
+    LoadAndExecute,
+}
+
+impl<'a> ExecSim<'a> {
+    pub fn new(
+        device: &'a Device,
+        arch: &'a ArchSpec,
+        graph: &'a TaskGraph,
+        ncls: &'a [usize],
+    ) -> ExecSim<'a> {
+        assert_eq!(ncls.len(), graph.n_tasks);
+        ExecSim {
+            device,
+            arch,
+            graph,
+            ncls,
+            resident: vec![None; graph.n_segments()],
+            act_cache: vec![None; graph.n_segments()],
+            all_resident: false,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.resident = vec![None; self.graph.n_segments()];
+        self.act_cache = vec![None; self.graph.n_segments()];
+    }
+
+    fn segment_elems(&self, s: usize) -> u64 {
+        self.graph
+            .segment_layers(self.arch, s)
+            .map(|l| self.arch.layers[l].out_elems() as u64)
+            .sum()
+    }
+
+    /// Snapshot of (resident blocks, activation cache) — lets the live
+    /// executor persist state across its own lifetime.
+    pub fn snapshot(&self) -> (Vec<Option<usize>>, Vec<Option<(u64, usize)>>) {
+        (self.resident.clone(), self.act_cache.clone())
+    }
+
+    /// Restore a snapshot taken from an identically-shaped sim.
+    pub fn restore(
+        &mut self,
+        resident: Vec<Option<usize>>,
+        act_cache: Vec<Option<(u64, usize)>>,
+    ) {
+        assert_eq!(resident.len(), self.graph.n_segments());
+        assert_eq!(act_cache.len(), self.graph.n_segments());
+        self.resident = resident;
+        self.act_cache = act_cache;
+    }
+
+    /// Plan + cost in one step (what the live executor consumes).
+    pub fn plan_and_cost(&mut self, sample: u64, task: usize) -> (Vec<SegmentAction>, Cost) {
+        let snap = self.snapshot();
+        let plan = self.plan_task(sample, task);
+        self.restore(snap.0, snap.1);
+        let cost = self.run_task(sample, task);
+        (plan, cost)
+    }
+
+    /// Plan the segment actions for executing `task` on `sample`,
+    /// updating residency/cache state, and return the per-segment actions.
+    pub fn plan_task(&mut self, sample: u64, task: usize) -> Vec<SegmentAction> {
+        let mut plan = Vec::with_capacity(self.graph.n_segments());
+        for s in 0..self.graph.n_segments() {
+            let group = self.graph.group_of(s, task);
+            if self.act_cache[s] == Some((sample, group)) {
+                plan.push(SegmentAction::CachedActivation);
+                continue;
+            }
+            let action = if self.all_resident || self.resident[s] == Some(group) {
+                SegmentAction::Execute
+            } else {
+                SegmentAction::LoadAndExecute
+            };
+            self.resident[s] = Some(group);
+            self.act_cache[s] = Some((sample, group));
+            plan.push(action);
+        }
+        plan
+    }
+
+    /// Cost of executing `task` on `sample` given current state.
+    pub fn run_task(&mut self, sample: u64, task: usize) -> Cost {
+        let plan = self.plan_task(sample, task);
+        let mut cost = Cost::default();
+        for (s, action) in plan.iter().enumerate() {
+            match action {
+                SegmentAction::CachedActivation => {}
+                SegmentAction::Execute => {
+                    cost.add(self.device.exec_cost(
+                        self.graph.segment_macs(self.arch, s),
+                        self.segment_elems(s),
+                    ));
+                }
+                SegmentAction::LoadAndExecute => {
+                    cost.add(self.device.load_cost(self.graph.segment_bytes(
+                        self.arch,
+                        s,
+                        task,
+                        self.ncls,
+                    )));
+                    cost.add(self.device.exec_cost(
+                        self.graph.segment_macs(self.arch, s),
+                        self.segment_elems(s),
+                    ));
+                }
+            }
+        }
+        cost
+    }
+
+    /// Cost of one full round: all tasks, in `order`, on one sample.
+    pub fn run_round(&mut self, sample: u64, order: &[usize]) -> Cost {
+        let mut cost = Cost::default();
+        for &t in order {
+            cost.add(self.run_task(sample, t));
+        }
+        cost
+    }
+
+    /// Steady-state per-round cost: run `rounds` rounds on distinct
+    /// samples (activation caches invalidate across samples, weight
+    /// residency persists) and average, excluding the cold first round.
+    pub fn steady_round_cost(&mut self, order: &[usize], rounds: usize) -> Cost {
+        self.reset();
+        let _cold = self.run_round(0, order);
+        let mut acc = Cost::default();
+        let rounds = rounds.max(1);
+        for r in 1..=rounds {
+            acc.add(self.run_round(r as u64, order));
+        }
+        acc.scaled(1.0 / rounds as f64)
+    }
+}
+
+/// The paper's switching cost matrix (Eq. 3): `c[i][j]` is the extra cost
+/// of running τ_j right after τ_i on the same sample — exactly the
+/// non-shared suffix of τ_j's path (shared prefix is both weight-resident
+/// and activation-cached).
+pub fn cost_matrix(
+    device: &Device,
+    arch: &ArchSpec,
+    graph: &TaskGraph,
+    ncls: &[usize],
+    energy: bool,
+) -> Vec<Vec<f64>> {
+    let n = graph.n_tasks;
+    let mut c = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let prefix = graph.shared_prefix(i, j);
+            let mut cost = Cost::default();
+            for s in prefix..graph.n_segments() {
+                cost.add(device.load_cost(graph.segment_bytes(arch, s, j, ncls)));
+                let elems: u64 = graph
+                    .segment_layers(arch, s)
+                    .map(|l| arch.layers[l].out_elems() as u64)
+                    .sum();
+                cost.add(device.exec_cost(graph.segment_macs(arch, s), elems));
+            }
+            c[i][j] = if energy { cost.energy() } else { cost.time() };
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::partition::Partition;
+
+    const TINY: &str = r#"{
+      "version": 1,
+      "archs": {"cnn5": {"input": [16,16,1], "ncls": [2],
+        "layers": [
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
+          {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
+          {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+          {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}
+        ]}},
+      "entries": []
+    }"#;
+
+    fn arch() -> ArchSpec {
+        crate::model::manifest::Manifest::from_json(
+            std::path::PathBuf::from("/tmp"),
+            &crate::util::json::Json::parse(TINY).unwrap(),
+        )
+        .unwrap()
+        .arch("cnn5")
+        .unwrap()
+        .clone()
+    }
+
+    fn graph3() -> TaskGraph {
+        // tasks 0,1 share two segments; task 2 splits after segment 0
+        TaskGraph::new(
+            3,
+            vec![1, 3, 4],
+            vec![
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 1]),
+                Partition(vec![0, 1, 2]),
+                Partition::singletons(3),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn second_task_skips_shared_prefix() {
+        let dev = Device::msp430();
+        let arch = arch();
+        let g = graph3();
+        let ncls = vec![2; 3];
+        let mut sim = ExecSim::new(&dev, &arch, &g, &ncls);
+        let _ = sim.run_task(0, 0);
+        let plan = sim.plan_task(0, 1);
+        // segments 0,1 shared with task 0 -> cached activations
+        assert_eq!(plan[0], SegmentAction::CachedActivation);
+        assert_eq!(plan[1], SegmentAction::CachedActivation);
+        assert_eq!(plan[2], SegmentAction::LoadAndExecute);
+        assert_eq!(plan[3], SegmentAction::LoadAndExecute);
+    }
+
+    #[test]
+    fn rerunning_same_task_same_sample_is_free() {
+        let dev = Device::msp430();
+        let arch = arch();
+        let g = graph3();
+        let ncls = vec![2; 3];
+        let mut sim = ExecSim::new(&dev, &arch, &g, &ncls);
+        let _ = sim.run_task(7, 2);
+        let again = sim.run_task(7, 2);
+        assert_eq!(again.time(), 0.0);
+    }
+
+    #[test]
+    fn new_sample_invalidates_activations_but_not_weights() {
+        let dev = Device::msp430();
+        let arch = arch();
+        let g = graph3();
+        let ncls = vec![2; 3];
+        let mut sim = ExecSim::new(&dev, &arch, &g, &ncls);
+        let _ = sim.run_task(0, 0);
+        let plan = sim.plan_task(1, 0); // same task, new sample
+        assert!(plan.iter().all(|&a| a == SegmentAction::Execute));
+    }
+
+    #[test]
+    fn all_resident_mode_never_loads() {
+        let dev = Device::stm32h747();
+        let arch = arch();
+        let g = TaskGraph::disjoint(3, vec![1, 3, 4]);
+        let ncls = vec![2; 3];
+        let mut sim = ExecSim::new(&dev, &arch, &g, &ncls);
+        sim.all_resident = true;
+        let c = sim.run_round(0, &[0, 1, 2]);
+        assert_eq!(c.load_s, 0.0);
+        assert!(c.exec_s > 0.0);
+    }
+
+    #[test]
+    fn shared_graph_round_cheaper_than_disjoint() {
+        let dev = Device::msp430();
+        let arch = arch();
+        let ncls = vec![2; 3];
+        let shared = TaskGraph::shared(3, vec![1, 3, 4]);
+        let disjoint = TaskGraph::disjoint(3, vec![1, 3, 4]);
+        let mut s1 = ExecSim::new(&dev, &arch, &shared, &ncls);
+        let mut s2 = ExecSim::new(&dev, &arch, &disjoint, &ncls);
+        let c1 = s1.steady_round_cost(&[0, 1, 2], 4);
+        let c2 = s2.steady_round_cost(&[0, 1, 2], 4);
+        assert!(c1.time() < c2.time());
+        assert!(c1.energy() < c2.energy());
+    }
+
+    #[test]
+    fn cost_matrix_reflects_shared_prefix() {
+        let dev = Device::msp430();
+        let arch = arch();
+        let g = graph3();
+        let ncls = vec![2; 3];
+        let c = cost_matrix(&dev, &arch, &g, &ncls, false);
+        // switching 0->1 (share 2 segments) cheaper than 0->2 (share 1)
+        assert!(c[0][1] < c[0][2], "{} vs {}", c[0][1], c[0][2]);
+        assert_eq!(c[0][0], 0.0);
+        // symmetric here (equal class counts)
+        assert!((c[1][2] - c[2][1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_matrix_matches_simulator_increments() {
+        // c[i][j] must equal the simulator's cost of j right after i
+        let dev = Device::msp430();
+        let arch = arch();
+        let g = graph3();
+        let ncls = vec![2; 3];
+        let c = cost_matrix(&dev, &arch, &g, &ncls, false);
+        for i in 0..3 {
+            for j in 0..3 {
+                if i == j {
+                    continue;
+                }
+                let mut sim = ExecSim::new(&dev, &arch, &g, &ncls);
+                sim.reset();
+                let _ = sim.run_task(0, i);
+                let got = sim.run_task(0, j).time();
+                assert!(
+                    (got - c[i][j]).abs() < 1e-12,
+                    "i={} j={} sim={} matrix={}",
+                    i,
+                    j,
+                    got,
+                    c[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_fully_shared_graph_never_reloads() {
+        let dev = Device::msp430();
+        let arch = arch();
+        let g = TaskGraph::shared(3, vec![1, 3, 4]);
+        let ncls = vec![2; 3];
+        let mut sim = ExecSim::new(&dev, &arch, &g, &ncls);
+        let steady = sim.steady_round_cost(&[0, 1, 2], 3);
+        // only the private heads swap, and each head slot cycles through
+        // all three tasks every round -> head loads remain, but the shared
+        // trunk (everything except the head) is never reloaded
+        let head_bytes = g.segment_bytes(&arch, 3, 0, &ncls);
+        let expect_load = 3.0 * dev.load_time(head_bytes);
+        assert!((steady.load_s - expect_load).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steady_state_disjoint_reloads_everything_but_last() {
+        let dev = Device::msp430();
+        let arch = arch();
+        let g = TaskGraph::disjoint(3, vec![1, 3, 4]);
+        let ncls = vec![2; 3];
+        let mut sim = ExecSim::new(&dev, &arch, &g, &ncls);
+        let steady = sim.steady_round_cost(&[0, 1, 2], 4);
+        // each round all three tasks must reload their whole network
+        // (slots held by the previous task) — the Vanilla pathology
+        let net_bytes: usize =
+            (0..4).map(|s| g.segment_bytes(&arch, s, 0, &ncls)).sum();
+        let expect = 3.0 * dev.load_time(net_bytes);
+        assert!((steady.load_s - expect).abs() < 1e-9,
+                "{} vs {}", steady.load_s, expect);
+    }
+}

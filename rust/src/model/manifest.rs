@@ -1,0 +1,384 @@
+//! `artifacts/manifest.json` — the contract between the python compile
+//! path (L1/L2) and the rust coordinator (L3). Parsed with the in-tree
+//! JSON codec; shapes here drive the weight stores, the cost models, and
+//! the PJRT argument marshalling.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    ConvPool,
+    Dense,
+    Logits,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "conv_pool" => LayerKind::ConvPool,
+            "dense" => LayerKind::Dense,
+            "logits" => LayerKind::Logits,
+            other => bail!("unknown layer kind {other:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    /// Activation shape entering this layer (no batch dim).
+    pub in_shape: Vec<usize>,
+    /// Activation shape leaving this layer (no batch dim).
+    pub out_shape: Vec<usize>,
+    /// Multiply-accumulates per sample (drives the device time model).
+    pub macs_per_sample: u64,
+    /// Raw cfg fields (kh/kw/cin/cout or din/dout). dout==0 on logits means
+    /// "class count chosen per task".
+    pub cfg: BTreeMap<String, usize>,
+}
+
+impl LayerSpec {
+    /// Parameter shapes [w, b] for a given class count.
+    pub fn param_shapes(&self, ncls: usize) -> Vec<Vec<usize>> {
+        match self.kind {
+            LayerKind::ConvPool => vec![
+                vec![
+                    self.cfg["kh"],
+                    self.cfg["kw"],
+                    self.cfg["cin"],
+                    self.cfg["cout"],
+                ],
+                vec![self.cfg["cout"]],
+            ],
+            LayerKind::Dense | LayerKind::Logits => {
+                let dout = if self.cfg["dout"] == 0 { ncls } else { self.cfg["dout"] };
+                vec![vec![self.cfg["din"], dout], vec![dout]]
+            }
+        }
+    }
+
+    /// Parameter count (weights + biases) for a given class count.
+    pub fn param_count(&self, ncls: usize) -> usize {
+        self.param_shapes(ncls)
+            .iter()
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+
+    pub fn param_bytes(&self, ncls: usize) -> usize {
+        self.param_count(ncls) * super::BYTES_PER_WEIGHT
+    }
+
+    /// Output activation element count per sample.
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub input: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
+    /// Class counts the AOT pass lowered train/eval/logits artifacts for.
+    pub ncls_available: Vec<usize>,
+}
+
+impl ArchSpec {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    /// Total parameter count of one network instance.
+    pub fn total_params(&self, ncls: usize) -> usize {
+        self.layers.iter().map(|l| l.param_count(ncls)).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs_per_sample).sum()
+    }
+
+    /// Flat [w0, b0, w1, b1, ...] shape list — must match python
+    /// `model.param_shapes` ordering exactly.
+    pub fn flat_param_shapes(&self, ncls: usize) -> Vec<Vec<usize>> {
+        self.layers
+            .iter()
+            .flat_map(|l| l.param_shapes(ncls))
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub kind: String, // "layer" | "train" | "eval"
+    pub arch: String,
+    pub layer: Option<usize>,
+    pub ncls: Option<usize>,
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub archs: BTreeMap<String, ArchSpec>,
+    pub entries: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(dir.to_path_buf(), &json)
+    }
+
+    pub fn from_json(dir: PathBuf, json: &Json) -> Result<Manifest> {
+        let version = json
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut archs = BTreeMap::new();
+        for (name, spec) in json
+            .get("archs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing archs"))?
+        {
+            archs.insert(name.clone(), parse_arch(name, spec)?);
+        }
+        let mut entries = BTreeMap::new();
+        for e in json
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let a = parse_artifact(e)?;
+            entries.insert(a.name.clone(), a);
+        }
+        Ok(Manifest { dir, archs, entries })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown arch {name:?}"))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Artifact> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))
+    }
+
+    /// Artifact name for a layer executable.
+    pub fn layer_artifact(
+        &self,
+        arch: &str,
+        layer: usize,
+        ncls: Option<usize>,
+        batch: usize,
+    ) -> String {
+        match ncls {
+            Some(c) => format!("layer_{arch}_{layer}_c{c}_b{batch}"),
+            None => format!("layer_{arch}_{layer}_b{batch}"),
+        }
+    }
+
+    pub fn train_artifact(&self, arch: &str, ncls: usize) -> String {
+        format!("train_{arch}_c{ncls}")
+    }
+
+    pub fn eval_artifact(&self, arch: &str, ncls: usize) -> String {
+        format!("eval_{arch}_c{ncls}")
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+fn parse_arch(name: &str, j: &Json) -> Result<ArchSpec> {
+    let input = j
+        .get("input")
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| anyhow!("arch {name}: missing input"))?;
+    let mut layers = Vec::new();
+    for l in j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("arch {name}: missing layers"))?
+    {
+        let kind = LayerKind::parse(
+            l.get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("layer missing kind"))?,
+        )?;
+        let cfg = l
+            .get("cfg")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("layer missing cfg"))?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_usize().unwrap_or(0)))
+            .collect();
+        layers.push(LayerSpec {
+            kind,
+            in_shape: l
+                .get("in")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("layer missing in"))?,
+            out_shape: l
+                .get("out")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("layer missing out"))?,
+            macs_per_sample: l
+                .get("macs_per_sample")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("layer missing macs"))? as u64,
+            cfg,
+        });
+    }
+    let ncls_available = j
+        .get("ncls")
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| anyhow!("arch {name}: missing ncls"))?;
+    Ok(ArchSpec { name: name.to_string(), input, layers, ncls_available })
+}
+
+fn parse_artifact(j: &Json) -> Result<Artifact> {
+    let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact missing {key}"))?
+            .iter()
+            .map(|s| {
+                s.as_usize_vec()
+                    .ok_or_else(|| anyhow!("bad shape in {key}"))
+            })
+            .collect()
+    };
+    Ok(Artifact {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing name"))?
+            .to_string(),
+        kind: j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing kind"))?
+            .to_string(),
+        arch: j
+            .get("arch")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing arch"))?
+            .to_string(),
+        layer: j.get("layer").and_then(Json::as_usize),
+        ncls: j.get("ncls").and_then(|v| v.as_usize()),
+        batch: j
+            .get("batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("artifact missing batch"))?,
+        file: j
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing file"))?
+            .to_string(),
+        inputs: shapes("inputs")?,
+        outputs: shapes("outputs")?,
+    })
+}
+
+/// Default artifacts directory: `$ANTLER_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("ANTLER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> Json {
+        Json::parse(
+            r#"{
+          "version": 1,
+          "archs": {
+            "cnn5": {
+              "input": [16,16,1],
+              "layers": [
+                {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},
+                 "in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+                {"kind":"dense","cfg":{"din":512,"dout":64},
+                 "in":[8,8,8],"out":[64],"macs_per_sample":32768},
+                {"kind":"logits","cfg":{"din":64,"dout":0},
+                 "in":[64],"out":[2],"macs_per_sample":128}
+              ],
+              "ncls": [2,3]
+            }
+          },
+          "entries": [
+            {"name":"layer_cnn5_0_b1","kind":"layer","arch":"cnn5","layer":0,
+             "layer_kind":"conv_pool","ncls":null,"batch":1,
+             "file":"layer_cnn5_0_b1.hlo.txt",
+             "inputs":[[1,16,16,1],[3,3,1,8],[8]],"outputs":[[1,8,8,8]]}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_arch_and_shapes() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest()).unwrap();
+        let a = m.arch("cnn5").unwrap();
+        assert_eq!(a.n_layers(), 3);
+        assert_eq!(a.layers[0].param_shapes(2), vec![vec![3, 3, 1, 8], vec![8]]);
+        // logits layer resolves dout=0 -> ncls
+        assert_eq!(a.layers[2].param_shapes(5), vec![vec![64, 5], vec![5]]);
+        assert_eq!(a.layers[2].param_count(3), 64 * 3 + 3);
+        assert_eq!(a.total_macs(), 18432 + 32768 + 128);
+    }
+
+    #[test]
+    fn artifact_lookup_and_names() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest()).unwrap();
+        assert!(m.entry("layer_cnn5_0_b1").is_ok());
+        assert!(m.entry("nope").is_err());
+        assert_eq!(m.layer_artifact("cnn5", 2, Some(3), 1), "layer_cnn5_2_c3_b1");
+        assert_eq!(m.layer_artifact("cnn5", 0, None, 32), "layer_cnn5_0_b32");
+        assert_eq!(m.train_artifact("cnn5", 2), "train_cnn5_c2");
+    }
+
+    #[test]
+    fn flat_param_shapes_order() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &tiny_manifest()).unwrap();
+        let shapes = m.arch("cnn5").unwrap().flat_param_shapes(2);
+        assert_eq!(shapes.len(), 6);
+        assert_eq!(shapes[0], vec![3, 3, 1, 8]);
+        assert_eq!(shapes[1], vec![8]);
+        assert_eq!(shapes[4], vec![64, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let j = Json::parse(r#"{"version":9,"archs":{},"entries":[]}"#).unwrap();
+        assert!(Manifest::from_json(PathBuf::from("/tmp"), &j).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Model descriptions shared with the python compile path via
+//! `artifacts/manifest.json`: architectures, layer specs, parameter
+//! layouts, and the `Tensor` type that flows through the whole system.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArchSpec, Artifact, LayerKind, LayerSpec, Manifest};
+pub use tensor::Tensor;
+
+/// Bytes per stored weight. The paper's deployments store f32 weights in
+/// external memory (FRAM/flash); quantized baselines override this.
+pub const BYTES_PER_WEIGHT: usize = 4;

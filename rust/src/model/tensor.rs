@@ -1,0 +1,153 @@
+//! Dense f32 tensor with shape metadata — the single value type exchanged
+//! between the data generators, the weight stores, and the PJRT runtime.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// He-style init matching `model.init_params` on the python side.
+    pub fn he_init(shape: Vec<usize>, rng: &mut Pcg32) -> Tensor {
+        if shape.len() < 2 {
+            return Tensor::zeros(shape); // biases start at zero
+        }
+        let fan_in: usize = shape[..shape.len() - 1].iter().product();
+        let scale = (2.0 / fan_in as f32).sqrt();
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.gauss() * scale).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * super::BYTES_PER_WEIGHT
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat view of the first `batch` elements along axis 0.
+    pub fn slice_batch(&self, start: usize, count: usize) -> Tensor {
+        assert!(!self.shape.is_empty());
+        let per: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        Tensor::new(
+            shape,
+            self.data[start * per..(start + count) * per].to_vec(),
+        )
+    }
+
+    /// Concatenate along axis 0 (all trailing dims must match).
+    pub fn concat_batch(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut total = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail);
+            total += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![total];
+        shape.extend_from_slice(tail);
+        Tensor::new(shape, data)
+    }
+
+    /// L2 distance to another tensor (same shape), for test assertions.
+    pub fn l2_dist(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_mismatch() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn he_init_scale() {
+        let mut rng = Pcg32::seed(1);
+        let t = Tensor::he_init(vec![256, 64], &mut rng);
+        let var = t.data.iter().map(|x| x * x).sum::<f32>() / t.len() as f32;
+        let expect = 2.0 / 256.0;
+        assert!((var - expect).abs() < expect * 0.2, "var {}", var);
+    }
+
+    #[test]
+    fn bias_init_zero() {
+        let mut rng = Pcg32::seed(2);
+        let b = Tensor::he_init(vec![8], &mut rng);
+        assert!(b.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let a = t.slice_batch(0, 2);
+        let b = t.slice_batch(2, 2);
+        assert_eq!(a.shape, vec![2, 2]);
+        let back = Tensor::concat_batch(&[&a, &b]);
+        assert_eq!(back, t);
+    }
+}

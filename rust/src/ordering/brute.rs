@@ -1,0 +1,147 @@
+//! Brute-force solver (§4.4): enumerate permutations, discard the ones
+//! violating precedence, keep the best Eq. 7/8 fitness. Backtracking with
+//! prerequisite pruning — fine for the small task counts of
+//! resource-constrained deployments.
+
+use super::{OrderingProblem, Solution};
+
+/// Exhaustive search. Panics above 12 tasks (use Held–Karp or the GA).
+pub fn solve_brute(p: &OrderingProblem) -> Option<Solution> {
+    assert!(p.n <= 12, "brute-force solver capped at 12 tasks");
+    if p.n == 0 {
+        return Some(Solution { order: vec![], cost: 0.0 });
+    }
+    let prereq = p.prereq_masks();
+    let mut best: Option<Solution> = None;
+    let mut order = Vec::with_capacity(p.n);
+    let mut used = 0u32;
+    rec(p, &prereq, &mut order, &mut used, 0.0, &mut best);
+    best
+}
+
+fn rec(
+    p: &OrderingProblem,
+    prereq: &[u32],
+    order: &mut Vec<usize>,
+    used: &mut u32,
+    partial: f64,
+    best: &mut Option<Solution>,
+) {
+    if let Some(b) = best {
+        if partial >= b.cost {
+            return; // admissible prune: costs are non-negative
+        }
+    }
+    if order.len() == p.n {
+        let total = if p.cyclic && p.n > 1 {
+            partial
+                + p.exec_prob(order[0]) * p.cost[order[p.n - 1]][order[0]]
+        } else {
+            partial
+        };
+        if best.as_ref().map_or(true, |b| total < b.cost) {
+            *best = Some(Solution { order: order.clone(), cost: total });
+        }
+        return;
+    }
+    for t in 0..p.n {
+        if *used & (1 << t) != 0 {
+            continue;
+        }
+        if prereq[t] & !*used != 0 {
+            continue; // an unfinished prerequisite
+        }
+        let step = if let Some(&prev) = order.last() {
+            p.exec_prob(t) * p.cost[prev][t]
+        } else {
+            0.0
+        };
+        order.push(t);
+        *used |= 1 << t;
+        rec(p, prereq, order, used, partial + step, best);
+        *used &= !(1 << t);
+        order.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{gen, prop_check};
+
+    #[test]
+    fn finds_optimal_path() {
+        // optimal path 1 -> 0 -> 2 costs 1 + 4 = 5? no: pick obvious chain
+        let p = OrderingProblem::from_matrix(vec![
+            vec![0.0, 1.0, 9.0],
+            vec![1.0, 0.0, 1.0],
+            vec![9.0, 1.0, 0.0],
+        ]);
+        let s = solve_brute(&p).unwrap();
+        assert_eq!(s.cost, 2.0);
+        assert!(s.order == vec![0, 1, 2] || s.order == vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn respects_precedence() {
+        let p = OrderingProblem::from_matrix(vec![
+            vec![0.0, 1.0, 9.0],
+            vec![1.0, 0.0, 1.0],
+            vec![9.0, 1.0, 0.0],
+        ])
+        .with_precedence(vec![(2, 0)]);
+        let s = solve_brute(&p).unwrap();
+        assert!(p.is_valid(&s.order));
+        let pos = |t: usize| s.order.iter().position(|&x| x == t).unwrap();
+        assert!(pos(2) < pos(0));
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let p = OrderingProblem::from_matrix(vec![vec![0.0, 1.0], vec![1.0, 0.0]])
+            .with_precedence(vec![(0, 1), (1, 0)]);
+        assert!(solve_brute(&p).is_none());
+    }
+
+    #[test]
+    fn cyclic_objective_counts_wrap_edge() {
+        let p = OrderingProblem::from_matrix(vec![
+            vec![0.0, 1.0, 1.0],
+            vec![1.0, 0.0, 1.0],
+            vec![1.0, 1.0, 0.0],
+        ])
+        .cyclic();
+        let s = solve_brute(&p).unwrap();
+        assert_eq!(s.cost, 3.0);
+    }
+
+    #[test]
+    fn prop_brute_never_beaten_by_random_valid_order() {
+        prop_check(
+            "brute-optimality",
+            40,
+            |rng| {
+                let n = gen::usize_in(rng, 2, 8);
+                let flat = gen::sym_cost_matrix(rng, n, 50.0);
+                let cost: Vec<Vec<f64>> =
+                    (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+                let perm = gen::permutation(rng, n);
+                (OrderingProblem::from_matrix(cost), perm)
+            },
+            |(p, perm)| {
+                let s = solve_brute(p).unwrap();
+                if !p.is_valid(&s.order) {
+                    return Err("solution invalid".into());
+                }
+                if p.fitness(perm) + 1e-9 < s.cost {
+                    return Err(format!(
+                        "random order {} beats 'optimal' {}",
+                        p.fitness(perm),
+                        s.cost
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,476 @@
+//! Genetic-algorithm solver (Appendix 9.2): population of candidate
+//! orderings; top-K pairs selected by fitness each round; single-point
+//! prefix crossover; two-index swap mutation; invalid offspring discarded;
+//! terminates when the best fitness stops improving.
+//!
+//! The paper's literal prefix-swap crossover produces a valid permutation
+//! only when both prefixes contain the same element multiset, so most
+//! offspring are discarded and search degenerates toward mutation-only.
+//! We implement the literal operator (`Crossover::PrefixSwap`, used when
+//! reproducing Table 3's method) plus the standard order-crossover OX1
+//! (`Crossover::Order`) as the default. Both respect constraints by
+//! discarding invalid children, exactly as the appendix prescribes.
+
+use super::{OrderingProblem, Solution};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Crossover {
+    /// Appendix-literal: swap the first k elements of the pair.
+    PrefixSwap,
+    /// OX1 order crossover (keeps a slice, fills the rest in partner
+    /// order) — always yields a permutation.
+    Order,
+}
+
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    /// Best K pairs selected for crossover each round.
+    pub k_pairs: usize,
+    pub mutation_prob: f64,
+    /// Stop after this many rounds without improvement.
+    pub stall_rounds: usize,
+    pub max_rounds: usize,
+    pub crossover: Crossover,
+    /// Repair precedence-violating children (greedy topological reorder
+    /// preserving relative positions) instead of discarding them.
+    pub repair: bool,
+    /// Per-round adjacent-swap hill climbing on the incumbent.
+    pub local_search: bool,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> GaConfig {
+        GaConfig {
+            population: 128,
+            k_pairs: 24,
+            mutation_prob: 0.9,
+            stall_rounds: 60,
+            max_rounds: 2000,
+            crossover: Crossover::Order,
+            repair: true,
+            local_search: true,
+            seed: 0xA417,
+        }
+    }
+}
+
+/// Paper-literal appendix configuration: prefix-swap crossover, no
+/// repair, no local search — invalid offspring simply discarded.
+pub fn ga_paper_literal() -> GaConfig {
+    GaConfig {
+        crossover: Crossover::PrefixSwap,
+        repair: false,
+        local_search: false,
+        ..Default::default()
+    }
+}
+
+/// Greedy topological repair: rebuild the order by repeatedly emitting
+/// the ready task (all prerequisites done) that appears earliest in the
+/// broken permutation. Valid input is returned unchanged.
+pub fn repair_order(p: &OrderingProblem, order: &[usize]) -> Option<Vec<usize>> {
+    let prereq = p.prereq_masks();
+    let mut used = 0u32;
+    let mut out = Vec::with_capacity(p.n);
+    for _ in 0..p.n {
+        let next = order
+            .iter()
+            .copied()
+            .find(|&t| used & (1 << t) == 0 && prereq[t] & !used == 0)?;
+        out.push(next);
+        used |= 1 << next;
+    }
+    Some(out)
+}
+
+/// First-improvement hill climbing: 2-opt segment reversals plus
+/// single-task relocation, both precedence-checked.
+fn local_search(p: &OrderingProblem, order: &mut Vec<usize>, cost: &mut f64) {
+    let n = order.len();
+    let mut improved = true;
+    while improved {
+        improved = false;
+        // 2-opt: reverse order[i..=j]; precedence-violating reversals are
+        // topologically repaired rather than discarded (dense-precedence
+        // instances like br17.12 leave few raw-valid reversals)
+        for i in 0..n {
+            for j in (i + 1)..n {
+                order[i..=j].reverse();
+                let cand = if p.is_valid(order) {
+                    Some(order.clone())
+                } else {
+                    repair_order(p, order)
+                };
+                order[i..=j].reverse();
+                if let Some(cand) = cand {
+                    let c = p.fitness(&cand);
+                    if c + 1e-12 < *cost {
+                        *cost = c;
+                        *order = cand;
+                        improved = true;
+                    }
+                }
+            }
+        }
+        // single-task relocation
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let t = order.remove(i);
+                order.insert(j, t);
+                if p.is_valid(order) {
+                    let c = p.fitness(order);
+                    if c + 1e-12 < *cost {
+                        *cost = c;
+                        improved = true;
+                        continue;
+                    }
+                }
+                let t = order.remove(j);
+                order.insert(i, t);
+            }
+        }
+    }
+}
+
+/// Run the GA from several seeds and keep the best (restarts are the
+/// cheap cure for premature convergence on rugged precedence landscapes).
+pub fn solve_genetic(p: &OrderingProblem, cfg: &GaConfig) -> Option<Solution> {
+    let mut best: Option<Solution> = None;
+    for r in 0..3u64 {
+        let sub = GaConfig { seed: cfg.seed.wrapping_add(r * 0x9E37), ..cfg.clone() };
+        if let Some(s) = solve_genetic_once(p, &sub) {
+            if best.as_ref().map_or(true, |b| s.cost < b.cost) {
+                best = Some(s);
+            }
+        }
+    }
+    // multi-start local search from fresh topological orders — escapes
+    // the deep local optima dense-precedence instances trap the GA in
+    if cfg.local_search {
+        let mut rng = Pcg32::seed(cfg.seed ^ 0x5CA1AB1E);
+        for _ in 0..8 {
+            if let Some(mut o) = random_valid(p, &mut rng, 64) {
+                let mut c = p.fitness(&o);
+                local_search(p, &mut o, &mut c);
+                if best.as_ref().map_or(true, |b| c < b.cost) {
+                    best = Some(Solution { order: o, cost: c });
+                }
+            }
+        }
+    }
+    best
+}
+
+fn solve_genetic_once(p: &OrderingProblem, cfg: &GaConfig) -> Option<Solution> {
+    if p.n == 0 {
+        return Some(Solution { order: vec![], cost: 0.0 });
+    }
+    let mut rng = Pcg32::seed(cfg.seed);
+    let mut pop = seed_population(p, cfg.population, &mut rng)?;
+    let mut best = pop
+        .iter()
+        .map(|o| (p.fitness(o), o.clone()))
+        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        .map(|(c, o)| Solution { order: o, cost: c })?;
+
+    let mut stall = 0usize;
+    for _round in 0..cfg.max_rounds {
+        // rank population by fitness
+        let mut scored: Vec<(f64, Vec<usize>)> =
+            pop.iter().map(|o| (p.fitness(o), o.clone())).collect();
+        scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if scored[0].0 + 1e-12 < best.cost {
+            best = Solution { order: scored[0].1.clone(), cost: scored[0].0 };
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall >= cfg.stall_rounds {
+                break;
+            }
+        }
+
+        // top-K pairs crossover + mutation
+        let elite = scored.len().min(2 * cfg.k_pairs).max(2);
+        let mut next: Vec<Vec<usize>> =
+            scored.iter().take(elite).map(|(_, o)| o.clone()).collect();
+        for pair in 0..cfg.k_pairs {
+            let a = &scored[(2 * pair) % elite].1;
+            let b = &scored[(2 * pair + 1) % elite].1;
+            for child in crossover(a, b, cfg.crossover, &mut rng) {
+                let mut c = child;
+                if rng.chance(cfg.mutation_prob) {
+                    mutate(&mut c, &mut rng);
+                }
+                if p.is_valid(&c) {
+                    next.push(c);
+                } else if cfg.repair {
+                    if let Some(fixed) = repair_order(p, &c) {
+                        debug_assert!(p.is_valid(&fixed));
+                        next.push(fixed);
+                    }
+                }
+            }
+        }
+        // refill with fresh valid random orders to maintain diversity
+        while next.len() < cfg.population {
+            if let Some(o) = random_valid(p, &mut rng, 64) {
+                next.push(o);
+            } else {
+                break;
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        pop = next;
+    }
+    if cfg.local_search {
+        let mut order = best.order.clone();
+        let mut cost = best.cost;
+        local_search(p, &mut order, &mut cost);
+        if cost < best.cost {
+            best = Solution { order, cost };
+        }
+    }
+    Some(best)
+}
+
+fn seed_population(
+    p: &OrderingProblem,
+    size: usize,
+    rng: &mut Pcg32,
+) -> Option<Vec<Vec<usize>>> {
+    let mut pop = Vec::with_capacity(size);
+    // include a greedy nearest-neighbour seed when feasible
+    if let Some(g) = greedy_seed(p) {
+        pop.push(g);
+    }
+    let mut failures = 0;
+    while pop.len() < size && failures < 2000 {
+        match random_valid(p, rng, 64) {
+            Some(o) => pop.push(o),
+            None => failures += 1,
+        }
+    }
+    if pop.is_empty() {
+        None
+    } else {
+        Some(pop)
+    }
+}
+
+/// Topological-sort-with-random-tie-breaking: uniformly samples valid
+/// orders even under dense precedence.
+fn random_valid(p: &OrderingProblem, rng: &mut Pcg32, _tries: usize) -> Option<Vec<usize>> {
+    let prereq = p.prereq_masks();
+    let mut used = 0u32;
+    let mut order = Vec::with_capacity(p.n);
+    for _ in 0..p.n {
+        let ready: Vec<usize> = (0..p.n)
+            .filter(|&t| used & (1 << t) == 0 && prereq[t] & !used == 0)
+            .collect();
+        if ready.is_empty() {
+            return None; // precedence cycle
+        }
+        let t = *rng.choose(&ready);
+        order.push(t);
+        used |= 1 << t;
+    }
+    Some(order)
+}
+
+/// Greedy nearest-neighbour respecting precedence.
+fn greedy_seed(p: &OrderingProblem) -> Option<Vec<usize>> {
+    let prereq = p.prereq_masks();
+    let mut used = 0u32;
+    let mut order: Vec<usize> = Vec::with_capacity(p.n);
+    for _ in 0..p.n {
+        let mut best: Option<(f64, usize)> = None;
+        for t in 0..p.n {
+            if used & (1 << t) != 0 || prereq[t] & !used != 0 {
+                continue;
+            }
+            let c = order
+                .last()
+                .map_or(0.0, |&prev| p.exec_prob(t) * p.cost[prev][t]);
+            if best.map_or(true, |(bc, _)| c < bc) {
+                best = Some((c, t));
+            }
+        }
+        let (_, t) = best?;
+        order.push(t);
+        used |= 1 << t;
+    }
+    Some(order)
+}
+
+fn crossover(
+    a: &[usize],
+    b: &[usize],
+    kind: Crossover,
+    rng: &mut Pcg32,
+) -> Vec<Vec<usize>> {
+    let n = a.len();
+    if n < 2 {
+        return vec![a.to_vec()];
+    }
+    match kind {
+        Crossover::PrefixSwap => {
+            let k = rng.range(1, n);
+            let mut c1 = b[..k].to_vec();
+            c1.extend_from_slice(&a[k..]);
+            let mut c2 = a[..k].to_vec();
+            c2.extend_from_slice(&b[k..]);
+            vec![c1, c2] // possibly invalid; caller filters
+        }
+        Crossover::Order => {
+            vec![ox1(a, b, rng), ox1(b, a, rng)]
+        }
+    }
+}
+
+/// OX1: copy a random slice from `a`, fill remaining positions with the
+/// elements of `b` in order of appearance.
+fn ox1(a: &[usize], b: &[usize], rng: &mut Pcg32) -> Vec<usize> {
+    let n = a.len();
+    let i = rng.below(n);
+    let j = rng.below(n);
+    let (lo, hi) = (i.min(j), i.max(j));
+    let mut child = vec![usize::MAX; n];
+    let mut in_slice = vec![false; n];
+    for k in lo..=hi {
+        child[k] = a[k];
+        in_slice[a[k]] = true;
+    }
+    let mut fill = b.iter().filter(|&&t| !in_slice[t]);
+    for slot in child.iter_mut() {
+        if *slot == usize::MAX {
+            *slot = *fill.next().expect("fill exhausted");
+        }
+    }
+    child
+}
+
+fn mutate(order: &mut [usize], rng: &mut Pcg32) {
+    if order.len() < 2 {
+        return;
+    }
+    let i = rng.below(order.len());
+    let j = rng.below(order.len());
+    order.swap(i, j);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::solve_held_karp;
+    use crate::testkit::{gen, prop_check};
+
+    fn random_problem(rng: &mut Pcg32, n: usize, prec_edges: usize) -> OrderingProblem {
+        let flat = gen::sym_cost_matrix(rng, n, 100.0);
+        let cost: Vec<Vec<f64>> =
+            (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+        let prec = gen::precedence_dag(rng, n, prec_edges);
+        OrderingProblem::from_matrix(cost).with_precedence(prec)
+    }
+
+    #[test]
+    fn ga_matches_exact_on_small_instances() {
+        prop_check(
+            "ga-near-optimal",
+            15,
+            |rng| {
+                let n = gen::usize_in(rng, 4, 9);
+                random_problem(rng, n, 2)
+            },
+            |p| {
+                let exact = solve_held_karp(p).unwrap();
+                let ga = solve_genetic(p, &GaConfig::default()).unwrap();
+                if !p.is_valid(&ga.order) {
+                    return Err("invalid order".into());
+                }
+                // GA must be within 10% of optimal on these tiny instances
+                if ga.cost > exact.cost * 1.10 + 1e-9 {
+                    return Err(format!("ga {} vs exact {}", ga.cost, exact.cost));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ga_never_below_optimal() {
+        prop_check(
+            "ga-sound",
+            15,
+            |rng| {
+                let n = gen::usize_in(rng, 3, 8);
+                random_problem(rng, n, 3)
+            },
+            |p| {
+                let exact = solve_held_karp(p).unwrap();
+                let ga = solve_genetic(p, &GaConfig::default()).unwrap();
+                if ga.cost + 1e-9 < exact.cost {
+                    return Err(format!(
+                        "GA {} claims better than exact {}",
+                        ga.cost, exact.cost
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prefix_swap_variant_still_finds_valid_solutions() {
+        let mut rng = Pcg32::seed(4);
+        let p = random_problem(&mut rng, 7, 3);
+        let cfg = GaConfig { crossover: Crossover::PrefixSwap, ..Default::default() };
+        let s = solve_genetic(&p, &cfg).unwrap();
+        assert!(p.is_valid(&s.order));
+    }
+
+    #[test]
+    fn ox1_always_permutation() {
+        prop_check(
+            "ox1-perm",
+            100,
+            |rng| {
+                let n = gen::usize_in(rng, 2, 12);
+                (gen::permutation(rng, n), gen::permutation(rng, n), rng.split())
+            },
+            |(a, b, rng)| {
+                let mut r = rng.clone();
+                let c = ox1(a, b, &mut r);
+                let mut s = c.clone();
+                s.sort_unstable();
+                if s == (0..a.len()).collect::<Vec<_>>() {
+                    Ok(())
+                } else {
+                    Err(format!("not a permutation: {:?}", c))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn ga_handles_conditional_instances() {
+        let mut rng = Pcg32::seed(21);
+        let n = 8;
+        let flat = gen::sym_cost_matrix(&mut rng, n, 80.0);
+        let cost: Vec<Vec<f64>> =
+            (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+        let p = OrderingProblem::from_matrix(cost)
+            .with_conditional(vec![(0, 3, 0.8), (1, 5, 0.5)]);
+        let exact = solve_held_karp(&p).unwrap();
+        let ga = solve_genetic(&p, &GaConfig::default()).unwrap();
+        assert!(p.is_valid(&ga.order));
+        assert!(ga.cost <= exact.cost * 1.10 + 1e-9);
+    }
+}

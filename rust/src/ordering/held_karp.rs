@@ -1,0 +1,207 @@
+//! Held–Karp exact dynamic program over subsets, with prerequisite
+//! filtering for precedence/conditional instances. This is the ground
+//! truth for Table 3's "Optimal" column (the published TSPLIB optima are
+//! not available offline; solver-vs-solver comparison preserves the
+//! table's claim — see DESIGN.md, Substitutions).
+
+use super::{OrderingProblem, Solution};
+
+/// Exact solution for n ≤ 20 (table is 2^n · n doubles).
+pub fn solve_held_karp(p: &OrderingProblem) -> Option<Solution> {
+    assert!(p.n <= 20, "Held-Karp capped at 20 tasks");
+    if p.n == 0 {
+        return Some(Solution { order: vec![], cost: 0.0 });
+    }
+    if p.n == 1 {
+        return Some(Solution { order: vec![0], cost: 0.0 });
+    }
+    let n = p.n;
+    let full: u32 = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+    let prereq = p.prereq_masks();
+    let size = (full as usize + 1) * n;
+    let mut dp = vec![f64::INFINITY; size];
+    let mut parent = vec![u8::MAX; size];
+    let idx = |mask: u32, j: usize| mask as usize * n + j;
+
+    // Cyclic tours can start anywhere; fix task 0 as the start WLOG.
+    // Paths may start at any task with no prerequisites.
+    for j in 0..n {
+        if prereq[j] != 0 {
+            continue;
+        }
+        if p.cyclic && j != 0 {
+            continue;
+        }
+        dp[idx(1 << j, j)] = 0.0;
+    }
+
+    for mask in 1..=full {
+        for j in 0..n {
+            let mj = 1u32 << j;
+            if mask & mj == 0 {
+                continue;
+            }
+            let cur = dp[idx(mask, j)];
+            if !cur.is_finite() {
+                continue;
+            }
+            // extend to k not yet visited whose prerequisites are all done
+            for k in 0..n {
+                let mk = 1u32 << k;
+                if mask & mk != 0 || prereq[k] & !mask != 0 {
+                    continue;
+                }
+                let next = mask | mk;
+                let cand = cur + p.exec_prob(k) * p.cost[j][k];
+                let slot = idx(next, k);
+                if cand < dp[slot] {
+                    dp[slot] = cand;
+                    parent[slot] = j as u8;
+                }
+            }
+        }
+    }
+
+    // pick the best endpoint
+    let mut best_end = None;
+    let mut best_cost = f64::INFINITY;
+    for j in 0..n {
+        let mut c = dp[idx(full, j)];
+        if p.cyclic {
+            c += p.exec_prob(0) * p.cost[j][0];
+        }
+        if c < best_cost {
+            best_cost = c;
+            best_end = Some(j);
+        }
+    }
+    let mut j = best_end?;
+    if !best_cost.is_finite() {
+        return None;
+    }
+    // reconstruct
+    let mut order = vec![j];
+    let mut mask = full;
+    while mask.count_ones() > 1 {
+        let pj = parent[idx(mask, j)];
+        debug_assert_ne!(pj, u8::MAX);
+        mask &= !(1u32 << j);
+        j = pj as usize;
+        order.push(j);
+    }
+    order.reverse();
+    Some(Solution { order, cost: best_cost })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::solve_brute;
+    use crate::testkit::{gen, prop_check};
+
+    #[test]
+    fn matches_brute_force_unconstrained() {
+        prop_check(
+            "hk-equals-brute",
+            30,
+            |rng| {
+                let n = gen::usize_in(rng, 2, 9);
+                let flat = gen::sym_cost_matrix(rng, n, 100.0);
+                let cost: Vec<Vec<f64>> =
+                    (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+                let cyclic = rng.chance(0.5);
+                let mut p = OrderingProblem::from_matrix(cost);
+                if cyclic {
+                    p = p.cyclic();
+                }
+                p
+            },
+            |p| {
+                let a = solve_held_karp(p).unwrap();
+                let b = solve_brute(p).unwrap();
+                if (a.cost - b.cost).abs() > 1e-9 {
+                    return Err(format!("hk {} vs brute {}", a.cost, b.cost));
+                }
+                if !p.is_valid(&a.order) {
+                    return Err("invalid order".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matches_brute_force_with_precedence() {
+        prop_check(
+            "hk-equals-brute-prec",
+            30,
+            |rng| {
+                let n = gen::usize_in(rng, 3, 9);
+                let flat = gen::sym_cost_matrix(rng, n, 100.0);
+                let cost: Vec<Vec<f64>> =
+                    (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+                let prec = gen::precedence_dag(rng, n, n / 2 + 1);
+                OrderingProblem::from_matrix(cost).with_precedence(prec)
+            },
+            |p| {
+                let a = solve_held_karp(p).unwrap();
+                let b = solve_brute(p).unwrap();
+                if (a.cost - b.cost).abs() > 1e-9 {
+                    return Err(format!("hk {} vs brute {}", a.cost, b.cost));
+                }
+                if !p.is_valid(&a.order) {
+                    return Err("invalid order".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matches_brute_force_with_conditional() {
+        prop_check(
+            "hk-equals-brute-cond",
+            20,
+            |rng| {
+                let n = gen::usize_in(rng, 3, 8);
+                let flat = gen::sym_cost_matrix(rng, n, 60.0);
+                let cost: Vec<Vec<f64>> =
+                    (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+                let prec = gen::precedence_dag(rng, n, 2);
+                let cond: Vec<(usize, usize, f64)> = prec
+                    .iter()
+                    .map(|&(a, b)| (a, b, 0.5 + rng.f64() * 0.5))
+                    .collect();
+                OrderingProblem::from_matrix(cost).with_conditional(cond)
+            },
+            |p| {
+                let a = solve_held_karp(p).unwrap();
+                let b = solve_brute(p).unwrap();
+                if (a.cost - b.cost).abs() > 1e-9 {
+                    return Err(format!("hk {} vs brute {}", a.cost, b.cost));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let p = OrderingProblem::from_matrix(vec![vec![0.0, 1.0], vec![1.0, 0.0]])
+            .with_precedence(vec![(0, 1), (1, 0)]);
+        assert!(solve_held_karp(&p).is_none());
+    }
+
+    #[test]
+    fn handles_17_nodes() {
+        let mut rng = crate::util::rng::Pcg32::seed(99);
+        let n = 17;
+        let flat = gen::sym_cost_matrix(&mut rng, n, 100.0);
+        let cost: Vec<Vec<f64>> =
+            (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+        let p = OrderingProblem::from_matrix(cost).cyclic();
+        let s = solve_held_karp(&p).unwrap();
+        assert!(p.is_valid(&s.order));
+        assert!(s.cost.is_finite());
+    }
+}

@@ -1,0 +1,176 @@
+//! Optimal task execution order (§4): an asymmetric-TSP-like problem over
+//! the switching-cost matrix (Eq. 3), proven NP-complete in the paper's
+//! appendix, with precedence and conditional extensions (§4.3).
+//!
+//! Three solvers, cross-validated against each other in tests:
+//!  * brute force (Eq. 7/8 fitness) — the paper's small-n solver
+//!  * Held–Karp exact DP with precedence filtering — ground truth for
+//!    Table 3's "Optimal" column (n ≤ ~17)
+//!  * the appendix's genetic algorithm — the scalable solver
+
+pub mod brute;
+pub mod genetic;
+pub mod held_karp;
+
+pub use brute::solve_brute;
+pub use genetic::{solve_genetic, GaConfig};
+pub use held_karp::solve_held_karp;
+
+/// A task-ordering instance.
+#[derive(Debug, Clone)]
+pub struct OrderingProblem {
+    pub n: usize,
+    /// c[i][j]: cost of switching from τ_i to τ_j.
+    pub cost: Vec<Vec<f64>>,
+    /// (a, b): τ_a must finish before τ_b starts (static, §4.3).
+    pub precedence: Vec<(usize, usize)>,
+    /// (a, b, p): τ_b runs only after τ_a, with probability p (dynamic,
+    /// §4.3). Implies the precedence (a, b).
+    pub conditional: Vec<(usize, usize, f64)>,
+    /// Cyclic objective (least-cost Hamiltonian cycle, §2.3 / TSP
+    /// instances) vs path objective (Eq. 7, one pass over the task set).
+    pub cyclic: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    pub order: Vec<usize>,
+    pub cost: f64,
+}
+
+impl OrderingProblem {
+    pub fn from_matrix(cost: Vec<Vec<f64>>) -> OrderingProblem {
+        let n = cost.len();
+        OrderingProblem { n, cost, precedence: vec![], conditional: vec![], cyclic: false }
+    }
+
+    pub fn cyclic(mut self) -> OrderingProblem {
+        self.cyclic = true;
+        self
+    }
+
+    pub fn with_precedence(mut self, p: Vec<(usize, usize)>) -> OrderingProblem {
+        self.precedence = p;
+        self
+    }
+
+    pub fn with_conditional(mut self, c: Vec<(usize, usize, f64)>) -> OrderingProblem {
+        self.conditional = c;
+        self
+    }
+
+    /// All hard ordering edges: precedence plus the precedence implied by
+    /// conditionals.
+    pub fn all_precedence(&self) -> Vec<(usize, usize)> {
+        let mut out = self.precedence.clone();
+        out.extend(self.conditional.iter().map(|&(a, b, _)| (a, b)));
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Probability that τ_t executes (1.0 unless conditioned).
+    pub fn exec_prob(&self, t: usize) -> f64 {
+        self.conditional
+            .iter()
+            .filter(|&&(_, b, _)| b == t)
+            .map(|&(_, _, p)| p)
+            .product()
+    }
+
+    /// Eq. 7 / Eq. 8 fitness: sum of (expected) switching costs along the
+    /// order, plus the wrap-around edge when cyclic.
+    pub fn fitness(&self, order: &[usize]) -> f64 {
+        let mut f = 0.0;
+        for w in order.windows(2) {
+            f += self.exec_prob(w[1]) * self.cost[w[0]][w[1]];
+        }
+        if self.cyclic && order.len() > 1 {
+            let (last, first) = (order[order.len() - 1], order[0]);
+            f += self.exec_prob(first) * self.cost[last][first];
+        }
+        f
+    }
+
+    /// Check hard constraints (a valid permutation respecting precedence).
+    pub fn is_valid(&self, order: &[usize]) -> bool {
+        if order.len() != self.n {
+            return false;
+        }
+        let mut pos = vec![usize::MAX; self.n];
+        for (i, &t) in order.iter().enumerate() {
+            if t >= self.n || pos[t] != usize::MAX {
+                return false;
+            }
+            pos[t] = i;
+        }
+        self.all_precedence()
+            .iter()
+            .all(|&(a, b)| pos[a] < pos[b])
+    }
+
+    /// Prerequisite bitmask per task (for the DP solver).
+    pub fn prereq_masks(&self) -> Vec<u32> {
+        let mut m = vec![0u32; self.n];
+        for (a, b) in self.all_precedence() {
+            m[b] |= 1 << a;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> OrderingProblem {
+        // the Fig. 4 example spirit: 0-1 cheap, 0-2 pricey
+        OrderingProblem::from_matrix(vec![
+            vec![0.0, 1.0, 4.0],
+            vec![1.0, 0.0, 2.0],
+            vec![4.0, 2.0, 0.0],
+        ])
+    }
+
+    #[test]
+    fn fitness_path_and_cycle() {
+        let p = toy();
+        assert_eq!(p.fitness(&[0, 1, 2]), 3.0);
+        let pc = toy().cyclic();
+        assert_eq!(pc.fitness(&[0, 1, 2]), 7.0);
+    }
+
+    #[test]
+    fn conditional_scales_edge_cost() {
+        let p = toy().with_conditional(vec![(0, 2, 0.5)]);
+        // edge into task 2 is halved in expectation
+        assert_eq!(p.fitness(&[0, 1, 2]), 1.0 + 0.5 * 2.0);
+        assert_eq!(p.exec_prob(2), 0.5);
+        assert_eq!(p.exec_prob(1), 1.0);
+    }
+
+    #[test]
+    fn validity_checks_precedence() {
+        let p = toy().with_precedence(vec![(2, 0)]);
+        assert!(!p.is_valid(&[0, 1, 2]));
+        assert!(p.is_valid(&[2, 0, 1]));
+        assert!(p.is_valid(&[2, 1, 0]));
+        assert!(!p.is_valid(&[0, 0, 1]));
+        assert!(!p.is_valid(&[0, 1]));
+    }
+
+    #[test]
+    fn conditional_implies_precedence() {
+        let p = toy().with_conditional(vec![(1, 0, 0.8)]);
+        assert!(!p.is_valid(&[0, 1, 2]));
+        assert!(p.is_valid(&[1, 0, 2]));
+    }
+
+    #[test]
+    fn prereq_masks_built() {
+        let p = toy().with_precedence(vec![(0, 2), (1, 2)]);
+        let m = p.prereq_masks();
+        assert_eq!(m[2], 0b011);
+        assert_eq!(m[0], 0);
+    }
+}

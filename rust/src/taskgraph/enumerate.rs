@@ -1,0 +1,239 @@
+//! Task graph enumeration (§3.3 Step 2). Two generators:
+//!
+//! * `enumerate_all` — exhaustive refinement chains, the analog of the
+//!   paper's recursive Λ(g) expansion. The space is super-exponential, so
+//!   this is used for n ≤ ~6 (Fig. 3's five-task study, the §7
+//!   deployments) with an optional cap.
+//! * `clustered` — affinity-guided candidates for larger task sets: at
+//!   each level, complete-linkage agglomerative clustering *within* the
+//!   previous level's groups yields a nested family of partitions; chains
+//!   are the products of cut levels. This is the scalable generator the
+//!   10-task dataset experiments use (see DESIGN.md, Enumeration scale
+//!   note).
+
+use super::graph::TaskGraph;
+use super::partition::Partition;
+use crate::affinity::AffinityTensor;
+
+/// Exhaustive: all task graphs with `d` branch points over `n` tasks,
+/// capped at `limit` (None = unbounded — beware beyond n = 6).
+pub fn enumerate_all(n: usize, bounds: &[usize], limit: Option<usize>) -> Vec<TaskGraph> {
+    let d = bounds.len();
+    let mut out = Vec::new();
+    let mut chain: Vec<Partition> = Vec::with_capacity(d + 1);
+    rec(n, d, &mut chain, &mut out, limit);
+    out.into_iter()
+        .map(|partitions| TaskGraph::new(n, bounds.to_vec(), partitions).unwrap())
+        .collect()
+}
+
+fn rec(
+    n: usize,
+    d: usize,
+    chain: &mut Vec<Partition>,
+    out: &mut Vec<Vec<Partition>>,
+    limit: Option<usize>,
+) {
+    if limit.is_some_and(|l| out.len() >= l) {
+        return;
+    }
+    if chain.len() == d {
+        let mut full = chain.clone();
+        full.push(Partition::singletons(n));
+        out.push(full);
+        return;
+    }
+    let candidates = match chain.last() {
+        None => Partition::enumerate_all(n),
+        Some(prev) => Partition::enumerate_refinements(prev),
+    };
+    for c in candidates {
+        chain.push(c);
+        rec(n, d, chain, out, limit);
+        chain.pop();
+        if limit.is_some_and(|l| out.len() >= l) {
+            return;
+        }
+    }
+}
+
+/// Affinity-guided generator for large n: nested clustering candidates
+/// per level, chained under the refinement constraint.
+pub fn clustered(
+    affinity: &AffinityTensor,
+    bounds: &[usize],
+    max_graphs: usize,
+) -> Vec<TaskGraph> {
+    let n = affinity.n;
+    let d = bounds.len();
+    assert_eq!(affinity.d, d, "affinity tensor must match branch points");
+    let mut out: Vec<Vec<Partition>> = Vec::new();
+    let mut chain: Vec<Partition> = Vec::new();
+    rec_clustered(affinity, n, d, &mut chain, &mut out, max_graphs);
+    out.into_iter()
+        .map(|p| TaskGraph::new(n, bounds.to_vec(), p).unwrap())
+        .collect()
+}
+
+fn rec_clustered(
+    affinity: &AffinityTensor,
+    n: usize,
+    d: usize,
+    chain: &mut Vec<Partition>,
+    out: &mut Vec<Vec<Partition>>,
+    max_graphs: usize,
+) {
+    if out.len() >= max_graphs {
+        return;
+    }
+    if chain.len() == d {
+        let mut full = chain.clone();
+        full.push(Partition::singletons(n));
+        out.push(full);
+        return;
+    }
+    let level = chain.len();
+    // affinity measured at the branch point *before* this partition's
+    // segment; the first (unscored) level reuses the first branch point.
+    let rho = level.saturating_sub(1);
+    let prev = chain
+        .last()
+        .cloned()
+        .unwrap_or_else(|| Partition::one_group(n));
+    for cand in nested_partitions(affinity, rho, &prev) {
+        chain.push(cand);
+        rec_clustered(affinity, n, d, chain, out, max_graphs);
+        chain.pop();
+        if out.len() >= max_graphs {
+            return;
+        }
+    }
+}
+
+/// Complete-linkage agglomerative clustering constrained to merge only
+/// within `coarser`'s groups: returns every cut of the merge tree, from
+/// singletons up to `coarser` itself. All results refine `coarser`.
+pub fn nested_partitions(
+    affinity: &AffinityTensor,
+    rho: usize,
+    coarser: &Partition,
+) -> Vec<Partition> {
+    let n = coarser.len();
+    // cluster membership as list of task lists
+    let mut clusters: Vec<Vec<usize>> = (0..n).map(|t| vec![t]).collect();
+    let mut cuts = vec![Partition::singletons(n)];
+    loop {
+        // find the closest mergeable pair (complete linkage)
+        let mut best: Option<(f64, usize, usize)> = None;
+        for i in 0..clusters.len() {
+            for j in (i + 1)..clusters.len() {
+                // same coarser group required
+                let gi = coarser.group_of(clusters[i][0]);
+                if clusters[j].iter().any(|&t| coarser.group_of(t) != gi) {
+                    continue;
+                }
+                let mut dist = 0.0f64;
+                for &a in &clusters[i] {
+                    for &b in &clusters[j] {
+                        dist = dist.max(affinity.dissimilarity(rho, a, b));
+                    }
+                }
+                if best.map_or(true, |(bd, _, _)| dist < bd) {
+                    best = Some((dist, i, j));
+                }
+            }
+        }
+        let Some((_, i, j)) = best else { break };
+        let merged = clusters.remove(j);
+        clusters[i].extend(merged);
+        // materialize the cut
+        let mut ids = vec![0usize; n];
+        for (g, c) in clusters.iter().enumerate() {
+            for &t in c {
+                ids[t] = g;
+            }
+        }
+        cuts.push(Partition::canonicalize(&ids));
+    }
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::synthetic_affinity;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn exhaustive_counts_small() {
+        // n=2, d=1: chains = partitions of 2 = 2 graphs
+        assert_eq!(enumerate_all(2, &[1], None).len(), 2);
+        // n=3, d=1: Bell(3) = 5
+        assert_eq!(enumerate_all(3, &[2], None).len(), 5);
+        // n=3, d=2: sum over P0 of #refinements(P0) = 5+…= known value 12
+        let g = enumerate_all(3, &[1, 2], None);
+        assert_eq!(g.len(), 12);
+    }
+
+    #[test]
+    fn exhaustive_graphs_are_valid_and_unique() {
+        let graphs = enumerate_all(4, &[1, 3], None);
+        let set: std::collections::HashSet<_> = graphs.iter().cloned().collect();
+        assert_eq!(set.len(), graphs.len());
+        // extremes are present
+        assert!(graphs.iter().any(|g| g.partitions[0].n_groups() == 1
+            && g.partitions[1].n_groups() == 1));
+        assert!(graphs
+            .iter()
+            .any(|g| g.partitions.iter().all(|p| p.is_identity())));
+    }
+
+    #[test]
+    fn limit_caps_output() {
+        assert_eq!(enumerate_all(5, &[1, 3, 4], Some(100)).len(), 100);
+    }
+
+    #[test]
+    fn nested_partitions_refine_and_include_extremes() {
+        let mut rng = Pcg32::seed(17);
+        let aff = synthetic_affinity(6, 3, &mut rng);
+        let coarse = Partition::one_group(6);
+        let cuts = nested_partitions(&aff, 0, &coarse);
+        assert_eq!(cuts.len(), 6); // singletons .. one group
+        for c in &cuts {
+            assert!(c.refines(&coarse));
+        }
+        assert!(cuts.first().unwrap().is_identity());
+        assert_eq!(cuts.last().unwrap().n_groups(), 1);
+    }
+
+    #[test]
+    fn nested_respects_group_boundaries() {
+        let mut rng = Pcg32::seed(19);
+        let aff = synthetic_affinity(5, 2, &mut rng);
+        let coarse = Partition(vec![0, 0, 1, 1, 1]);
+        for cut in nested_partitions(&aff, 0, &coarse) {
+            assert!(cut.refines(&coarse), "{:?}", cut);
+        }
+    }
+
+    #[test]
+    fn clustered_generates_valid_graphs_for_ten_tasks() {
+        let mut rng = Pcg32::seed(23);
+        let aff = synthetic_affinity(10, 3, &mut rng);
+        let graphs = clustered(&aff, &[1, 3, 4], 500);
+        assert!(!graphs.is_empty());
+        assert!(graphs.len() <= 500);
+        for g in &graphs {
+            assert_eq!(g.n_tasks, 10);
+            // validity is enforced by TaskGraph::new; spot-check refinement
+            for s in 0..g.d() {
+                assert!(g.partitions[s + 1].refines(&g.partitions[s]));
+            }
+        }
+        // the family must contain both compact and dispersed graphs
+        let min_blocks = graphs.iter().map(|g| g.n_blocks()).min().unwrap();
+        let max_blocks = graphs.iter().map(|g| g.n_blocks()).max().unwrap();
+        assert!(min_blocks < max_blocks);
+    }
+}

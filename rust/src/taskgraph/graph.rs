@@ -1,0 +1,371 @@
+//! The task graph (§2.2): segments of the common architecture shared by
+//! groups of tasks, represented as a refinement chain of partitions.
+//!
+//! With D branch points at layer boundaries `bounds[0..D]`, the network
+//! splits into D+1 segments; `partitions[s]` groups tasks sharing segment
+//! `s`. Refinement (`partitions[s+1]` refines `partitions[s]`) encodes the
+//! tree shape: once two tasks diverge they never re-merge. The final
+//! segment holds the task-private logits layer, so `partitions[D]` is the
+//! identity.
+
+use anyhow::{bail, Result};
+
+use super::partition::Partition;
+use crate::affinity::AffinityTensor;
+use crate::model::ArchSpec;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TaskGraph {
+    pub n_tasks: usize,
+    /// D strictly increasing internal layer boundaries in `1..n_layers`.
+    pub bounds: Vec<usize>,
+    /// D+1 partitions, a refinement chain ending in the identity.
+    pub partitions: Vec<Partition>,
+}
+
+/// A distinct block: one group's instance of one segment.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Block {
+    pub segment: usize,
+    pub group: usize,
+    pub tasks: Vec<usize>,
+}
+
+impl TaskGraph {
+    pub fn new(
+        n_tasks: usize,
+        bounds: Vec<usize>,
+        partitions: Vec<Partition>,
+    ) -> Result<TaskGraph> {
+        if partitions.len() != bounds.len() + 1 {
+            bail!(
+                "need {} partitions for {} branch points, got {}",
+                bounds.len() + 1,
+                bounds.len(),
+                partitions.len()
+            );
+        }
+        for w in bounds.windows(2) {
+            if w[0] >= w[1] {
+                bail!("bounds must be strictly increasing: {:?}", bounds);
+            }
+        }
+        if bounds.first().is_some_and(|&b| b == 0) {
+            bail!("bounds start at layer boundary 1");
+        }
+        for p in &partitions {
+            if p.len() != n_tasks {
+                bail!("partition arity mismatch");
+            }
+        }
+        for s in 0..partitions.len() - 1 {
+            if !partitions[s + 1].refines(&partitions[s]) {
+                bail!("partitions[{}] does not refine partitions[{}]", s + 1, s);
+            }
+        }
+        if !partitions[bounds.len()].is_identity() {
+            bail!("final segment (logits) must be task-private");
+        }
+        Ok(TaskGraph { n_tasks, bounds, partitions })
+    }
+
+    /// Number of branch points D.
+    pub fn d(&self) -> usize {
+        self.bounds.len()
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.bounds.len() + 1
+    }
+
+    /// Layer index range [start, end) of segment `s` in the architecture.
+    pub fn segment_layers(&self, arch: &ArchSpec, s: usize) -> std::ops::Range<usize> {
+        let start = if s == 0 { 0 } else { self.bounds[s - 1] };
+        let end = if s == self.d() { arch.n_layers() } else { self.bounds[s] };
+        start..end
+    }
+
+    /// The fully shared graph: all tasks in one group until the head.
+    pub fn shared(n_tasks: usize, bounds: Vec<usize>) -> TaskGraph {
+        let d = bounds.len();
+        let mut partitions = vec![Partition::one_group(n_tasks); d];
+        partitions.push(Partition::singletons(n_tasks));
+        TaskGraph::new(n_tasks, bounds, partitions).unwrap()
+    }
+
+    /// The fully disjoint graph: every task keeps its own network
+    /// (the Vanilla structure).
+    pub fn disjoint(n_tasks: usize, bounds: Vec<usize>) -> TaskGraph {
+        let partitions = vec![Partition::singletons(n_tasks); bounds.len() + 1];
+        TaskGraph::new(n_tasks, bounds, partitions).unwrap()
+    }
+
+    pub fn group_of(&self, segment: usize, task: usize) -> usize {
+        self.partitions[segment].group_of(task)
+    }
+
+    /// Number of leading segments tasks `i` and `j` share. Contiguous by
+    /// the refinement invariant (divergence is permanent).
+    pub fn shared_prefix(&self, i: usize, j: usize) -> usize {
+        let mut s = 0;
+        while s < self.n_segments() && self.group_of(s, i) == self.group_of(s, j) {
+            s += 1;
+        }
+        s
+    }
+
+    /// All distinct blocks of the graph.
+    pub fn blocks(&self) -> Vec<Block> {
+        let mut out = Vec::new();
+        for (s, p) in self.partitions.iter().enumerate() {
+            for (g, tasks) in p.groups().into_iter().enumerate() {
+                out.push(Block { segment: s, group: g, tasks });
+            }
+        }
+        out
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.partitions.iter().map(|p| p.n_groups()).sum()
+    }
+
+    /// Variety score (Eq. 1–2): at each branch point b, the mean over
+    /// child groups (the groups of `partitions[b+1]`) of the maximum
+    /// pairwise dissimilarity within the group, summed over branch points.
+    /// `affinity` must have d == self.d(), with ρ indexing `bounds` order.
+    pub fn variety(&self, affinity: &AffinityTensor) -> f64 {
+        assert_eq!(affinity.d, self.d());
+        assert_eq!(affinity.n, self.n_tasks);
+        let mut total = 0.0;
+        for b in 0..self.d() {
+            let groups = self.partitions[b + 1].groups();
+            let m = groups.len() as f64;
+            let mut v = 0.0;
+            for g in &groups {
+                let mut worst = 0.0f64;
+                for (ai, &i) in g.iter().enumerate() {
+                    for &j in &g[ai + 1..] {
+                        worst = worst.max(affinity.dissimilarity(b, i, j));
+                    }
+                }
+                v += worst;
+            }
+            total += v / m;
+        }
+        total
+    }
+
+    /// Total stored model size in bytes: every block's parameters, with
+    /// the logits layer sized per its task's class count.
+    pub fn model_bytes(&self, arch: &ArchSpec, ncls: &[usize]) -> usize {
+        assert_eq!(ncls.len(), self.n_tasks);
+        let mut total = 0usize;
+        for (s, p) in self.partitions.iter().enumerate() {
+            let layers = self.segment_layers(arch, s);
+            for tasks in p.groups() {
+                for l in layers.clone() {
+                    let spec = &arch.layers[l];
+                    let c = if spec.cfg.get("dout") == Some(&0) {
+                        assert_eq!(tasks.len(), 1, "logits layer must be private");
+                        ncls[tasks[0]]
+                    } else {
+                        2 // irrelevant: shapes don't depend on it
+                    };
+                    total += spec.param_bytes(c);
+                }
+            }
+        }
+        total
+    }
+
+    /// MACs to execute segment `s` once for one sample.
+    pub fn segment_macs(&self, arch: &ArchSpec, s: usize) -> u64 {
+        self.segment_layers(arch, s)
+            .map(|l| arch.layers[l].macs_per_sample)
+            .sum()
+    }
+
+    /// Output activation elements of segment `s` (for buffer sizing).
+    pub fn segment_out_elems(&self, arch: &ArchSpec, s: usize) -> usize {
+        let r = self.segment_layers(arch, s);
+        if r.is_empty() {
+            0
+        } else {
+            arch.layers[r.end - 1].out_elems()
+        }
+    }
+
+    /// Parameter bytes of one group-instance of segment `s`.
+    pub fn segment_bytes(&self, arch: &ArchSpec, s: usize, task: usize, ncls: &[usize]) -> usize {
+        self.segment_layers(arch, s)
+            .map(|l| {
+                let spec = &arch.layers[l];
+                let c = if spec.cfg.get("dout") == Some(&0) { ncls[task] } else { 2 };
+                spec.param_bytes(c)
+            })
+            .sum()
+    }
+
+    /// Evenly spread D boundaries over the architecture, §7-style (first
+    /// boundary right after layer 0, last right before the head).
+    pub fn default_bounds(n_layers: usize, d: usize) -> Vec<usize> {
+        assert!(n_layers >= 2);
+        let d = d.min(n_layers - 1);
+        if d == 1 {
+            return vec![n_layers - 1];
+        }
+        let mut out: Vec<usize> = (0..d)
+            .map(|i| {
+                let x = 1.0 + i as f64 * (n_layers as f64 - 2.0) / (d as f64 - 1.0);
+                x.round() as usize
+            })
+            .collect();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::synthetic_affinity;
+    use crate::util::rng::Pcg32;
+
+    fn arch5() -> ArchSpec {
+        // mirror of cnn5 shapes, built inline so unit tests don't need disk
+        crate::model::manifest::Manifest::from_json(
+            std::path::PathBuf::from("/tmp"),
+            &crate::util::json::Json::parse(TINY).unwrap(),
+        )
+        .unwrap()
+        .arch("cnn5")
+        .unwrap()
+        .clone()
+    }
+
+    const TINY: &str = r#"{
+      "version": 1,
+      "archs": {"cnn5": {"input": [16,16,1], "ncls": [2],
+        "layers": [
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
+          {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
+          {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+          {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}
+        ]}},
+      "entries": []
+    }"#;
+
+    #[test]
+    fn default_bounds_match_paper_examples() {
+        assert_eq!(TaskGraph::default_bounds(5, 3), vec![1, 3, 4]);
+        assert_eq!(TaskGraph::default_bounds(7, 3), vec![1, 4, 6]);
+        assert_eq!(TaskGraph::default_bounds(7, 5), vec![1, 2, 4, 5, 6]);
+        // clamped when the architecture is too shallow
+        assert_eq!(TaskGraph::default_bounds(5, 7).len(), 4);
+    }
+
+    #[test]
+    fn segments_partition_the_layer_list() {
+        let arch = arch5();
+        let g = TaskGraph::shared(4, vec![1, 3, 4]);
+        let mut covered = Vec::new();
+        for s in 0..g.n_segments() {
+            covered.extend(g.segment_layers(&arch, s));
+        }
+        assert_eq!(covered, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_graphs() {
+        // non-refining chain
+        let p = vec![
+            Partition(vec![0, 1, 0]),
+            Partition(vec![0, 0, 1]),
+            Partition::singletons(3),
+        ];
+        assert!(TaskGraph::new(3, vec![1, 3], p).is_err());
+        // shared head
+        let p = vec![Partition::one_group(3), Partition::one_group(3)];
+        assert!(TaskGraph::new(3, vec![2], p).is_err());
+        // non-increasing bounds
+        assert!(TaskGraph::new(
+            2,
+            vec![2, 2],
+            vec![
+                Partition::one_group(2),
+                Partition::one_group(2),
+                Partition::singletons(2)
+            ]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn shared_prefix_is_contiguous() {
+        let g = TaskGraph::new(
+            3,
+            vec![1, 3, 4],
+            vec![
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 1]),
+                Partition(vec![0, 1, 2]),
+                Partition::singletons(3),
+            ],
+        )
+        .unwrap();
+        assert_eq!(g.shared_prefix(0, 1), 2);
+        assert_eq!(g.shared_prefix(0, 2), 1);
+        assert_eq!(g.shared_prefix(1, 2), 1);
+        assert_eq!(g.shared_prefix(0, 0), 4);
+    }
+
+    #[test]
+    fn variety_extremes() {
+        let mut rng = Pcg32::seed(11);
+        let aff = synthetic_affinity(5, 3, &mut rng);
+        let shared = TaskGraph::shared(5, vec![1, 3, 4]);
+        let disjoint = TaskGraph::disjoint(5, vec![1, 3, 4]);
+        assert_eq!(disjoint.variety(&aff), 0.0);
+        assert!(shared.variety(&aff) > disjoint.variety(&aff));
+    }
+
+    #[test]
+    fn model_bytes_shared_less_than_disjoint() {
+        let arch = arch5();
+        let ncls = vec![2usize; 5];
+        let shared = TaskGraph::shared(5, vec![1, 3, 4]);
+        let disjoint = TaskGraph::disjoint(5, vec![1, 3, 4]);
+        let sb = shared.model_bytes(&arch, &ncls);
+        let db = disjoint.model_bytes(&arch, &ncls);
+        assert!(sb < db, "{} vs {}", sb, db);
+        // disjoint is exactly 5 independent networks
+        assert_eq!(db, 5 * arch.total_params(2) * 4);
+    }
+
+    #[test]
+    fn blocks_count() {
+        let g = TaskGraph::new(
+            3,
+            vec![1, 3, 4],
+            vec![
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 1]),
+                Partition(vec![0, 1, 2]),
+                Partition::singletons(3),
+            ],
+        )
+        .unwrap();
+        assert_eq!(g.n_blocks(), 1 + 2 + 3 + 3);
+        let blocks = g.blocks();
+        assert_eq!(blocks[0].tasks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn segment_macs_sum_to_arch_total() {
+        let arch = arch5();
+        let g = TaskGraph::shared(2, vec![1, 3, 4]);
+        let total: u64 = (0..g.n_segments()).map(|s| g.segment_macs(&arch, s)).sum();
+        assert_eq!(total, arch.total_macs());
+    }
+}

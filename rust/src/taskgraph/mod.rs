@@ -1,0 +1,10 @@
+//! Task graphs (§2.2, §3): compact shared-structure representations of a
+//! multitask set, their quality metrics, enumeration, and selection.
+
+pub mod enumerate;
+pub mod graph;
+pub mod partition;
+pub mod select;
+
+pub use graph::{Block, TaskGraph};
+pub use partition::Partition;

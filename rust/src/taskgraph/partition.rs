@@ -1,0 +1,209 @@
+//! Canonical set partitions of the task set. A task graph (§2.2) is a
+//! refinement chain of partitions, one per network segment: tasks in the
+//! same group at segment `s` share that segment's block (weights and, for
+//! a fixed input, its output activation).
+
+/// A partition of `0..n` into groups, stored as a group id per element.
+/// Canonical form: group ids are assigned in order of first appearance
+/// (so `[0,1,0,2]` is canonical, `[1,0,1,2]` is not).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Partition(pub Vec<usize>);
+
+impl Partition {
+    pub fn singletons(n: usize) -> Partition {
+        Partition((0..n).collect())
+    }
+
+    pub fn one_group(n: usize) -> Partition {
+        Partition(vec![0; n])
+    }
+
+    pub fn canonicalize(ids: &[usize]) -> Partition {
+        let mut map = std::collections::HashMap::new();
+        let mut next = 0usize;
+        let out = ids
+            .iter()
+            .map(|&g| {
+                *map.entry(g).or_insert_with(|| {
+                    let v = next;
+                    next += 1;
+                    v
+                })
+            })
+            .collect();
+        Partition(out)
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn group_of(&self, task: usize) -> usize {
+        self.0[task]
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.0.iter().copied().max().map_or(0, |m| m + 1)
+    }
+
+    /// Tasks per group, ordered by group id.
+    pub fn groups(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.n_groups()];
+        for (t, &g) in self.0.iter().enumerate() {
+            out[g].push(t);
+        }
+        out
+    }
+
+    /// True if `self` refines `coarser` (every group of self is contained
+    /// in a single group of coarser).
+    pub fn refines(&self, coarser: &Partition) -> bool {
+        assert_eq!(self.len(), coarser.len());
+        let mut rep: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::new();
+        for t in 0..self.len() {
+            match rep.entry(self.0[t]) {
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(coarser.0[t]);
+                }
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    if *e.get() != coarser.0[t] {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.0.iter().enumerate().all(|(i, &g)| i == g)
+    }
+
+    /// All canonical partitions of `0..n` (restricted growth strings).
+    /// Bell(n) of them — intended for n <= 10.
+    pub fn enumerate_all(n: usize) -> Vec<Partition> {
+        let mut out = Vec::new();
+        let mut cur = vec![0usize; n];
+        fn rec(cur: &mut Vec<usize>, i: usize, maxg: usize, out: &mut Vec<Partition>) {
+            if i == cur.len() {
+                out.push(Partition(cur.clone()));
+                return;
+            }
+            for g in 0..=maxg {
+                cur[i] = g;
+                rec(cur, i + 1, if g == maxg { maxg + 1 } else { maxg }, out);
+            }
+        }
+        if n == 0 {
+            return vec![Partition(vec![])];
+        }
+        rec(&mut cur, 1, 1, &mut out);
+        out
+    }
+
+    /// All canonical partitions refining `coarser`: the cartesian product
+    /// of the partitions of each group of `coarser`.
+    pub fn enumerate_refinements(coarser: &Partition) -> Vec<Partition> {
+        let groups = coarser.groups();
+        let per_group: Vec<Vec<Partition>> = groups
+            .iter()
+            .map(|g| Partition::enumerate_all(g.len()))
+            .collect();
+        let mut out = Vec::new();
+        let mut choice = vec![0usize; groups.len()];
+        loop {
+            // materialize this combination
+            let mut ids = vec![0usize; coarser.len()];
+            let mut base = 0usize;
+            for (gi, g) in groups.iter().enumerate() {
+                let sub = &per_group[gi][choice[gi]];
+                for (k, &task) in g.iter().enumerate() {
+                    ids[task] = base + sub.0[k];
+                }
+                base += sub.n_groups();
+            }
+            out.push(Partition::canonicalize(&ids));
+            // advance odometer
+            let mut i = 0;
+            loop {
+                if i == groups.len() {
+                    return out;
+                }
+                choice[i] += 1;
+                if choice[i] < per_group[i].len() {
+                    break;
+                }
+                choice[i] = 0;
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_form() {
+        assert_eq!(Partition::canonicalize(&[5, 2, 5, 9]).0, vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn groups_roundtrip() {
+        let p = Partition(vec![0, 1, 0, 2, 1]);
+        assert_eq!(p.n_groups(), 3);
+        assert_eq!(p.groups(), vec![vec![0, 2], vec![1, 4], vec![3]]);
+    }
+
+    #[test]
+    fn refinement_relation() {
+        let coarse = Partition(vec![0, 0, 1, 1]);
+        let fine = Partition(vec![0, 1, 2, 2]);
+        assert!(fine.refines(&coarse));
+        assert!(!coarse.refines(&fine));
+        assert!(coarse.refines(&coarse));
+        assert!(Partition::singletons(4).refines(&coarse));
+        assert!(coarse.refines(&Partition::one_group(4)));
+    }
+
+    #[test]
+    fn bell_numbers() {
+        assert_eq!(Partition::enumerate_all(1).len(), 1);
+        assert_eq!(Partition::enumerate_all(3).len(), 5);
+        assert_eq!(Partition::enumerate_all(5).len(), 52);
+        assert_eq!(Partition::enumerate_all(7).len(), 877);
+    }
+
+    #[test]
+    fn enumerated_partitions_canonical_and_unique() {
+        let all = Partition::enumerate_all(5);
+        let set: std::collections::HashSet<_> = all.iter().cloned().collect();
+        assert_eq!(set.len(), all.len());
+        for p in &all {
+            assert_eq!(Partition::canonicalize(&p.0), *p);
+        }
+    }
+
+    #[test]
+    fn refinements_of_pair_groups() {
+        // {0,1},{2,3}: each group has 2 partitions -> 4 refinements
+        let coarse = Partition(vec![0, 0, 1, 1]);
+        let refs = Partition::enumerate_refinements(&coarse);
+        assert_eq!(refs.len(), 4);
+        for r in &refs {
+            assert!(r.refines(&coarse));
+        }
+    }
+
+    #[test]
+    fn refinements_count_matches_product_of_bell() {
+        let coarse = Partition(vec![0, 0, 0, 1, 1]); // Bell(3)*Bell(2) = 10
+        assert_eq!(Partition::enumerate_refinements(&coarse).len(), 10);
+    }
+}

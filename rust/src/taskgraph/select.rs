@@ -1,0 +1,240 @@
+//! Task graph scoring and tradeoff selection (§3.2–3.3, Fig. 3): score
+//! every candidate graph on (variety, model size, execution cost with its
+//! optimal task order), sweep the model-size budget, and pick the graph at
+//! the intersection of the normalized variety and cost trend lines.
+
+use crate::affinity::AffinityTensor;
+use crate::device::Device;
+use crate::memory::{cost_matrix, ExecSim};
+use crate::model::ArchSpec;
+use crate::ordering::{solve_genetic, solve_held_karp, GaConfig, OrderingProblem};
+use crate::util::stats;
+
+use super::graph::TaskGraph;
+
+#[derive(Debug, Clone)]
+pub struct GraphScore {
+    pub graph: TaskGraph,
+    pub variety: f64,
+    pub model_bytes: usize,
+    /// Steady-state per-round execution time under the optimal order, s.
+    pub exec_time: f64,
+    pub exec_energy: f64,
+    pub order: Vec<usize>,
+}
+
+/// Score one graph: solve its ordering problem (exact for small n, GA
+/// beyond), then simulate a steady round in that order.
+pub fn score_graph(
+    graph: &TaskGraph,
+    affinity: &AffinityTensor,
+    arch: &ArchSpec,
+    ncls: &[usize],
+    device: &Device,
+) -> GraphScore {
+    let order = optimal_order(graph, arch, ncls, device);
+    let mut sim = ExecSim::new(device, arch, graph, ncls);
+    let cost = sim.steady_round_cost(&order, 3);
+    GraphScore {
+        variety: graph.variety(affinity),
+        model_bytes: graph.model_bytes(arch, ncls),
+        exec_time: cost.time(),
+        exec_energy: cost.energy(),
+        order,
+        graph: graph.clone(),
+    }
+}
+
+/// The ordering step invoked per enumerated graph (§3.3 Step 3).
+pub fn optimal_order(
+    graph: &TaskGraph,
+    arch: &ArchSpec,
+    ncls: &[usize],
+    device: &Device,
+) -> Vec<usize> {
+    let c = cost_matrix(device, arch, graph, ncls, false);
+    let p = OrderingProblem::from_matrix(c);
+    let sol = if graph.n_tasks <= 14 {
+        solve_held_karp(&p)
+    } else {
+        solve_genetic(&p, &GaConfig::default())
+    };
+    sol.map(|s| s.order).unwrap_or_else(|| (0..graph.n_tasks).collect())
+}
+
+/// One point of the Fig. 3 tradeoff curve.
+#[derive(Debug, Clone)]
+pub struct TradeoffPoint {
+    pub budget_bytes: usize,
+    /// Index into the scored graph list of the pick at this budget.
+    pub pick: usize,
+    pub variety_norm: f64,
+    pub cost_norm: f64,
+}
+
+/// Sweep the model-size budget over all candidate sizes; at each budget
+/// pick the lowest-variety graph that fits; normalize both trends.
+pub fn tradeoff_curve(scores: &[GraphScore]) -> Vec<TradeoffPoint> {
+    assert!(!scores.is_empty());
+    let mut budgets: Vec<usize> = scores.iter().map(|s| s.model_bytes).collect();
+    budgets.sort_unstable();
+    budgets.dedup();
+    let mut picks = Vec::new();
+    for &b in &budgets {
+        let pick = scores
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.model_bytes <= b)
+            .min_by(|a, b| {
+                a.1.variety
+                    .partial_cmp(&b.1.variety)
+                    .unwrap()
+                    .then(a.1.exec_time.partial_cmp(&b.1.exec_time).unwrap())
+            })
+            .map(|(i, _)| i)
+            .expect("some graph fits its own size");
+        picks.push(pick);
+    }
+    let variety: Vec<f64> = picks.iter().map(|&i| scores[i].variety).collect();
+    let cost: Vec<f64> = picks.iter().map(|&i| scores[i].exec_time).collect();
+    let vn = stats::normalize(&variety);
+    let cn = stats::normalize(&cost);
+    budgets
+        .iter()
+        .zip(picks)
+        .zip(vn.iter().zip(cn.iter()))
+        .map(|((&budget_bytes, pick), (&variety_norm, &cost_norm))| TradeoffPoint {
+            budget_bytes,
+            pick,
+            variety_norm,
+            cost_norm,
+        })
+        .collect()
+}
+
+/// The selected graph: where the normalized variety (falling in budget)
+/// and cost (rising in budget) trend lines intersect (§3.2).
+pub fn select_tradeoff(scores: &[GraphScore]) -> usize {
+    let curve = tradeoff_curve(scores);
+    for w in curve.windows(2) {
+        let d0 = w[0].variety_norm - w[0].cost_norm;
+        let d1 = w[1].variety_norm - w[1].cost_norm;
+        if d0 >= 0.0 && d1 <= 0.0 {
+            // crossing between the two budgets: pick the closer one
+            return if d0.abs() <= d1.abs() { w[0].pick } else { w[1].pick };
+        }
+    }
+    // no crossing: minimize |variety_norm - cost_norm|
+    curve
+        .iter()
+        .min_by(|a, b| {
+            (a.variety_norm - a.cost_norm)
+                .abs()
+                .partial_cmp(&(b.variety_norm - b.cost_norm).abs())
+                .unwrap()
+        })
+        .map(|p| p.pick)
+        .unwrap()
+}
+
+/// Budget extremes for Fig. 8: (min-budget pick, tradeoff pick,
+/// max-budget pick).
+pub fn budget_extremes(scores: &[GraphScore]) -> (usize, usize, usize) {
+    let curve = tradeoff_curve(scores);
+    let min_pick = curve.first().unwrap().pick;
+    let max_pick = curve.last().unwrap().pick;
+    (min_pick, select_tradeoff(scores), max_pick)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::synthetic_affinity;
+    use crate::taskgraph::enumerate::enumerate_all;
+    use crate::util::rng::Pcg32;
+
+    const TINY: &str = r#"{
+      "version": 1,
+      "archs": {"cnn5": {"input": [16,16,1], "ncls": [2],
+        "layers": [
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
+          {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
+          {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+          {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}
+        ]}},
+      "entries": []
+    }"#;
+
+    fn arch() -> ArchSpec {
+        crate::model::manifest::Manifest::from_json(
+            std::path::PathBuf::from("/tmp"),
+            &crate::util::json::Json::parse(TINY).unwrap(),
+        )
+        .unwrap()
+        .arch("cnn5")
+        .unwrap()
+        .clone()
+    }
+
+    fn scored_universe(n: usize) -> Vec<GraphScore> {
+        let arch = arch();
+        let dev = Device::msp430();
+        let mut rng = Pcg32::seed(31);
+        let aff = synthetic_affinity(n, 3, &mut rng);
+        let graphs = enumerate_all(n, &[1, 3, 4], Some(400));
+        graphs
+            .iter()
+            .map(|g| score_graph(g, &aff, &arch, &vec![2; n], &dev))
+            .collect()
+    }
+
+    #[test]
+    fn variety_and_cost_oppose() {
+        let scores = scored_universe(4);
+        // most compact graph: min bytes; most dispersed: max bytes
+        let min = scores.iter().min_by_key(|s| s.model_bytes).unwrap();
+        let max = scores.iter().max_by_key(|s| s.model_bytes).unwrap();
+        assert!(min.variety >= max.variety);
+        assert!(min.exec_time <= max.exec_time);
+    }
+
+    #[test]
+    fn tradeoff_curve_monotone_trends() {
+        let scores = scored_universe(4);
+        let curve = tradeoff_curve(&scores);
+        assert!(curve.len() > 2);
+        // variety trend is non-increasing in budget
+        for w in curve.windows(2) {
+            assert!(w[1].variety_norm <= w[0].variety_norm + 1e-9);
+        }
+        // endpoints normalized
+        assert!(curve.first().unwrap().variety_norm >= 0.99);
+        assert!(curve.last().unwrap().variety_norm <= 0.01);
+    }
+
+    #[test]
+    fn selected_graph_is_strictly_between_extremes() {
+        let scores = scored_universe(5);
+        let (lo, mid, hi) = budget_extremes(&scores);
+        let (bl, bm, bh) = (
+            scores[lo].model_bytes,
+            scores[mid].model_bytes,
+            scores[hi].model_bytes,
+        );
+        assert!(bl <= bm && bm <= bh);
+        // the tradeoff pick is neither extreme of the variety range
+        assert!(scores[mid].variety <= scores[lo].variety);
+        assert!(scores[mid].exec_time <= scores[hi].exec_time);
+    }
+
+    #[test]
+    fn score_graph_order_is_valid_permutation() {
+        let scores = scored_universe(4);
+        for s in scores.iter().take(10) {
+            let mut o = s.order.clone();
+            o.sort_unstable();
+            assert_eq!(o, (0..4).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Property-testing mini-framework (the offline mirror has no proptest).
+//!
+//! `prop_check(name, cases, gen, prop)` draws `cases` inputs from `gen`
+//! with a seeded PCG32 and asserts `prop` on each; failures report the
+//! generator seed and the case so they replay deterministically:
+//! `ANTLER_PROP_SEED=<seed> cargo test <name>` reproduces a failure.
+
+use crate::util::rng::Pcg32;
+
+pub fn prop_seed() -> u64 {
+    std::env::var("ANTLER_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA57_1E5)
+}
+
+/// Run a property over `cases` generated inputs. Panics with the failing
+/// case's Debug form and its seed on the first violation.
+pub fn prop_check<T, G, P>(name: &str, cases: usize, mut gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let base = prop_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Pcg32::seed(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n  \
+                 {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers for common shapes.
+pub mod gen {
+    use crate::util::rng::Pcg32;
+
+    pub fn usize_in(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+
+    pub fn f32_vec(rng: &mut Pcg32, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.gauss() * scale).collect()
+    }
+
+    pub fn permutation(rng: &mut Pcg32, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut v);
+        v
+    }
+
+    /// Random symmetric cost matrix with zero diagonal, entries in [1, hi).
+    pub fn sym_cost_matrix(rng: &mut Pcg32, n: usize, hi: f64) -> Vec<f64> {
+        let mut c = vec![0.0; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 1.0 + rng.f64() * (hi - 1.0);
+                c[i * n + j] = v;
+                c[j * n + i] = v;
+            }
+        }
+        c
+    }
+
+    /// Random DAG precedence set over n nodes (edges i->j only for i<j in a
+    /// random topological relabeling, guaranteeing acyclicity).
+    pub fn precedence_dag(rng: &mut Pcg32, n: usize, edges: usize) -> Vec<(usize, usize)> {
+        let order = permutation(rng, n);
+        let mut set = std::collections::BTreeSet::new();
+        let mut tries = 0;
+        while set.len() < edges && tries < edges * 20 {
+            tries += 1;
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a == b {
+                continue;
+            }
+            let (pa, pb) = (
+                order.iter().position(|&x| x == a).unwrap(),
+                order.iter().position(|&x| x == b).unwrap(),
+            );
+            let (u, v) = if pa < pb { (a, b) } else { (b, a) };
+            set.insert((u, v));
+        }
+        set.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_valid_property() {
+        prop_check(
+            "perm-is-perm",
+            50,
+            |rng| gen::permutation(rng, 8),
+            |p| {
+                let mut s = p.clone();
+                s.sort_unstable();
+                if s == (0..8).collect::<Vec<_>>() {
+                    Ok(())
+                } else {
+                    Err("not a permutation".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn prop_check_reports_failure() {
+        prop_check("always-fails", 5, |rng| rng.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn precedence_dag_is_acyclic() {
+        prop_check(
+            "dag-acyclic",
+            30,
+            |rng| {
+                let n = gen::usize_in(rng, 3, 12);
+                (n, gen::precedence_dag(rng, n, n))
+            },
+            |(n, edges)| {
+                // Kahn's algorithm must consume all nodes.
+                let mut indeg = vec![0usize; *n];
+                for &(_, v) in edges {
+                    indeg[v] += 1;
+                }
+                let mut queue: Vec<usize> =
+                    (0..*n).filter(|&i| indeg[i] == 0).collect();
+                let mut seen = 0;
+                while let Some(u) = queue.pop() {
+                    seen += 1;
+                    for &(a, b) in edges {
+                        if a == u {
+                            indeg[b] -= 1;
+                            if indeg[b] == 0 {
+                                queue.push(b);
+                            }
+                        }
+                    }
+                }
+                if seen == *n {
+                    Ok(())
+                } else {
+                    Err(format!("cycle detected ({} of {} sorted)", seen, n))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,262 @@
+//! Training and evaluation drivers. Python never trains anything: the
+//! AOT `train_*` artifacts compute (loss, updated params) for one SGD
+//! step, and this module drives them from rust — individually per task
+//! (the Vanilla baseline and the affinity-profiling networks) or
+//! interleaved across a task graph (multitask training of shared blocks,
+//! the rust-side analog of the paper's branched-MTL retraining step [59]).
+
+pub mod weights;
+
+pub use weights::GraphWeights;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{ArchSpec, Tensor};
+use crate::runtime::{Arg, Engine};
+use crate::taskgraph::TaskGraph;
+use crate::util::rng::Pcg32;
+
+pub const TRAIN_BATCH: usize = 32;
+pub const EVAL_BATCH: usize = 64;
+
+/// Initialize a fresh flat parameter list for one network instance.
+pub fn init_params(arch: &ArchSpec, ncls: usize, rng: &mut Pcg32) -> Vec<Tensor> {
+    arch.flat_param_shapes(ncls)
+        .into_iter()
+        .map(|s| Tensor::he_init(s, rng))
+        .collect()
+}
+
+/// One SGD step through the AOT train artifact. Returns the loss;
+/// `params` is updated in place.
+pub fn train_step(
+    engine: &Engine,
+    arch: &str,
+    ncls: usize,
+    params: &mut Vec<Tensor>,
+    x: &Tensor,
+    y: &[i32],
+    lr: f32,
+) -> Result<f32> {
+    let name = engine.manifest().train_artifact(arch, ncls);
+    let mut args: Vec<Arg> = Vec::with_capacity(3 + params.len());
+    args.push(Arg::F32(x));
+    args.push(Arg::I32(y));
+    args.push(Arg::ScalarF32(lr));
+    for p in params.iter() {
+        args.push(Arg::F32(p));
+    }
+    let mut out = engine.run(&name, &args)?;
+    if out.len() != params.len() + 1 {
+        return Err(anyhow!("train artifact returned {} outputs", out.len()));
+    }
+    let loss = out[0].data[0];
+    for (i, p) in params.iter_mut().enumerate() {
+        *p = std::mem::replace(&mut out[i + 1], Tensor::zeros(vec![0]));
+    }
+    Ok(loss)
+}
+
+/// Train one network individually: `batch_fn(rng)` supplies (x, y).
+pub fn train_individual(
+    engine: &Engine,
+    arch: &ArchSpec,
+    ncls: usize,
+    steps: usize,
+    lr: f32,
+    rng: &mut Pcg32,
+    mut batch_fn: impl FnMut(&mut Pcg32) -> (Tensor, Vec<i32>),
+) -> Result<(Vec<Tensor>, Vec<f32>)> {
+    let mut params = init_params(arch, ncls, rng);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (x, y) = batch_fn(rng);
+        losses.push(train_step(engine, &arch.name, ncls, &mut params, &x, &y, lr)?);
+    }
+    Ok((params, losses))
+}
+
+/// Multitask training of a task graph: per step, one task is trained
+/// round-robin; its path parameters are assembled from the block store,
+/// stepped, and written back — shared blocks therefore accumulate
+/// gradients from every task that owns them.
+#[allow(clippy::too_many_arguments)]
+pub fn train_graph(
+    engine: &Engine,
+    arch: &ArchSpec,
+    graph: &TaskGraph,
+    ncls: &[usize],
+    store: &mut GraphWeights,
+    steps: usize,
+    lr: f32,
+    rng: &mut Pcg32,
+    mut batch_fn: impl FnMut(usize, &mut Pcg32) -> (Tensor, Vec<i32>),
+) -> Result<Vec<f32>> {
+    // class-weighted round-robin: harder tasks (more classes) take
+    // proportionally more joint steps, then every task gets a head-only
+    // specialization phase with the shared trunk frozen
+    let mut schedule: Vec<usize> = Vec::new();
+    for (t, &c) in ncls.iter().enumerate() {
+        for _ in 0..c.max(2) / 2 {
+            schedule.push(t);
+        }
+    }
+    // gentle joint phase (low lr so conflicting task gradients do not
+    // wreck the shared trunks the individual nets seeded), then a longer
+    // head-only phase at full lr
+    let joint = steps / 2;
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..joint {
+        let task = schedule[step % schedule.len()];
+        let mut params = store.assemble(graph, arch, task);
+        let (x, y) = batch_fn(task, rng);
+        let loss = train_step(
+            engine, &arch.name, ncls[task], &mut params, &x, &y, lr * 0.2,
+        )?;
+        store.write_back(graph, arch, task, params);
+        losses.push(loss);
+    }
+    for step in joint..steps {
+        let task = schedule[step % schedule.len()];
+        let mut params = store.assemble(graph, arch, task);
+        let (x, y) = batch_fn(task, rng);
+        let loss =
+            train_step(engine, &arch.name, ncls[task], &mut params, &x, &y, lr)?;
+        store.write_back_filtered(graph, arch, task, params, true);
+        losses.push(loss);
+    }
+    Ok(losses)
+}
+
+/// Accuracy of a parameter set over a test set, via the batch-64 eval
+/// artifact (the Pallas serving path). The final ragged batch is padded
+/// by repetition and the padding predictions are discarded.
+pub fn evaluate(
+    engine: &Engine,
+    arch: &ArchSpec,
+    ncls: usize,
+    params: &[Tensor],
+    x: &Tensor,
+    y: &[i32],
+) -> Result<f64> {
+    let n = x.shape[0];
+    assert_eq!(n, y.len());
+    let name = engine.manifest().eval_artifact(&arch.name, ncls);
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        let take = (n - done).min(EVAL_BATCH);
+        let batch = if take == EVAL_BATCH {
+            x.slice_batch(done, EVAL_BATCH)
+        } else {
+            // pad by repeating the first rows
+            let part = x.slice_batch(done, take);
+            let pad = x.slice_batch(0, EVAL_BATCH - take);
+            Tensor::concat_batch(&[&part, &pad])
+        };
+        let mut args: Vec<Arg> = vec![Arg::F32(&batch)];
+        for p in params {
+            args.push(Arg::F32(p));
+        }
+        let out = engine.run(&name, &args)?;
+        let logits = &out[0];
+        for i in 0..take {
+            let row = &logits.data[i * ncls..(i + 1) * ncls];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            if pred as i32 == y[done + i] {
+                correct += 1;
+            }
+        }
+        done += take;
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+/// Mean of the last `k` losses — convergence check helper.
+pub fn tail_mean(losses: &[f32], k: usize) -> f32 {
+    let k = k.min(losses.len()).max(1);
+    losses[losses.len() - k..].iter().sum::<f32>() / k as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset_by_name;
+    use crate::model::manifest::default_artifacts_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json")
+            .exists()
+            .then(|| Engine::load(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn individual_training_learns_imu_task() {
+        let Some(eng) = engine() else { return };
+        let arch = eng.manifest().arch("dnn4").unwrap().clone();
+        let ds = dataset_by_name("hhar-s").unwrap().generate(&[128], 360);
+        let (train, test) = ds.split();
+        let mut rng = Pcg32::seed(1);
+        let (params, losses) = train_individual(
+            &eng,
+            &arch,
+            2,
+            60,
+            0.05,
+            &mut rng,
+            |r| ds.balanced_batch(0, &train, TRAIN_BATCH, r),
+        )
+        .unwrap();
+        assert!(
+            tail_mean(&losses, 10) < losses[0] * 0.8,
+            "loss did not fall: {} -> {}",
+            losses[0],
+            tail_mean(&losses, 10)
+        );
+        let (xt, yt) = ds.gather(&test, 0);
+        let acc = evaluate(&eng, &arch, 2, &params, &xt, &yt).unwrap();
+        assert!(acc > 0.7, "accuracy {acc}");
+    }
+
+    #[test]
+    fn graph_training_updates_shared_blocks() {
+        let Some(eng) = engine() else { return };
+        let arch = eng.manifest().arch("dnn4").unwrap().clone();
+        let graph = TaskGraph::shared(2, TaskGraph::default_bounds(4, 3));
+        let ncls = vec![2, 2];
+        let mut rng = Pcg32::seed(2);
+        let mut store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+        let ds = dataset_by_name("hhar-s").unwrap().generate(&[128], 240);
+        let (train, _) = ds.split();
+        let before = store.assemble(&graph, &arch, 0);
+        let losses = train_graph(
+            &eng,
+            &arch,
+            &graph,
+            &ncls,
+            &mut store,
+            20,
+            0.05,
+            &mut rng,
+            |task, r| ds.balanced_batch(task, &train, TRAIN_BATCH, r),
+        )
+        .unwrap();
+        assert_eq!(losses.len(), 20);
+        // the shared trunk moved
+        let after = store.assemble(&graph, &arch, 0);
+        assert!(before[0].l2_dist(&after[0]) > 0.0);
+        // task 1's head differs from task 0's head (private blocks)
+        let p0 = store.assemble(&graph, &arch, 0);
+        let p1 = store.assemble(&graph, &arch, 1);
+        let last = p0.len() - 2;
+        assert!(p0[last].l2_dist(&p1[last]) > 0.0);
+        // but they share the trunk tensors exactly
+        assert_eq!(p0[0], p1[0]);
+    }
+}

@@ -1,0 +1,257 @@
+//! Block-granular weight store for a task graph: one parameter set per
+//! (segment, group) block. Assembling a task's flat parameter list walks
+//! its root→leaf path; writing back after a training step updates the
+//! blocks in place, which is how shared blocks receive gradients from
+//! every task that owns them.
+
+use crate::model::{ArchSpec, Tensor};
+use crate::taskgraph::TaskGraph;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct GraphWeights {
+    /// blocks[segment][group] = flat [w, b] tensors of that segment's
+    /// layers, in layer order.
+    pub blocks: Vec<Vec<Vec<Tensor>>>,
+}
+
+impl GraphWeights {
+    /// He-initialize every block. Logits shapes use the owning task's
+    /// class count (private head blocks by construction).
+    pub fn init(
+        graph: &TaskGraph,
+        arch: &ArchSpec,
+        ncls: &[usize],
+        rng: &mut Pcg32,
+    ) -> GraphWeights {
+        let mut blocks = Vec::with_capacity(graph.n_segments());
+        for (s, p) in graph.partitions.iter().enumerate() {
+            let mut seg = Vec::new();
+            for tasks in p.groups() {
+                let mut tensors = Vec::new();
+                for l in graph.segment_layers(arch, s) {
+                    let spec = &arch.layers[l];
+                    let c = if spec.cfg.get("dout") == Some(&0) {
+                        ncls[tasks[0]]
+                    } else {
+                        2
+                    };
+                    for shape in spec.param_shapes(c) {
+                        tensors.push(Tensor::he_init(shape, rng));
+                    }
+                }
+                seg.push(tensors);
+            }
+            blocks.push(seg);
+        }
+        GraphWeights { blocks }
+    }
+
+    /// Build a store for an already-trained parameter set per task
+    /// (e.g. Vanilla nets dropped into a disjoint graph). `per_task[t]`
+    /// is a flat [w0, b0, ...] list. Shared blocks take task-0-in-group's
+    /// tensors (the retraining step then reconciles them).
+    pub fn from_task_params(
+        graph: &TaskGraph,
+        arch: &ArchSpec,
+        per_task: &[Vec<Tensor>],
+    ) -> GraphWeights {
+        let mut blocks = Vec::with_capacity(graph.n_segments());
+        for (s, p) in graph.partitions.iter().enumerate() {
+            let mut seg = Vec::new();
+            for tasks in p.groups() {
+                let owner = tasks[0];
+                let mut tensors = Vec::new();
+                for l in graph.segment_layers(arch, s) {
+                    tensors.push(per_task[owner][2 * l].clone());
+                    tensors.push(per_task[owner][2 * l + 1].clone());
+                }
+                seg.push(tensors);
+            }
+            blocks.push(seg);
+        }
+        GraphWeights { blocks }
+    }
+
+    /// Flat [w0, b0, ..., wk, bk] parameter list along `task`'s path.
+    pub fn assemble(&self, graph: &TaskGraph, arch: &ArchSpec, task: usize) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(2 * arch.n_layers());
+        for s in 0..graph.n_segments() {
+            let g = graph.group_of(s, task);
+            out.extend(self.blocks[s][g].iter().cloned());
+        }
+        debug_assert_eq!(out.len(), 2 * arch.n_layers());
+        out
+    }
+
+    /// Write an updated flat parameter list back into the blocks.
+    pub fn write_back(
+        &mut self,
+        graph: &TaskGraph,
+        arch: &ArchSpec,
+        task: usize,
+        params: Vec<Tensor>,
+    ) {
+        self.write_back_filtered(graph, arch, task, params, false)
+    }
+
+    /// Write back, optionally touching only the task-PRIVATE blocks
+    /// (singleton groups) — the head-specialization phase of multitask
+    /// training: shared trunks stay frozen while each task's private
+    /// layers adapt.
+    pub fn write_back_filtered(
+        &mut self,
+        graph: &TaskGraph,
+        arch: &ArchSpec,
+        task: usize,
+        params: Vec<Tensor>,
+        private_only: bool,
+    ) {
+        assert_eq!(params.len(), 2 * arch.n_layers());
+        let mut it = params.into_iter();
+        for s in 0..graph.n_segments() {
+            let g = graph.group_of(s, task);
+            let private = graph.partitions[s].groups()[g].len() == 1;
+            for slot in self.blocks[s][g].iter_mut() {
+                let p = it.next().expect("param count");
+                if !private_only || private {
+                    *slot = p;
+                }
+            }
+        }
+    }
+
+    /// Total stored bytes (must agree with `TaskGraph::model_bytes`).
+    pub fn total_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .flat_map(|seg| seg.iter())
+            .flat_map(|blk| blk.iter())
+            .map(|t| t.bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::Partition;
+
+    const TINY: &str = r#"{
+      "version": 1,
+      "archs": {"cnn5": {"input": [16,16,1], "ncls": [2],
+        "layers": [
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+          {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
+          {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
+          {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+          {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}
+        ]}},
+      "entries": []
+    }"#;
+
+    fn arch() -> ArchSpec {
+        crate::model::manifest::Manifest::from_json(
+            std::path::PathBuf::from("/tmp"),
+            &crate::util::json::Json::parse(TINY).unwrap(),
+        )
+        .unwrap()
+        .arch("cnn5")
+        .unwrap()
+        .clone()
+    }
+
+    fn graph() -> TaskGraph {
+        TaskGraph::new(
+            3,
+            vec![1, 3, 4],
+            vec![
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 1]),
+                Partition(vec![0, 1, 2]),
+                Partition::singletons(3),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn assemble_has_full_param_list() {
+        let arch = arch();
+        let g = graph();
+        let mut rng = Pcg32::seed(3);
+        let store = GraphWeights::init(&g, &arch, &[2, 3, 5], &mut rng);
+        for (t, &c) in [2usize, 3, 5].iter().enumerate() {
+            let params = store.assemble(&g, &arch, t);
+            let shapes: Vec<Vec<usize>> =
+                params.iter().map(|p| p.shape.clone()).collect();
+            assert_eq!(shapes, arch.flat_param_shapes(c), "task {t}");
+        }
+    }
+
+    #[test]
+    fn shared_blocks_are_shared_private_are_not() {
+        let arch = arch();
+        let g = graph();
+        let mut rng = Pcg32::seed(4);
+        let store = GraphWeights::init(&g, &arch, &[2, 2, 2], &mut rng);
+        let p0 = store.assemble(&g, &arch, 0);
+        let p1 = store.assemble(&g, &arch, 1);
+        let p2 = store.assemble(&g, &arch, 2);
+        assert_eq!(p0[0], p1[0]); // segment 0 shared by all
+        assert_eq!(p0[0], p2[0]);
+        assert_eq!(p0[2], p1[2]); // segment 1 shared by 0,1
+        assert_ne!(p0[2], p2[2]); // ...but not by 2
+        assert_ne!(p0[8], p1[8]); // heads private
+    }
+
+    #[test]
+    fn write_back_propagates_to_groupmates() {
+        let arch = arch();
+        let g = graph();
+        let mut rng = Pcg32::seed(5);
+        let mut store = GraphWeights::init(&g, &arch, &[2, 2, 2], &mut rng);
+        let mut params = store.assemble(&g, &arch, 0);
+        for p in params.iter_mut() {
+            for v in p.data.iter_mut() {
+                *v += 1.0;
+            }
+        }
+        store.write_back(&g, &arch, 0, params.clone());
+        let p1 = store.assemble(&g, &arch, 1);
+        // task 1 sees task 0's update on shared segments 0 and 1
+        assert_eq!(p1[0], params[0]);
+        assert_eq!(p1[2], params[2]);
+        // but not on the private head
+        assert_ne!(p1[8], params[8]);
+    }
+
+    #[test]
+    fn total_bytes_matches_graph_model_bytes() {
+        let arch = arch();
+        let g = graph();
+        let mut rng = Pcg32::seed(6);
+        let ncls = vec![2usize, 3, 5];
+        let store = GraphWeights::init(&g, &arch, &ncls, &mut rng);
+        assert_eq!(store.total_bytes(), g.model_bytes(&arch, &ncls));
+    }
+
+    #[test]
+    fn from_task_params_roundtrip_disjoint() {
+        let arch = arch();
+        let g = TaskGraph::disjoint(2, vec![1, 3, 4]);
+        let mut rng = Pcg32::seed(7);
+        let per_task: Vec<Vec<Tensor>> = (0..2)
+            .map(|_| {
+                arch.flat_param_shapes(2)
+                    .into_iter()
+                    .map(|s| Tensor::he_init(s, &mut rng))
+                    .collect()
+            })
+            .collect();
+        let store = GraphWeights::from_task_params(&g, &arch, &per_task);
+        for t in 0..2 {
+            assert_eq!(store.assemble(&g, &arch, t), per_task[t]);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! The Table 3 instance set. FIVE is the public five-city dataset
+//! verbatim (optimal tour 19). The remaining TSPLIB/SOP matrices are
+//! size-matched seeded analogs (same node / precedence / conditional
+//! counts as the paper's table; the offline environment has no TSPLIB
+//! copy). "Optimal" is always computed by the exact solver, so the
+//! GA-vs-optimal comparison the table makes is preserved instance by
+//! instance.
+
+use crate::ordering::OrderingProblem;
+use crate::testkit::gen;
+use crate::util::rng::Pcg32;
+
+use super::parser::parse_tsplib;
+
+/// The classic 5-city instance (Burkardt's `five.tsp`); optimal tour 19.
+pub const FIVE: &str = "NAME: five\nTYPE: TSP\nDIMENSION: 5\n\
+EDGE_WEIGHT_TYPE: EXPLICIT\nEDGE_WEIGHT_FORMAT: FULL_MATRIX\n\
+EDGE_WEIGHT_SECTION\n\
+0 3 4 2 7\n\
+3 0 4 6 3\n\
+4 4 0 5 8\n\
+2 6 5 0 6\n\
+7 3 8 6 0\n\
+EOF\n";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Regular,
+    Precedence,
+    Conditional,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table3Instance {
+    pub name: &'static str,
+    pub variant: Variant,
+    pub nodes: usize,
+    pub n_precedence: usize,
+    pub n_conditional: usize,
+    pub problem: OrderingProblem,
+}
+
+fn synthetic(
+    name: &'static str,
+    variant: Variant,
+    nodes: usize,
+    n_prec: usize,
+    n_cond: usize,
+    seed: u64,
+    cyclic: bool,
+) -> Table3Instance {
+    let mut rng = Pcg32::seed(seed);
+    let flat = gen::sym_cost_matrix(&mut rng, nodes, 400.0);
+    let cost: Vec<Vec<f64>> = (0..nodes)
+        .map(|i| flat[i * nodes..(i + 1) * nodes].iter().map(|x| x.round()).collect())
+        .collect();
+    let all_edges = gen::precedence_dag(&mut rng, nodes, n_prec + n_cond);
+    let (cond_edges, prec_edges) = all_edges.split_at(n_cond.min(all_edges.len()));
+    let conditional: Vec<(usize, usize, f64)> = cond_edges
+        .iter()
+        .map(|&(a, b)| (a, b, (0.5 + rng.f64() * 0.5 * 10.0).round() / 10.0))
+        .map(|(a, b, p)| (a, b, p.clamp(0.5, 1.0)))
+        .collect();
+    let mut p = OrderingProblem::from_matrix(cost)
+        .with_precedence(prec_edges.to_vec())
+        .with_conditional(conditional);
+    if cyclic {
+        p = p.cyclic();
+    }
+    Table3Instance {
+        name,
+        variant,
+        nodes,
+        n_precedence: prec_edges.len(),
+        n_conditional: n_cond,
+        problem: p,
+    }
+}
+
+/// Build the nine Table 3 rows: three regular, three precedence, three
+/// conditional instances with the paper's node/constraint counts.
+pub fn table3_instances() -> Vec<Table3Instance> {
+    let five = Table3Instance {
+        name: "FIVE",
+        variant: Variant::Regular,
+        nodes: 5,
+        n_precedence: 0,
+        n_conditional: 0,
+        problem: parse_tsplib(FIVE, true).expect("embedded FIVE parses"),
+    };
+    vec![
+        five,
+        synthetic("P01*", Variant::Regular, 15, 0, 0, 1501, true),
+        synthetic("GR17*", Variant::Regular, 17, 0, 0, 1701, true),
+        synthetic("ESC07*", Variant::Precedence, 9, 6, 0, 907, false),
+        synthetic("ESC11*", Variant::Precedence, 13, 3, 0, 1311, false),
+        synthetic("br17.12*", Variant::Precedence, 17, 12, 0, 1712, false),
+        synthetic("ESC07c*", Variant::Conditional, 9, 6, 3, 917, false),
+        synthetic("ESC11c*", Variant::Conditional, 13, 3, 3, 1321, false),
+        synthetic("ESC12c*", Variant::Conditional, 14, 7, 3, 1412, false),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::{solve_brute, solve_held_karp};
+
+    #[test]
+    fn five_optimal_tour_is_19() {
+        let p = parse_tsplib(FIVE, true).unwrap();
+        let s = solve_held_karp(&p).unwrap();
+        assert_eq!(s.cost.round() as i64, 19);
+        let b = solve_brute(&p).unwrap();
+        assert_eq!(b.cost.round() as i64, 19);
+    }
+
+    #[test]
+    fn table3_counts_match_paper_rows() {
+        let inst = table3_instances();
+        assert_eq!(inst.len(), 9);
+        let by_name: std::collections::HashMap<_, _> =
+            inst.iter().map(|i| (i.name, i)).collect();
+        assert_eq!(by_name["FIVE"].nodes, 5);
+        assert_eq!(by_name["P01*"].nodes, 15);
+        assert_eq!(by_name["GR17*"].nodes, 17);
+        assert_eq!(by_name["ESC07*"].nodes, 9);
+        assert_eq!(by_name["ESC07*"].n_precedence, 6);
+        assert_eq!(by_name["ESC11*"].n_precedence, 3);
+        assert_eq!(by_name["br17.12*"].n_precedence, 12);
+        assert_eq!(by_name["ESC12c*"].n_conditional, 3);
+        assert_eq!(by_name["ESC12c*"].nodes, 14);
+    }
+
+    #[test]
+    fn all_instances_feasible() {
+        for inst in table3_instances() {
+            if inst.nodes <= 17 {
+                let s = solve_held_karp(&inst.problem);
+                assert!(s.is_some(), "{} infeasible", inst.name);
+                assert!(inst.problem.is_valid(&s.unwrap().order), "{}", inst.name);
+            }
+        }
+    }
+
+    #[test]
+    fn conditional_instances_have_probabilities_in_range() {
+        for inst in table3_instances() {
+            for &(_, _, p) in &inst.problem.conditional {
+                assert!((0.5..=1.0).contains(&p), "{}: p={}", inst.name, p);
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! TSPLIB-format instances for Table 3 (GA vs optimal task ordering).
+//!
+//! Parser for EXPLICIT edge-weight TSP/SOP files (FULL_MATRIX,
+//! LOWER_DIAG_ROW, UPPER_ROW) plus the embedded instance set. The FIVE
+//! instance is the public Burkardt dataset verbatim; the larger TSPLIB
+//! matrices are not redistributable/offline here, so size-matched seeded
+//! analogs stand in (same node / precedence / conditional counts as Table
+//! 3), and the "Optimal" column is computed by the exact Held–Karp solver
+//! rather than read from the TSPLIB index — see DESIGN.md, Substitutions.
+
+pub mod instances;
+pub mod parser;
+
+pub use instances::{table3_instances, Table3Instance, Variant};
+pub use parser::parse_tsplib;

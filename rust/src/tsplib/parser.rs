@@ -1,0 +1,176 @@
+//! Minimal TSPLIB parser: EXPLICIT edge weights in FULL_MATRIX,
+//! LOWER_DIAG_ROW or UPPER_ROW layout. SOP-style instances mark
+//! precedence with -1 entries (`c[i][j] == -1` ⇒ j must precede i).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ordering::OrderingProblem;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Format {
+    FullMatrix,
+    LowerDiagRow,
+    UpperRow,
+}
+
+/// Parse TSPLIB text into an ordering problem. `cyclic` selects the tour
+/// (TSP) vs path (SOP) objective.
+pub fn parse_tsplib(text: &str, cyclic: bool) -> Result<OrderingProblem> {
+    let mut dim: Option<usize> = None;
+    let mut fmt: Option<Format> = None;
+    let mut weights: Vec<f64> = Vec::new();
+    let mut in_weights = false;
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line == "EOF" {
+            continue;
+        }
+        if in_weights {
+            if line.contains(':') || line.ends_with("SECTION") {
+                in_weights = false;
+            } else {
+                for tok in line.split_whitespace() {
+                    weights.push(
+                        tok.parse::<f64>()
+                            .map_err(|_| anyhow!("bad weight token {tok:?}"))?,
+                    );
+                }
+                continue;
+            }
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "DIMENSION" => dim = Some(v.parse()?),
+                "EDGE_WEIGHT_FORMAT" => {
+                    fmt = Some(match v {
+                        "FULL_MATRIX" => Format::FullMatrix,
+                        "LOWER_DIAG_ROW" => Format::LowerDiagRow,
+                        "UPPER_ROW" => Format::UpperRow,
+                        other => bail!("unsupported EDGE_WEIGHT_FORMAT {other}"),
+                    })
+                }
+                _ => {}
+            }
+        } else if line == "EDGE_WEIGHT_SECTION" {
+            in_weights = true;
+        }
+    }
+
+    let n = dim.ok_or_else(|| anyhow!("missing DIMENSION"))?;
+    let fmt = fmt.unwrap_or(Format::FullMatrix);
+    let mut c = vec![vec![0.0f64; n]; n];
+    match fmt {
+        Format::FullMatrix => {
+            if weights.len() != n * n {
+                bail!("expected {} weights, got {}", n * n, weights.len());
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    c[i][j] = weights[i * n + j];
+                }
+            }
+        }
+        Format::LowerDiagRow => {
+            let expect = n * (n + 1) / 2;
+            if weights.len() != expect {
+                bail!("expected {} weights, got {}", expect, weights.len());
+            }
+            let mut it = weights.iter();
+            for i in 0..n {
+                for j in 0..=i {
+                    let w = *it.next().unwrap();
+                    c[i][j] = w;
+                    c[j][i] = w;
+                }
+            }
+        }
+        Format::UpperRow => {
+            let expect = n * (n - 1) / 2;
+            if weights.len() != expect {
+                bail!("expected {} weights, got {}", expect, weights.len());
+            }
+            let mut it = weights.iter();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let w = *it.next().unwrap();
+                    c[i][j] = w;
+                    c[j][i] = w;
+                }
+            }
+        }
+    }
+
+    // SOP convention: -1 marks precedence (j before i); cost becomes 0.
+    let mut precedence = Vec::new();
+    for i in 0..n {
+        for j in 0..n {
+            if c[i][j] < 0.0 {
+                precedence.push((j, i));
+                c[i][j] = 0.0;
+            }
+        }
+    }
+
+    let mut p = OrderingProblem::from_matrix(c).with_precedence(precedence);
+    if cyclic {
+        p = p.cyclic();
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = "NAME: t3\nTYPE: TSP\nDIMENSION: 3\n\
+EDGE_WEIGHT_TYPE: EXPLICIT\nEDGE_WEIGHT_FORMAT: FULL_MATRIX\n\
+EDGE_WEIGHT_SECTION\n0 1 2\n1 0 3\n2 3 0\nEOF\n";
+
+    #[test]
+    fn parses_full_matrix() {
+        let p = parse_tsplib(FULL, true).unwrap();
+        assert_eq!(p.n, 3);
+        assert_eq!(p.cost[0][1], 1.0);
+        assert_eq!(p.cost[2][1], 3.0);
+        assert!(p.cyclic);
+        assert!(p.precedence.is_empty());
+    }
+
+    #[test]
+    fn parses_lower_diag_row() {
+        let text = "DIMENSION: 3\nEDGE_WEIGHT_FORMAT: LOWER_DIAG_ROW\n\
+EDGE_WEIGHT_SECTION\n0\n5 0\n7 9 0\nEOF\n";
+        let p = parse_tsplib(text, false).unwrap();
+        assert_eq!(p.cost[0][1], 5.0);
+        assert_eq!(p.cost[1][0], 5.0);
+        assert_eq!(p.cost[2][1], 9.0);
+    }
+
+    #[test]
+    fn parses_sop_precedence() {
+        let text = "DIMENSION: 3\nEDGE_WEIGHT_FORMAT: FULL_MATRIX\n\
+EDGE_WEIGHT_SECTION\n0 1 2\n-1 0 3\n2 3 0\nEOF\n";
+        let p = parse_tsplib(text, false).unwrap();
+        // c[1][0] == -1 => task 0 must precede task 1
+        assert_eq!(p.precedence, vec![(0, 1)]);
+        assert_eq!(p.cost[1][0], 0.0);
+    }
+
+    #[test]
+    fn rejects_wrong_weight_count() {
+        let text = "DIMENSION: 3\nEDGE_WEIGHT_FORMAT: FULL_MATRIX\n\
+EDGE_WEIGHT_SECTION\n0 1\nEOF\n";
+        assert!(parse_tsplib(text, false).is_err());
+    }
+
+    #[test]
+    fn tolerates_multiline_weights() {
+        let text = "DIMENSION: 2\nEDGE_WEIGHT_FORMAT: FULL_MATRIX\n\
+EDGE_WEIGHT_SECTION\n0\n4 4\n0\nEOF\n";
+        let p = parse_tsplib(text, false).unwrap();
+        assert_eq!(p.cost[0][1], 4.0);
+        assert_eq!(p.cost[1][0], 4.0);
+    }
+}

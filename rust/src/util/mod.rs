@@ -1,0 +1,9 @@
+//! Hand-rolled substrates. The offline crate mirror for this environment
+//! carries only `xla` + its transitive deps, so the usual serde / rand /
+//! clap / criterion stack is re-implemented here at the size this project
+//! needs (see DESIGN.md, Substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,151 @@
+//! End-to-end tests over the real PJRT runtime (skipped gracefully when
+//! `make artifacts` has not run): blockwise serving equals whole-network
+//! inference, training converges, conditional skipping reduces work.
+
+use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
+use antler::data::{audio_stream_spec, dataset_by_name};
+use antler::device::Device;
+use antler::model::manifest::default_artifacts_dir;
+use antler::runtime::Engine;
+use antler::taskgraph::TaskGraph;
+use antler::trainer::GraphWeights;
+
+fn engine() -> Option<Engine> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Engine::load(&dir).expect("engine loads"))
+}
+
+#[test]
+fn imu_pipeline_serves_accurately() {
+    let Some(eng) = engine() else { return };
+    let spec = dataset_by_name("hhar-s").unwrap();
+    let ds = spec.generate(&[128], 360);
+    let cfg = pipeline::PrepareConfig {
+        steps_individual: 60,
+        steps_retrain: 90,
+        max_graphs: 120,
+        device: Device::msp430(),
+        ..Default::default()
+    };
+    let prep = pipeline::prepare(&eng, "dnn4", &ds, &cfg).unwrap();
+
+    // serving answers must match the batch-eval answers for each task
+    let mut ex = BlockExecutor::new(
+        &eng,
+        Device::msp430(),
+        prep.arch.clone(),
+        prep.graph.clone(),
+        prep.ncls.clone(),
+        prep.store.clone(),
+    );
+    ex.warmup().unwrap();
+    let mut agree = 0;
+    let mut total = 0;
+    for (i, sample_idx) in [0usize, 7, 21, 40].into_iter().enumerate() {
+        let x = ds.x.slice_batch(sample_idx, 1);
+        for t in 0..prep.ncls.len() {
+            let (pred, _) = ex.run_task(i as u64, t, &x).unwrap();
+            // reference via eval artifact at batch 64
+            let params = prep.store.assemble(&prep.graph, &prep.arch, t);
+            let mut big = vec![0.0f32; 64 * 128];
+            big[..128].copy_from_slice(&x.data);
+            let xb = antler::model::Tensor::new(vec![64, 128], big);
+            let mut args = vec![antler::runtime::Arg::F32(&xb)];
+            for p in &params {
+                args.push(antler::runtime::Arg::F32(p));
+            }
+            let out = eng.run("eval_dnn4_c2", &args).unwrap();
+            let row = &out[0].data[0..2];
+            let want = (row[1] > row[0]) as usize;
+            total += 1;
+            if pred == want {
+                agree += 1;
+            }
+        }
+    }
+    assert_eq!(agree, total, "blockwise serving diverged from batch eval");
+}
+
+#[test]
+fn conditional_serving_skips_and_saves() {
+    let Some(eng) = engine() else { return };
+    let spec = audio_stream_spec();
+    let data = spec.generate(400);
+    let cfg = pipeline::PrepareConfig {
+        steps_individual: 40,
+        steps_retrain: 60,
+        max_graphs: 100,
+        device: Device::msp430(),
+        ..Default::default()
+    };
+    let prep = pipeline::prepare(&eng, "cnn5", &data, &cfg).unwrap();
+    let n = prep.ncls.len();
+    let frames: Vec<_> = (0..30u64)
+        .map(|i| (i, data.x.slice_batch(i as usize % data.len(), 1)))
+        .collect();
+
+    let run = |conditional: Vec<(usize, usize)>| {
+        let mut ex = BlockExecutor::new(
+            &eng,
+            Device::msp430(),
+            prep.arch.clone(),
+            prep.graph.clone(),
+            prep.ncls.clone(),
+            prep.store.clone(),
+        );
+        ex.warmup().unwrap();
+        let mut order = prep.order.clone();
+        // presence first so it can gate
+        order.retain(|&t| t != 0);
+        order.insert(0, 0);
+        let plan = ServePlan { order, conditional };
+        serve(&mut ex, &plan, frames.clone(), 64, None).unwrap()
+    };
+    let unconditional = run(vec![]);
+    let conditional = run((1..n).map(|t| (0usize, t)).collect());
+    assert_eq!(unconditional.frames, 30);
+    assert_eq!(conditional.frames, 30);
+    // with ~80% presence the conditional run skips some dependents and
+    // never costs more
+    assert!(conditional.sim_time_per_frame_s <= unconditional.sim_time_per_frame_s + 1e-12);
+    if conditional.tasks_skipped > 0 {
+        assert!(conditional.sim_time_per_frame_s < unconditional.sim_time_per_frame_s);
+    }
+}
+
+#[test]
+fn vanilla_store_roundtrip_serves() {
+    let Some(eng) = engine() else { return };
+    let spec = dataset_by_name("hhar-s").unwrap();
+    let ds = spec.generate(&[128], 240);
+    let arch = eng.manifest().arch("dnn4").unwrap().clone();
+    let graph = TaskGraph::disjoint(3, TaskGraph::default_bounds(4, 3));
+    let mut rng = antler::util::rng::Pcg32::seed(3);
+    let per_task: Vec<Vec<antler::model::Tensor>> = (0..3)
+        .map(|_| {
+            arch.flat_param_shapes(2)
+                .into_iter()
+                .map(|s| antler::model::Tensor::he_init(s, &mut rng))
+                .collect()
+        })
+        .collect();
+    let store = GraphWeights::from_task_params(&graph, &arch, &per_task);
+    let mut ex = BlockExecutor::new(
+        &eng,
+        Device::msp430(),
+        arch,
+        graph,
+        vec![2, 2, 2],
+        store,
+    );
+    let x = ds.x.slice_batch(0, 1);
+    for t in 0..3 {
+        let (pred, cost) = ex.run_task(0, t, &x).unwrap();
+        assert!(pred < 2);
+        assert!(cost.time() > 0.0);
+    }
+    // disjoint graph: zero activation reuse
+    assert_eq!(ex.layer_skips, 0);
+}

@@ -1,0 +1,204 @@
+//! Cross-module integration tests (no PJRT artifacts required): the
+//! algorithmic pipeline — affinity → enumeration → selection → ordering →
+//! cost simulation — plus solver cross-validation and coordinator
+//! invariants under the property-testing harness.
+
+use antler::affinity::synthetic_affinity;
+use antler::baselines::{self, SystemKind};
+use antler::bench::figures_sim::arch_specs;
+use antler::device::Device;
+use antler::memory::{cost_matrix, ExecSim};
+use antler::ordering::{
+    solve_brute, solve_genetic, solve_held_karp, GaConfig, OrderingProblem,
+};
+use antler::taskgraph::select::{score_graph, select_tradeoff, tradeoff_curve};
+use antler::taskgraph::{enumerate, TaskGraph};
+use antler::testkit::{gen, prop_check};
+use antler::tsplib::table3_instances;
+use antler::util::rng::Pcg32;
+
+#[test]
+fn full_sim_pipeline_five_tasks() {
+    let archs = arch_specs();
+    let arch = &archs["cnn5"];
+    let device = Device::msp430();
+    let mut rng = Pcg32::seed(1);
+    let aff = synthetic_affinity(5, 3, &mut rng);
+    let graphs = enumerate::enumerate_all(5, &[1, 3, 4], None);
+    assert!(graphs.len() > 100, "5-task universe: {}", graphs.len());
+    let ncls = vec![2usize; 5];
+    let scores: Vec<_> = graphs
+        .iter()
+        .map(|g| score_graph(g, &aff, arch, &ncls, &device))
+        .collect();
+    let curve = tradeoff_curve(&scores);
+    let sel = select_tradeoff(&scores);
+    // the tradeoff point must not be an extreme of either trend
+    let vmax = scores.iter().map(|s| s.variety).fold(0.0, f64::max);
+    let cmax = scores.iter().map(|s| s.exec_time).fold(0.0, f64::max);
+    assert!(scores[sel].variety < vmax);
+    assert!(scores[sel].exec_time < cmax);
+    assert!(curve.len() > 3);
+}
+
+#[test]
+fn optimal_order_beats_worst_order_in_simulation() {
+    // the §4 claim, checked against the *simulator* not the cost matrix:
+    // the solver's order is no worse than any of 50 random orders
+    let archs = arch_specs();
+    let arch = &archs["cnn5"];
+    let device = Device::msp430();
+    let mut rng = Pcg32::seed(5);
+    let aff = synthetic_affinity(6, 3, &mut rng);
+    let graphs = enumerate::clustered(&aff, &[1, 3, 4], 100);
+    let g = &graphs[graphs.len() / 2];
+    let ncls = vec![2usize; 6];
+    let c = cost_matrix(&device, arch, g, &ncls, false);
+    let sol = solve_held_karp(&OrderingProblem::from_matrix(c)).unwrap();
+    let mut sim = ExecSim::new(&device, arch, g, &ncls);
+    let best = sim.steady_round_cost(&sol.order, 3).time();
+    for _ in 0..50 {
+        let perm = gen::permutation(&mut rng, 6);
+        let mut sim2 = ExecSim::new(&device, arch, g, &ncls);
+        let t = sim2.steady_round_cost(&perm, 3).time();
+        assert!(best <= t * 1.2 + 1e-12, "best {} vs random {}", best, t);
+    }
+}
+
+#[test]
+fn three_solvers_agree_on_table3_small_instances() {
+    for inst in table3_instances() {
+        if inst.nodes > 11 {
+            continue;
+        }
+        let hk = solve_held_karp(&inst.problem).unwrap();
+        let bf = solve_brute(&inst.problem).unwrap();
+        assert!((hk.cost - bf.cost).abs() < 1e-9, "{}", inst.name);
+        let ga = solve_genetic(&inst.problem, &GaConfig::default()).unwrap();
+        assert!(ga.cost >= hk.cost - 1e-9, "{}", inst.name);
+        assert!(ga.cost <= hk.cost * 1.06 + 1e-9, "{}: ga {} hk {}", inst.name, ga.cost, hk.cost);
+    }
+}
+
+#[test]
+fn prop_cost_matrix_triangle_consistency() {
+    // switching costs decompose by shared prefix: if i and j share more
+    // segments than i and k, then c[i][j] <= c[i][k]
+    let archs = arch_specs();
+    let arch = archs["cnn5"].clone();
+    prop_check(
+        "cost-matrix-prefix-monotone",
+        30,
+        |rng| {
+            let aff = synthetic_affinity(6, 3, rng);
+            let graphs = enumerate::clustered(&aff, &[1, 3, 4], 60);
+            let pick = rng.below(graphs.len());
+            graphs[pick].clone()
+        },
+        |g| {
+            let device = Device::msp430();
+            let ncls = vec![2usize; 6];
+            let c = cost_matrix(&device, &arch, g, &ncls, false);
+            for i in 0..6 {
+                for j in 0..6 {
+                    for k in 0..6 {
+                        if i == j || i == k {
+                            continue;
+                        }
+                        let pj = g.shared_prefix(i, j);
+                        let pk = g.shared_prefix(i, k);
+                        if pj > pk && c[i][j] > c[i][k] + 1e-12 {
+                            return Err(format!(
+                                "prefix {} vs {} but cost {} vs {}",
+                                pj, pk, c[i][j], c[i][k]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_round_cost_invariant_under_sample_id() {
+    let archs = arch_specs();
+    let arch = archs["cnn5"].clone();
+    prop_check(
+        "round-cost-sample-invariant",
+        20,
+        |rng| {
+            let aff = synthetic_affinity(5, 3, rng);
+            let graphs = enumerate::clustered(&aff, &[1, 3, 4], 40);
+            let g = graphs[rng.below(graphs.len())].clone();
+            let order = gen::permutation(rng, 5);
+            (g, order)
+        },
+        |(g, order)| {
+            let device = Device::msp430();
+            let ncls = vec![2usize; 5];
+            let mut sim = ExecSim::new(&device, &arch, g, &ncls);
+            let a = sim.run_round(1, order).time();
+            let mut sim2 = ExecSim::new(&device, &arch, g, &ncls);
+            let b = sim2.run_round(99, order).time();
+            if (a - b).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err(format!("{a} vs {b}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_antler_never_worse_than_vanilla() {
+    // for ANY graph and ANY order, antler's steady round cost is within
+    // epsilon of (and virtually always below) the vanilla disjoint cost
+    let archs = arch_specs();
+    let arch = archs["cnn5"].clone();
+    prop_check(
+        "antler-dominates-vanilla",
+        25,
+        |rng| {
+            let aff = synthetic_affinity(6, 3, rng);
+            let graphs = enumerate::clustered(&aff, &[1, 3, 4], 50);
+            graphs[rng.below(graphs.len())].clone()
+        },
+        |g| {
+            let device = Device::msp430();
+            let ncls = vec![2usize; 6];
+            let order: Vec<usize> = (0..6).collect();
+            let inp = baselines::CostInputs {
+                device: &device,
+                arch: &arch,
+                ncls: &ncls,
+                antler_graph: g,
+                antler_order: &order,
+                nws_ext_bytes_per_task: 0,
+            };
+            let antler = baselines::round_cost(SystemKind::Antler, &inp).time();
+            let vanilla = baselines::round_cost(SystemKind::Vanilla, &inp).time();
+            if antler <= vanilla + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("antler {antler} > vanilla {vanilla}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn deployment_bounds_fit_architectures() {
+    let archs = arch_specs();
+    for (name, arch) in &archs {
+        for d in 1..=7 {
+            let bounds = TaskGraph::default_bounds(arch.n_layers(), d);
+            assert!(!bounds.is_empty(), "{name} d={d}");
+            assert!(*bounds.last().unwrap() < arch.n_layers());
+            for w in bounds.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}
