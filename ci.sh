@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI gate. The suite must never pass vacuously: the default build has no
+# PJRT feature, so every engine test runs on the pure-Rust reference
+# backend — zero artifact-gated skips.
+#
+#   ./ci.sh            # tier-1 gate (whole suite on the reference backend)
+#   ./ci.sh --pjrt     # additionally build+test with --features pjrt
+#                      # (runs the PJRT/parity tests when artifacts exist)
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+# the default build has no pjrt feature, so this whole suite runs on the
+# reference backend — engine tests cannot skip
+cargo test -q
+
+if [[ "${1:-}" == "--pjrt" ]]; then
+    echo "== pjrt feature build =="
+    cargo build --release --features pjrt
+    cargo test -q --features pjrt
+    if [[ -f "${ANTLER_ARTIFACTS:-artifacts}/manifest.json" ]]; then
+        echo "== pjrt backend + parity tests (artifacts found) =="
+        ANTLER_BACKEND=pjrt cargo test -q --features pjrt
+    else
+        echo "(no artifacts at ${ANTLER_ARTIFACTS:-artifacts}; parity tests self-skip)"
+    fi
+fi
+
+echo "CI OK"

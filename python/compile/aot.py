@@ -11,7 +11,10 @@ Artifacts (per DESIGN.md):
   eval_{arch}_c{ncls}.hlo.txt                   (x, *params) -> (logits,)
 plus manifest.json describing shapes for the rust loader.
 
-Usage: python -m compile.aot --out ../artifacts   (from python/)
+Usage: python -m compile.aot --out ../rust/artifacts   (from python/)
+(the rust crate root is rust/, so default_artifacts_dir() resolves to
+rust/artifacts when cargo runs — write artifacts there or set
+ANTLER_ARTIFACTS)
 """
 
 import argparse
@@ -117,7 +120,7 @@ def arch_manifest():
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--out", default="../rust/artifacts")
     ap.add_argument("--only", default=None,
                     help="substring filter on artifact names (debugging)")
     args = ap.parse_args()

@@ -1,27 +1,21 @@
-//! `cargo bench` target: the serving hot path on the real PJRT runtime —
+//! `cargo bench` target: the serving hot path on the live runtime —
 //! per-layer execution, whole-task execution with and without activation
-//! caching, and the end-to-end serve loop. This is the §Perf measurement
-//! harness (EXPERIMENTS.md).
+//! caching, the end-to-end serve loop, and the sharded executor pool.
+//! Runs on whichever backend `ANTLER_BACKEND` selects (the reference
+//! backend needs no artifacts, so this never skips). This is the §Perf
+//! measurement harness (EXPERIMENTS.md).
 
 use antler::bench::bench_fn;
-use antler::coordinator::{serve, BlockExecutor, ServePlan};
+use antler::coordinator::{serve, serve_sharded, BlockExecutor, ServePlan};
 use antler::device::Device;
-use antler::model::manifest::default_artifacts_dir;
 use antler::model::Tensor;
-use antler::runtime::Engine;
+use antler::runtime::{backend_from_env, Backend, ReferenceBackend};
 use antler::taskgraph::{Partition, TaskGraph};
 use antler::trainer::GraphWeights;
 use antler::util::rng::Pcg32;
 
-fn main() {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("runtime_hotpath: artifacts not built (run `make artifacts`), skipping");
-        return;
-    }
-    let eng = Engine::load(&dir).expect("engine");
-    let arch = eng.manifest().arch("cnn5").unwrap().clone();
-    let graph = TaskGraph::new(
+fn graph5() -> TaskGraph {
+    TaskGraph::new(
         5,
         vec![1, 3, 4],
         vec![
@@ -31,17 +25,24 @@ fn main() {
             Partition::singletons(5),
         ],
     )
-    .unwrap();
+    .unwrap()
+}
+
+fn main() {
+    let be = backend_from_env().expect("backend");
+    println!("runtime_hotpath: backend = {}", be.name());
+    let arch = be.arch("cnn5").unwrap();
+    let graph = graph5();
     let ncls = vec![2usize; 5];
     let mut rng = Pcg32::seed(1);
     let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
     let mut ex = BlockExecutor::new(
-        &eng,
+        be.as_ref(),
         Device::msp430(),
         arch.clone(),
         graph.clone(),
         ncls.clone(),
-        store,
+        store.clone(),
     );
     ex.warmup().unwrap();
 
@@ -50,7 +51,7 @@ fn main() {
     let w = Tensor::he_init(arch.layers[0].param_shapes(2)[0].clone(), &mut rng);
     let b = Tensor::zeros(arch.layers[0].param_shapes(2)[1].clone());
     bench_fn("layer/cnn5_conv0_b1", 5, 200, || {
-        let _ = eng.run_layer("cnn5", 0, None, &x1, &w, &b).unwrap();
+        let _ = be.run_layer(&arch, 0, None, &x1, &w, &b).unwrap();
     });
 
     // one full task, fresh sample every time (no activation reuse)
@@ -85,4 +86,29 @@ fn main() {
         ex.layer_skips,
         ex.layer_skips as f64 / (ex.layer_execs + ex.layer_skips) as f64 * 100.0
     );
+
+    // sharded pool scaling (always on the Send reference backend)
+    for shards in [1usize, 2, 4] {
+        let arch2 = arch.clone();
+        let graph2 = graph.clone();
+        let ncls2 = ncls.clone();
+        let store2 = store.clone();
+        let make = move |_s: usize| {
+            Ok(BlockExecutor::new(
+                ReferenceBackend::new(),
+                Device::msp430(),
+                arch2.clone(),
+                graph2.clone(),
+                ncls2.clone(),
+                store2.clone(),
+            ))
+        };
+        let frames = frames.clone();
+        let plan = plan.clone();
+        bench_fn(&format!("shard/{shards}x_20_frames"), 1, 10, move || {
+            let _ =
+                serve_sharded(make.clone(), shards, &plan, frames.clone(), 32, None)
+                    .unwrap();
+        });
+    }
 }

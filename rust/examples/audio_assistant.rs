@@ -3,7 +3,7 @@
 //! 16-bit MSP430FR5994 — the repository's END-TO-END VALIDATION run
 //! (recorded in EXPERIMENTS.md).
 //!
-//!   make artifacts && cargo run --release --example audio_assistant
+//!   cargo run --release --example audio_assistant
 //!
 //! Trains the task set from a synthetic multi-factor audio-feature
 //! stream, builds the task graph + order, then serves the stream three
@@ -14,13 +14,13 @@
 use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
 use antler::data::audio_stream_spec;
 use antler::device::Device;
-use antler::model::manifest::default_artifacts_dir;
-use antler::runtime::Engine;
+use antler::runtime::{backend_from_env, Backend};
 use antler::taskgraph::TaskGraph;
 use antler::trainer::GraphWeights;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load(&default_artifacts_dir())?;
+    let backend = backend_from_env()?;
+    println!("backend: {}", backend.name());
     let spec = audio_stream_spec();
     let device = Device::msp430();
     let data = spec.generate(800);
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let prep = pipeline::prepare(&engine, spec.arch, &data, &cfg)?;
+    let prep = pipeline::prepare(backend.as_ref(), spec.arch, &data, &cfg)?;
     println!("pipeline prepared in {:.1}s", t0.elapsed().as_secs_f64());
 
     println!("\ntask graph (Fig 14a analog): bounds {:?}", prep.graph.bounds);
@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
             prep.store.clone()
         };
         let mut ex = BlockExecutor::new(
-            &engine,
+            backend.as_ref(),
             device.clone(),
             prep.arch.clone(),
             graph,

@@ -3,16 +3,16 @@
 //! STM32H747, with the paper's precedence constraint that presence
 //! detection runs before everything else.
 //!
-//!   make artifacts && cargo run --release --example image_pipeline
+//!   cargo run --release --example image_pipeline
 
 use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
 use antler::data::image_stream_spec;
 use antler::device::Device;
-use antler::model::manifest::default_artifacts_dir;
-use antler::runtime::Engine;
+use antler::runtime::{backend_from_env, Backend};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load(&default_artifacts_dir())?;
+    let backend = backend_from_env()?;
+    println!("backend: {}", backend.name());
     let spec = image_stream_spec();
     let device = Device::stm32h747();
     let data = spec.generate(600);
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         device: device.clone(),
         ..Default::default()
     };
-    let prep = pipeline::prepare(&engine, spec.arch, &data, &cfg)?;
+    let prep = pipeline::prepare(backend.as_ref(), spec.arch, &data, &cfg)?;
 
     println!("\ntask graph (Fig 14b analog): bounds {:?}", prep.graph.bounds);
     for (s, p) in prep.graph.partitions.iter().enumerate() {
@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         .map(|i| (i, data.x.slice_batch(i as usize % data.len(), 1)))
         .collect();
     let mut ex = BlockExecutor::new(
-        &engine,
+        backend.as_ref(),
         device.clone(),
         prep.arch.clone(),
         prep.graph.clone(),

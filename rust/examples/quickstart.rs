@@ -1,9 +1,12 @@
 //! Quickstart: the whole Antler flow on a small task set in ~a minute.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
+//!
+//! Runs on the pure-Rust reference backend out of the box; build with
+//! `--features pjrt` (plus `make artifacts`) to use the PJRT engine.
 //!
 //! 1. generate a 6-task IMU dataset analog
-//! 2. train per-task networks (the Vanilla baseline) on the PJRT runtime
+//! 2. train per-task networks (the Vanilla baseline) on the backend
 //! 3. profile task affinity at the branch points
 //! 4. enumerate task graphs, pick the variety/cost tradeoff point
 //! 5. multitask-retrain the selected graph, solve the execution order
@@ -12,15 +15,15 @@
 use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
 use antler::data::dataset_by_name;
 use antler::device::Device;
-use antler::model::manifest::default_artifacts_dir;
-use antler::runtime::Engine;
+use antler::runtime::{backend_from_env, Backend};
 use antler::taskgraph::TaskGraph;
 use antler::trainer::GraphWeights;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::load(&default_artifacts_dir())?;
+    let backend = backend_from_env()?;
+    println!("backend: {}", backend.name());
     let spec = dataset_by_name("hhar-s").unwrap();
-    let arch = engine.manifest().arch(spec.arch)?.clone();
+    let arch = backend.arch(spec.arch)?;
     let ds = spec.generate(&arch.input, 360);
     println!("dataset {}: {} samples, {} one-vs-rest tasks", spec.name, 360, ds.n_tasks());
 
@@ -30,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         device: Device::msp430(),
         ..Default::default()
     };
-    let prep = pipeline::prepare(&engine, spec.arch, &ds, &cfg)?;
+    let prep = pipeline::prepare(backend.as_ref(), spec.arch, &ds, &cfg)?;
 
     println!("\nselected task graph (of {} candidates):", prep.scores.len());
     println!("  bounds {:?}", prep.graph.bounds);
@@ -50,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         .map(|i| (i, ds.x.slice_batch(i as usize % ds.len(), 1)))
         .collect();
     let mut antler_ex = BlockExecutor::new(
-        &engine,
+        backend.as_ref(),
         Device::msp430(),
         prep.arch.clone(),
         prep.graph.clone(),
@@ -64,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     let vanilla_graph = TaskGraph::disjoint(ds.n_tasks(), prep.graph.bounds.clone());
     let vstore = GraphWeights::from_task_params(&vanilla_graph, &prep.arch, &prep.task_params);
     let mut vanilla_ex = BlockExecutor::new(
-        &engine,
+        backend.as_ref(),
         Device::msp430(),
         prep.arch.clone(),
         vanilla_graph,

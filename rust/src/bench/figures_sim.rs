@@ -24,7 +24,8 @@ use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
 
 /// Arch specs come from the manifest when artifacts are built, otherwise
-/// from an embedded copy so the sim figures work standalone.
+/// from the built-in registry (`model::archs`) so the sim figures work
+/// standalone.
 pub fn arch_specs() -> std::collections::BTreeMap<String, ArchSpec> {
     let dir = default_artifacts_dir();
     if dir.join("manifest.json").exists() {
@@ -32,39 +33,8 @@ pub fn arch_specs() -> std::collections::BTreeMap<String, ArchSpec> {
             return m.archs;
         }
     }
-    crate::model::manifest::Manifest::from_json(
-        std::path::PathBuf::from("."),
-        &crate::util::json::Json::parse(EMBEDDED_ARCHS).unwrap(),
-    )
-    .expect("embedded manifest parses")
-    .archs
+    crate::model::archs::builtin_archs()
 }
-
-const EMBEDDED_ARCHS: &str = r#"{
-  "version": 1,
-  "archs": {
-    "cnn5": {"input": [16,16,1], "ncls": [2,3,5,11], "layers": [
-      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
-      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
-      {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
-      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
-      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]},
-    "cnn7": {"input": [32,32,1], "ncls": [2,3,5], "layers": [
-      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[32,32,1],"out":[16,16,8],"macs_per_sample":73728},
-      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[16,16,8],"out":[8,8,16],"macs_per_sample":294912},
-      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":16,"cout":32},"in":[8,8,16],"out":[4,4,32],"macs_per_sample":294912},
-      {"kind":"dense","cfg":{"din":512,"dout":128},"in":[4,4,32],"out":[128],"macs_per_sample":65536},
-      {"kind":"dense","cfg":{"din":128,"dout":64},"in":[128],"out":[64],"macs_per_sample":8192},
-      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
-      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]},
-    "dnn4": {"input": [128], "ncls": [2], "layers": [
-      {"kind":"dense","cfg":{"din":128,"dout":64},"in":[128],"out":[64],"macs_per_sample":8192},
-      {"kind":"dense","cfg":{"din":64,"dout":64},"in":[64],"out":[64],"macs_per_sample":4096},
-      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
-      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]}
-  },
-  "entries": []
-}"#;
 
 /// Score a dataset's candidate graphs under a device; shared by several
 /// drivers.

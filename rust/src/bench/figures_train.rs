@@ -1,6 +1,8 @@
-//! Training-backed figure drivers (need `make artifacts`): Fig. 12
-//! accuracy comparison, and the §7 deployment set Fig. 14/15/16 +
-//! Table 5. Step counts are CLI-tunable; defaults are sized for a
+//! Training-backed figure drivers: Fig. 12 accuracy comparison, and the
+//! §7 deployment set Fig. 14/15/16 + Table 5. Runs on whichever backend
+//! `ANTLER_BACKEND` selects — the pure-Rust reference interpreter needs
+//! no artifacts; `make artifacts` + the `pjrt` feature switches to the
+//! AOT path. Step counts are CLI-tunable; defaults are sized for a
 //! single-core CI run.
 
 use std::cell::RefCell;
@@ -14,22 +16,14 @@ use crate::baselines;
 use crate::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
 use crate::data::{audio_stream_spec, image_stream_spec, standard_datasets};
 use crate::device::Device;
-use crate::model::manifest::default_artifacts_dir;
-use crate::runtime::Engine;
+use crate::runtime::{backend_from_env, Backend};
 use crate::taskgraph::TaskGraph;
 use crate::trainer::{self, GraphWeights};
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
 
-fn engine() -> Result<Engine> {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        return Err(anyhow!(
-            "artifacts not built — run `make artifacts` first (dir: {})",
-            dir.display()
-        ));
-    }
-    Engine::load(&dir)
+fn backend() -> Result<Box<dyn Backend>> {
+    backend_from_env()
 }
 
 fn cfg_from_args(args: &Args, device: Device) -> pipeline::PrepareConfig {
@@ -50,15 +44,15 @@ fn cfg_from_args(args: &Args, device: Device) -> pipeline::PrepareConfig {
 /// Vanilla/Antler accuracies come from real training; NWV/NWS/YONO apply
 /// their packing transforms to the Vanilla weights and re-evaluate.
 pub fn fig12_accuracy(args: &Args) -> Result<()> {
-    let eng = engine()?;
+    let be = backend()?;
     let n_datasets = args.usize("datasets", 9);
     let samples = args.usize("samples", 400);
     let mut rows = Vec::new();
     for ds_spec in standard_datasets().into_iter().take(n_datasets) {
-        let arch = eng.manifest().arch(ds_spec.arch)?.clone();
+        let arch = be.arch(ds_spec.arch)?;
         let ds = ds_spec.generate(&arch.input, samples);
         let cfg = cfg_from_args(args, Device::msp430());
-        let prep = pipeline::prepare(&eng, ds_spec.arch, &ds, &cfg)?;
+        let prep = pipeline::prepare(be.as_ref(), ds_spec.arch, &ds, &cfg)?;
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
 
         // in-memory baselines: pack the Vanilla weights, re-evaluate
@@ -77,7 +71,14 @@ pub fn fig12_accuracy(args: &Args) -> Result<()> {
                     let (_, test) = ds.split();
                     ds.gather(&test, t)
                 };
-                accs.push(trainer::evaluate(&eng, &arch, 2, &pack.params[t], &xt, &yt)?);
+                accs.push(trainer::evaluate(
+                    be.as_ref(),
+                    &arch,
+                    2,
+                    &pack.params[t],
+                    &xt,
+                    &yt,
+                )?);
             }
             packed_acc.insert(*name, mean(&accs));
         }
@@ -109,15 +110,18 @@ thread_local! {
 }
 
 /// Prepare (and cache per-process) one §7 deployment.
-pub fn deployment_bundle(which: &str, args: &Args) -> Result<(Rc<DeploymentBundle>, Engine)> {
-    let eng = engine()?;
+pub fn deployment_bundle(
+    which: &str,
+    args: &Args,
+) -> Result<(Rc<DeploymentBundle>, Box<dyn Backend>)> {
+    let be = backend()?;
     let key = format!(
         "{which}-{}-{}",
         args.usize("steps-ind", 80),
         args.usize("steps-re", 100)
     );
     if let Some(b) = DEPLOY_CACHE.with(|c| c.borrow().get(&key).cloned()) {
-        return Ok((b, eng));
+        return Ok((b, be));
     }
     let (spec, device) = match which {
         "audio" => (audio_stream_spec(), Device::msp430()),
@@ -126,10 +130,10 @@ pub fn deployment_bundle(which: &str, args: &Args) -> Result<(Rc<DeploymentBundl
     };
     let data = spec.generate(args.usize("samples", 600));
     let cfg = cfg_from_args(args, device.clone());
-    let prep = pipeline::prepare(&eng, spec.arch, &data, &cfg)?;
+    let prep = pipeline::prepare(be.as_ref(), spec.arch, &data, &cfg)?;
     let bundle = Rc::new(DeploymentBundle { prep, data, device });
     DEPLOY_CACHE.with(|c| c.borrow_mut().insert(key, Rc::clone(&bundle)));
-    Ok((bundle, eng))
+    Ok((bundle, be))
 }
 
 // ----------------------------------------------------------------- fig14
@@ -137,7 +141,7 @@ pub fn deployment_bundle(which: &str, args: &Args) -> Result<(Rc<DeploymentBundl
 /// Fig. 14: the selected multitask inference graphs for both deployments.
 pub fn fig14_deployment_graphs(args: &Args) -> Result<()> {
     for which in ["audio", "image"] {
-        let (b, _eng) = deployment_bundle(which, args)?;
+        let (b, _be) = deployment_bundle(which, args)?;
         let g = &b.prep.graph;
         println!("\nFig 14 ({which}): bounds {:?}, order {:?}", g.bounds, b.prep.order);
         for (s, p) in g.partitions.iter().enumerate() {
@@ -171,7 +175,7 @@ pub fn fig14_deployment_graphs(args: &Args) -> Result<()> {
 pub fn fig15_deployment_cost(args: &Args) -> Result<()> {
     let frames_n = args.usize("frames", 40);
     for which in ["audio", "image"] {
-        let (b, eng) = deployment_bundle(which, args)?;
+        let (b, be) = deployment_bundle(which, args)?;
         let prep = &b.prep;
         let n = prep.ncls.len();
         let presence = 0usize;
@@ -214,7 +218,7 @@ pub fn fig15_deployment_cost(args: &Args) -> Result<()> {
                 prep.store.clone()
             };
             let mut ex = BlockExecutor::new(
-                &eng,
+                be.as_ref(),
                 b.device.clone(),
                 prep.arch.clone(),
                 graph,
@@ -247,7 +251,7 @@ pub fn fig15_deployment_cost(args: &Args) -> Result<()> {
 /// Fig. 16: per-task accuracy, Vanilla vs Antler, both deployments.
 pub fn fig16_deployment_accuracy(args: &Args) -> Result<()> {
     for which in ["audio", "image"] {
-        let (b, _eng) = deployment_bundle(which, args)?;
+        let (b, _be) = deployment_bundle(which, args)?;
         println!("\nFig 16 ({which}): per-task accuracy");
         let rows: Vec<Vec<String>> = (0..b.prep.ncls.len())
             .map(|t| {
@@ -274,7 +278,7 @@ pub fn fig16_deployment_accuracy(args: &Args) -> Result<()> {
 pub fn table5_deployment_memory(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     for which in ["audio", "image"] {
-        let (b, _eng) = deployment_bundle(which, args)?;
+        let (b, _be) = deployment_bundle(which, args)?;
         let vanilla: usize = b
             .prep
             .ncls

@@ -1,6 +1,7 @@
 //! The live block executor: the same §2.3 state machine as
-//! `memory::ExecSim`, but actually running the AOT layer artifacts via
-//! PJRT. `ExecSim` plans each task's segment actions (cached / execute /
+//! `memory::ExecSim`, but actually running layers on an execution
+//! [`Backend`] (PJRT artifacts or the pure-Rust reference interpreter).
+//! `ExecSim` plans each task's segment actions (cached / execute /
 //! load+execute) and accounts simulated device time+energy; this executor
 //! obeys the plan, reusing cached branch-point activations so shared
 //! blocks genuinely execute once per sample — the runtime and the cost
@@ -11,12 +12,12 @@ use anyhow::{anyhow, Result};
 use crate::device::{Cost, Device};
 use crate::memory::{ExecSim, SegmentAction};
 use crate::model::{ArchSpec, Tensor};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::taskgraph::TaskGraph;
 use crate::trainer::GraphWeights;
 
-pub struct BlockExecutor<'a> {
-    pub engine: &'a Engine,
+pub struct BlockExecutor<B: Backend> {
+    pub backend: B,
     pub arch: ArchSpec,
     pub graph: TaskGraph,
     pub ncls: Vec<usize>,
@@ -24,7 +25,7 @@ pub struct BlockExecutor<'a> {
     sim: OwnedSim,
     /// Cached output activation per segment: (sample, group, tensor).
     act: Vec<Option<(u64, usize, Tensor)>>,
-    /// PJRT layer executions actually performed (hot-path perf counter).
+    /// Backend layer executions actually performed (hot-path perf counter).
     pub layer_execs: u64,
     /// Layer executions skipped thanks to activation caching.
     pub layer_skips: u64,
@@ -38,18 +39,18 @@ struct OwnedSim {
     act_cache: Vec<Option<(u64, usize)>>,
 }
 
-impl<'a> BlockExecutor<'a> {
+impl<B: Backend> BlockExecutor<B> {
     pub fn new(
-        engine: &'a Engine,
+        backend: B,
         device: Device,
         arch: ArchSpec,
         graph: TaskGraph,
         ncls: Vec<usize>,
         store: GraphWeights,
-    ) -> BlockExecutor<'a> {
+    ) -> BlockExecutor<B> {
         let nseg = graph.n_segments();
         BlockExecutor {
-            engine,
+            backend,
             arch,
             graph,
             ncls,
@@ -72,31 +73,10 @@ impl<'a> BlockExecutor<'a> {
         self.act = vec![None; nseg];
     }
 
-    /// Pre-compile every layer artifact this graph needs (startup).
+    /// Warm the backend's compilation caches for this graph (startup).
+    /// A no-op (0) on backends that don't compile.
     pub fn warmup(&self) -> Result<usize> {
-        let mut n = 0;
-        for l in 0..self.arch.n_layers() {
-            let is_logits = self.arch.layers[l].cfg.get("dout") == Some(&0);
-            if is_logits {
-                let mut seen = std::collections::BTreeSet::new();
-                for &c in &self.ncls {
-                    if seen.insert(c) {
-                        let name = self
-                            .engine
-                            .manifest()
-                            .layer_artifact(&self.arch.name, l, Some(c), 1);
-                        self.engine.executable(&name)?;
-                        n += 1;
-                    }
-                }
-            } else {
-                let name =
-                    self.engine.manifest().layer_artifact(&self.arch.name, l, None, 1);
-                self.engine.executable(&name)?;
-                n += 1;
-            }
-        }
-        Ok(n)
+        self.backend.warmup(&self.arch, &self.ncls)
     }
 
     fn plan(&mut self, sample: u64, task: usize) -> (Vec<SegmentAction>, Cost) {
@@ -141,11 +121,10 @@ impl<'a> BlockExecutor<'a> {
                     let weights = &self.store.blocks[s][group];
                     let mut wi = 0;
                     for l in self.graph.segment_layers(&self.arch, s) {
-                        let is_logits =
-                            self.arch.layers[l].cfg.get("dout") == Some(&0);
+                        let is_logits = self.arch.layers[l].is_logits();
                         let ncls = is_logits.then_some(self.ncls[task]);
-                        cur = self.engine.run_layer(
-                            &self.arch.name,
+                        cur = self.backend.run_layer(
+                            &self.arch,
                             l,
                             ncls,
                             &cur,
@@ -175,12 +154,12 @@ impl<'a> BlockExecutor<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::manifest::default_artifacts_dir;
+    use crate::runtime::ReferenceBackend;
     use crate::taskgraph::Partition;
     use crate::util::rng::Pcg32;
 
-    fn setup(engine: &Engine) -> BlockExecutor<'_> {
-        let arch = engine.manifest().arch("cnn5").unwrap().clone();
+    fn setup<B: Backend>(backend: B) -> BlockExecutor<B> {
+        let arch = backend.arch("cnn5").unwrap();
         let graph = TaskGraph::new(
             3,
             vec![1, 3, 4],
@@ -195,20 +174,12 @@ mod tests {
         let ncls = vec![2, 2, 2];
         let mut rng = Pcg32::seed(11);
         let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
-        BlockExecutor::new(engine, Device::msp430(), arch, graph, ncls, store)
-    }
-
-    fn engine() -> Option<Engine> {
-        let dir = default_artifacts_dir();
-        dir.join("manifest.json")
-            .exists()
-            .then(|| Engine::load(&dir).unwrap())
+        BlockExecutor::new(backend, Device::msp430(), arch, graph, ncls, store)
     }
 
     #[test]
     fn shared_prefix_executes_once_per_sample() {
-        let Some(eng) = engine() else { return };
-        let mut ex = setup(&eng);
+        let mut ex = setup(ReferenceBackend::new());
         let x = Tensor::full(vec![1, 16, 16, 1], 0.3);
         let (_, c0) = ex.run_task(0, 0, &x).unwrap();
         let execs_after_first = ex.layer_execs;
@@ -223,38 +194,55 @@ mod tests {
     #[test]
     fn matches_whole_network_inference() {
         // blockwise execution must equal running the task's full param
-        // list through the batch eval artifact
-        let Some(eng) = engine() else { return };
-        let mut ex = setup(&eng);
+        // list through the backend's whole-network eval
+        let mut ex = setup(ReferenceBackend::new());
         let mut rng = Pcg32::seed(13);
         let data: Vec<f32> = (0..256).map(|_| rng.gauss()).collect();
         let x = Tensor::new(vec![1, 16, 16, 1], data);
         let (pred, _) = ex.run_task(0, 2, &x).unwrap();
-        // reference: assemble params, batch-64 eval on a padded batch
         let params = ex.store.assemble(&ex.graph, &ex.arch, 2);
-        let mut big = vec![0.0f32; 64 * 256];
-        big[..256].copy_from_slice(&x.data);
-        let xb = Tensor::new(vec![64, 16, 16, 1], big);
-        let acc_pred = {
-            let mut args = vec![crate::runtime::Arg::F32(&xb)];
-            for p in &params {
-                args.push(crate::runtime::Arg::F32(p));
-            }
-            let out = eng.run("eval_cnn5_c2", &args).unwrap();
-            let row = &out[0].data[0..2];
-            (row[1] > row[0]) as usize
-        };
-        assert_eq!(pred, acc_pred);
+        let logits = ex
+            .backend
+            .eval_logits(&ex.arch, 2, &params, &x)
+            .unwrap();
+        let want = (logits.data[1] > logits.data[0]) as usize;
+        assert_eq!(pred, want);
     }
 
     #[test]
     fn new_sample_recomputes() {
-        let Some(eng) = engine() else { return };
-        let mut ex = setup(&eng);
+        let mut ex = setup(ReferenceBackend::new());
         let x = Tensor::full(vec![1, 16, 16, 1], 0.3);
         ex.run_task(0, 0, &x).unwrap();
         let execs = ex.layer_execs;
         ex.run_task(1, 0, &x).unwrap();
         assert_eq!(ex.layer_execs, execs + 5); // full path again
+    }
+
+    #[test]
+    fn warmup_is_noop_on_reference_backend() {
+        let ex = setup(ReferenceBackend::new());
+        assert_eq!(ex.warmup().unwrap(), 0);
+    }
+
+    /// PJRT variants — kept behind artifact detection.
+    #[cfg(feature = "pjrt")]
+    mod pjrt {
+        use super::*;
+        use crate::runtime::pjrt_test_engine as engine;
+
+        #[test]
+        fn shared_prefix_executes_once_per_sample_pjrt() {
+            let Some(eng) = engine() else { return };
+            let mut ex = setup(&eng);
+            ex.warmup().unwrap();
+            let x = Tensor::full(vec![1, 16, 16, 1], 0.3);
+            ex.run_task(0, 0, &x).unwrap();
+            let execs_after_first = ex.layer_execs;
+            assert_eq!(execs_after_first, 5);
+            ex.run_task(0, 1, &x).unwrap();
+            assert_eq!(ex.layer_execs, execs_after_first + 2);
+            assert_eq!(ex.layer_skips, 3);
+        }
     }
 }

@@ -2,7 +2,8 @@
 //! tool", in rust): individually train task networks → profile affinity
 //! at the branch points → enumerate + select the task graph → multitask
 //! retrain the graph → solve the execution order → hand back a
-//! ready-to-serve executor state.
+//! ready-to-serve executor state. Generic over the execution
+//! [`Backend`], so it runs end-to-end with or without PJRT artifacts.
 
 use anyhow::Result;
 
@@ -11,7 +12,7 @@ use crate::device::Device;
 use crate::memory::cost_matrix;
 use crate::model::{ArchSpec, Tensor};
 use crate::ordering::{solve_held_karp, OrderingProblem};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::taskgraph::select::{score_graph, select_tradeoff, GraphScore};
 use crate::taskgraph::{enumerate, TaskGraph};
 use crate::trainer::{self, GraphWeights};
@@ -122,13 +123,13 @@ pub struct Prepared {
 }
 
 /// Run the full §5.3 pipeline.
-pub fn prepare<S: TaskSource>(
-    engine: &Engine,
+pub fn prepare<B: Backend + ?Sized, S: TaskSource>(
+    backend: &B,
     arch_name: &str,
     source: &S,
     cfg: &PrepareConfig,
 ) -> Result<Prepared> {
-    let arch = engine.manifest().arch(arch_name)?.clone();
+    let arch = backend.arch(arch_name)?;
     let n = source.n_tasks();
     let ncls: Vec<usize> = (0..n).map(|t| source.ncls(t)).collect();
     let mut rng = Pcg32::seed(cfg.seed);
@@ -138,7 +139,7 @@ pub fn prepare<S: TaskSource>(
     let mut vanilla_acc = Vec::with_capacity(n);
     for t in 0..n {
         let (params, _losses) = trainer::train_individual(
-            engine,
+            backend,
             &arch,
             ncls[t],
             cfg.steps_individual,
@@ -147,13 +148,14 @@ pub fn prepare<S: TaskSource>(
             |r| source.train_batch(t, r),
         )?;
         let (xt, yt) = source.test_set(t);
-        vanilla_acc.push(trainer::evaluate(engine, &arch, ncls[t], &params, &xt, &yt)?);
+        vanilla_acc
+            .push(trainer::evaluate(backend, &arch, ncls[t], &params, &xt, &yt)?);
         task_params.push(params);
     }
 
     // 2. affinity profiling at the branch points
     let bounds = TaskGraph::default_bounds(arch.n_layers(), cfg.branch_points);
-    let affinity = profile_affinity(engine, &arch, &bounds, &task_params, source, cfg)?;
+    let affinity = profile_affinity(backend, &arch, &bounds, &task_params, source, cfg)?;
 
     // 3. enumerate + score + select
     let graphs = if n <= 6 {
@@ -172,7 +174,7 @@ pub fn prepare<S: TaskSource>(
     //    individually trained nets
     let mut store = GraphWeights::from_task_params(&graph, &arch, &task_params);
     let _losses = trainer::train_graph(
-        engine,
+        backend,
         &arch,
         &graph,
         &ncls,
@@ -186,7 +188,8 @@ pub fn prepare<S: TaskSource>(
     for t in 0..n {
         let params = store.assemble(&graph, &arch, t);
         let (xt, yt) = source.test_set(t);
-        antler_acc.push(trainer::evaluate(engine, &arch, ncls[t], &params, &xt, &yt)?);
+        antler_acc
+            .push(trainer::evaluate(backend, &arch, ncls[t], &params, &xt, &yt)?);
     }
 
     // 5. optimal order for the selected graph
@@ -210,8 +213,8 @@ pub fn prepare<S: TaskSource>(
 /// §3.1 profiling: run each task's trained network over K samples up to
 /// the last branch point, capture activations at every branch point, and
 /// assemble the affinity tensor.
-pub fn profile_affinity<S: TaskSource>(
-    engine: &Engine,
+pub fn profile_affinity<B: Backend + ?Sized, S: TaskSource>(
+    backend: &B,
     arch: &ArchSpec,
     bounds: &[usize],
     task_params: &[Vec<Tensor>],
@@ -220,7 +223,8 @@ pub fn profile_affinity<S: TaskSource>(
 ) -> Result<AffinityTensor> {
     let k = cfg.profile_k;
     let x0 = source.profile_samples(k);
-    // layer artifacts are lowered at batch 32; pad K up to 32
+    // PJRT layer artifacts are lowered at batch 32; pad K up to 32 so the
+    // same flow works on every backend
     let batch = 32usize;
     let x0 = if x0.shape[0] < batch {
         let pad = x0.slice_batch(0, batch - x0.shape[0]);
@@ -234,8 +238,8 @@ pub fn profile_affinity<S: TaskSource>(
         let mut x = x0.clone();
         let mut per_bp = Vec::with_capacity(bounds.len());
         for l in 0..last {
-            x = engine.run_layer(
-                &arch.name,
+            x = backend.run_layer(
+                arch,
                 l,
                 None,
                 &x,
@@ -272,18 +276,11 @@ pub fn deployment_order(
 mod tests {
     use super::*;
     use crate::data::dataset_by_name;
-    use crate::model::manifest::default_artifacts_dir;
-
-    fn engine() -> Option<Engine> {
-        let dir = default_artifacts_dir();
-        dir.join("manifest.json")
-            .exists()
-            .then(|| Engine::load(&dir).unwrap())
-    }
+    use crate::runtime::ReferenceBackend;
 
     #[test]
     fn pipeline_end_to_end_on_imu_tasks() {
-        let Some(eng) = engine() else { return };
+        let be = ReferenceBackend::new();
         let ds = dataset_by_name("hhar-s").unwrap().generate(&[128], 360);
         let cfg = PrepareConfig {
             steps_individual: 40,
@@ -291,7 +288,7 @@ mod tests {
             max_graphs: 150,
             ..Default::default()
         };
-        let prep = prepare(&eng, "dnn4", &ds, &cfg).unwrap();
+        let prep = prepare(&be, "dnn4", &ds, &cfg).unwrap();
         assert_eq!(prep.ncls, vec![2; 6]);
         assert!(!prep.scores.is_empty());
         assert!(prep.selected < prep.scores.len());
@@ -309,5 +306,28 @@ mod tests {
         // affinity is a D x 6 x 6 tensor
         assert_eq!(prep.affinity.n, 6);
         assert_eq!(prep.affinity.d, prep.graph.d());
+    }
+
+    /// PJRT variant — kept behind artifact detection.
+    #[cfg(feature = "pjrt")]
+    mod pjrt {
+        use super::*;
+        use crate::runtime::pjrt_test_engine;
+
+        #[test]
+        fn pipeline_end_to_end_on_imu_tasks_pjrt() {
+            let Some(eng) = pjrt_test_engine() else { return };
+            let ds = dataset_by_name("hhar-s").unwrap().generate(&[128], 360);
+            let cfg = PrepareConfig {
+                steps_individual: 40,
+                steps_retrain: 60,
+                max_graphs: 150,
+                ..Default::default()
+            };
+            let prep = prepare(&eng, "dnn4", &ds, &cfg).unwrap();
+            assert_eq!(prep.ncls, vec![2; 6]);
+            let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+            assert!(mean(&prep.antler_acc) > 0.6, "{:?}", prep.antler_acc);
+        }
     }
 }

@@ -1,0 +1,224 @@
+//! Sharded serving: round-robin frames across N executors, each owning
+//! its own `Send` backend (the pure-Rust reference interpreter), running
+//! on the existing `exec::pool::ThreadPool`. This is the first step
+//! toward the heavy-traffic serving north star: one process, N cores,
+//! N independent §2.3 state machines, one aggregate [`ServeReport`].
+//!
+//! Sharding is by frame, so per-sample activation reuse across tasks is
+//! preserved inside every shard (a frame's whole task round runs on one
+//! executor); only cross-frame weight residency is per-shard state.
+
+use std::sync::mpsc::{channel, sync_channel, TrySendError};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::exec::pool::ThreadPool;
+use crate::model::Tensor;
+use crate::runtime::Backend;
+
+use super::executor::BlockExecutor;
+use super::server::{build_report, run_executor, Frame, ServePlan, ServeReport};
+
+/// Aggregate result of a sharded serve.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shards: usize,
+    /// Frames actually processed by each shard.
+    pub frames_per_shard: Vec<usize>,
+    /// Pool-wide metrics (frames/drops/latency percentiles/sim cost and
+    /// layer counters summed over every shard).
+    pub aggregate: ServeReport,
+}
+
+impl ShardReport {
+    /// Number of shards that processed at least one frame.
+    pub fn busy_shards(&self) -> usize {
+        self.frames_per_shard.iter().filter(|&&c| c > 0).count()
+    }
+}
+
+/// Serve `frames` across `n_shards` executors built by `make_executor`
+/// (one per shard, each owning its backend — the backend must be `Send`,
+/// which the reference backend is and PJRT deliberately is not).
+///
+/// Frames are distributed round-robin over per-shard bounded queues;
+/// a full shard queue drops the frame (counted), like the single-executor
+/// loop. Returns when every shard has drained its queue.
+pub fn serve_sharded<B, F>(
+    mut make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    frames: Vec<(u64, Tensor)>,
+    queue_depth: usize,
+    pace: Option<std::time::Duration>,
+) -> Result<ShardReport>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    let n = n_shards.max(1);
+    let pool = ThreadPool::new(n);
+    let (res_tx, res_rx) = channel();
+    let mut frame_txs = Vec::with_capacity(n);
+    for s in 0..n {
+        let (tx, rx) = sync_channel::<Frame>(queue_depth.max(1));
+        frame_txs.push(tx);
+        let mut ex = make_executor(s)?;
+        let plan = plan.clone();
+        let res_tx = res_tx.clone();
+        pool.execute(move || {
+            let out = run_executor(&mut ex, &plan, rx).map(|(results, skipped)| {
+                (results, skipped, ex.layer_execs, ex.layer_skips)
+            });
+            let _ = res_tx.send((s, out));
+        });
+    }
+    drop(res_tx);
+
+    let t0 = Instant::now();
+    let mut dropped = 0usize;
+    for (i, (id, input)) in frames.into_iter().enumerate() {
+        let frame = Frame { id, input, enqueued: Instant::now() };
+        match frame_txs[i % n].try_send(frame) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => dropped += 1,
+            // a dead shard's queue: count the frame as dropped and keep
+            // feeding the others — the collection loop below propagates
+            // the worker's actual error
+            Err(TrySendError::Disconnected(_)) => dropped += 1,
+        }
+        if let Some(p) = pace {
+            std::thread::sleep(p);
+        }
+    }
+    drop(frame_txs); // closes every queue; shard loops drain and exit
+
+    let mut frames_per_shard = vec![0usize; n];
+    let mut all = Vec::new();
+    let mut skipped = 0usize;
+    let mut layer_execs = 0u64;
+    let mut layer_skips = 0u64;
+    for _ in 0..n {
+        let (s, out) = res_rx
+            .recv()
+            .map_err(|_| anyhow!("a shard worker died before reporting"))?;
+        let (results, sk, le, ls) = out?;
+        frames_per_shard[s] = results.len();
+        skipped += sk;
+        layer_execs += le;
+        layer_skips += ls;
+        all.extend(results);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(ShardReport {
+        shards: n,
+        frames_per_shard,
+        aggregate: build_report(&all, dropped, wall, skipped, layer_execs, layer_skips),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::runtime::ReferenceBackend;
+    use crate::taskgraph::{Partition, TaskGraph};
+    use crate::trainer::GraphWeights;
+    use crate::util::rng::Pcg32;
+
+    fn make_executor(_shard: usize) -> Result<BlockExecutor<ReferenceBackend>> {
+        let backend = ReferenceBackend::new();
+        let arch = backend.arch("cnn5")?;
+        let graph = TaskGraph::new(
+            3,
+            vec![1, 3, 4],
+            vec![
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 1]),
+                Partition::singletons(3),
+            ],
+        )?;
+        let ncls = vec![2, 2, 2];
+        // identical seed per shard: every shard serves the same weights
+        let mut rng = Pcg32::seed(7);
+        let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+        Ok(BlockExecutor::new(
+            backend,
+            Device::msp430(),
+            arch,
+            graph,
+            ncls,
+            store,
+        ))
+    }
+
+    fn frames(n: usize) -> Vec<(u64, Tensor)> {
+        let mut rng = Pcg32::seed(15);
+        (0..n as u64)
+            .map(|i| {
+                let data = (0..256).map(|_| rng.gauss()).collect();
+                (i, Tensor::new(vec![1, 16, 16, 1], data))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_serve_covers_all_frames_across_executors() {
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        // deep queues: 24 frames over 3 shards never overflow depth 16
+        let report =
+            serve_sharded(make_executor, 3, &plan, frames(24), 16, None).unwrap();
+        assert_eq!(report.shards, 3);
+        assert_eq!(report.aggregate.dropped, 0);
+        assert_eq!(report.aggregate.frames, 24);
+        // round-robin with no drops: exactly even split, ≥2 shards busy
+        assert_eq!(report.frames_per_shard, vec![8, 8, 8]);
+        assert!(report.busy_shards() >= 2);
+        // aggregate metrics are real
+        assert!(report.aggregate.throughput_fps > 0.0);
+        assert!(report.aggregate.sim_time_per_frame_s > 0.0);
+        assert!(report.aggregate.layer_execs > 0);
+        // per-frame activation reuse still happens inside each shard
+        assert!(report.aggregate.layer_skips > 0);
+    }
+
+    #[test]
+    fn sharded_serve_conserves_frames_with_tiny_queues() {
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let total = 30;
+        let report =
+            serve_sharded(make_executor, 2, &plan, frames(total), 1, None).unwrap();
+        assert_eq!(
+            report.aggregate.frames + report.aggregate.dropped,
+            total
+        );
+        assert_eq!(
+            report.frames_per_shard.iter().sum::<usize>(),
+            report.aggregate.frames
+        );
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_plain_serve() {
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let report =
+            serve_sharded(make_executor, 1, &plan, frames(6), 8, None).unwrap();
+        assert_eq!(report.shards, 1);
+        assert_eq!(report.aggregate.frames, 6);
+        assert_eq!(report.frames_per_shard, vec![6]);
+    }
+
+    #[test]
+    fn conditional_plans_work_sharded() {
+        let plan = ServePlan {
+            order: vec![0, 1, 2],
+            conditional: vec![(0, 1), (0, 2)],
+        };
+        let report =
+            serve_sharded(make_executor, 3, &plan, frames(18), 16, None).unwrap();
+        assert_eq!(report.aggregate.frames, 18);
+        assert!(report.aggregate.tasks_skipped <= 36);
+    }
+}

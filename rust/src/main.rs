@@ -5,18 +5,22 @@
 //!   antler order  --nodes N [--precedence a>b,c>d] [--cyclic]
 //!   antler graph  --dataset <name> [--bp 3] [--max-graphs 400]
 //!   antler serve  --deployment <audio|image> [--frames 100]
-//!                 [--conditional] [--steps-ind N] [--steps-re N]
-//!   antler check  # verify artifacts + runtime round-trip
+//!                 [--conditional] [--shards N] [--steps-ind N] [--steps-re N]
+//!   antler check  # verify backend + layer round-trip
+//!
+//! Every subcommand accepts `--backend reference|pjrt` (equivalent to
+//! setting `ANTLER_BACKEND`); the default is PJRT when built with the
+//! `pjrt` feature and artifacts exist, the pure-Rust reference backend
+//! otherwise.
 
 use anyhow::{anyhow, Result};
 
 use antler::bench;
-use antler::coordinator::{pipeline, serve, BlockExecutor, ServePlan};
+use antler::coordinator::{pipeline, serve, serve_sharded, BlockExecutor, ServePlan};
 use antler::data;
 use antler::device::Device;
-use antler::model::manifest::default_artifacts_dir;
 use antler::ordering::{solve_held_karp, OrderingProblem};
-use antler::runtime::Engine;
+use antler::runtime::{self, Backend, ReferenceBackend};
 use antler::taskgraph::select::select_tradeoff;
 use antler::testkit::gen;
 use antler::util::cli::Args;
@@ -24,6 +28,9 @@ use antler::util::rng::Pcg32;
 
 fn main() {
     let args = Args::from_env();
+    if let Some(b) = args.get("backend") {
+        std::env::set_var(runtime::BACKEND_ENV, b);
+    }
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -70,7 +77,10 @@ fn print_usage() {
          \x20 order           solve a random task-ordering instance exactly\n\
          \x20 graph           enumerate+select a task graph for a dataset analog\n\
          \x20 serve           run the live serving loop on a deployment stream\n\
-         \x20 check           verify artifacts + PJRT round-trip"
+         \x20                 (--shards N shards it over N reference executors)\n\
+         \x20 check           verify backend + layer round-trip\n\
+         \n\
+         global: --backend reference|pjrt (or ANTLER_BACKEND)"
     );
 }
 
@@ -143,33 +153,71 @@ fn cmd_graph(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let which = args.get_or("deployment", "audio");
-    let (bundle, eng) = bench::figures_train::deployment_bundle(which, args)?;
+    let shards = args.usize("shards", 1);
+    // refuse the incompatible combination BEFORE the expensive prepare:
+    // sharded serving needs Send executors, and the PJRT engine is
+    // Rc-based (!Send)
+    if shards > 1 && std::env::var(runtime::BACKEND_ENV).as_deref() == Ok("pjrt") {
+        return Err(anyhow!(
+            "--shards requires the Send reference backend; the pjrt engine \
+             is single-threaded (drop --backend pjrt or --shards)"
+        ));
+    }
+    let (bundle, be) = bench::figures_train::deployment_bundle(which, args)?;
     let prep = &bundle.prep;
     let n = prep.ncls.len();
     let frames_n = args.usize("frames", 100);
     let frames: Vec<(u64, antler::model::Tensor)> = (0..frames_n)
         .map(|i| (i as u64, bundle.data.x.slice_batch(i % bundle.data.len(), 1)))
         .collect();
-    let conditional = if args.flag("conditional") {
+    let conditional: Vec<(usize, usize)> = if args.flag("conditional") {
         (1..n).map(|t| (0usize, t)).collect()
     } else {
         vec![]
     };
-    let mut ex = BlockExecutor::new(
-        &eng,
-        bundle.device.clone(),
-        prep.arch.clone(),
-        prep.graph.clone(),
-        prep.ncls.clone(),
-        prep.store.clone(),
-    );
-    let warmed = ex.warmup()?;
-    println!(
-        "serving {which}: {n} tasks, order {:?}, {warmed} executables warm",
-        prep.order
-    );
     let plan = ServePlan { order: prep.order.clone(), conditional };
-    let report = serve(&mut ex, &plan, frames, 64, None)?;
+
+    let report = if shards > 1 {
+        // sharded serving always runs on the Send reference backend —
+        // one executor per shard, round-robin over the pool
+        println!(
+            "sharded serving runs on the reference backend ({shards} executors)"
+        );
+        let make = |_s: usize| {
+            Ok(BlockExecutor::new(
+                ReferenceBackend::new(),
+                bundle.device.clone(),
+                prep.arch.clone(),
+                prep.graph.clone(),
+                prep.ncls.clone(),
+                prep.store.clone(),
+            ))
+        };
+        let sr = serve_sharded(make, shards, &plan, frames, 64, None)?;
+        println!(
+            "sharded over {} executors ({} busy): per-shard frames {:?}",
+            sr.shards,
+            sr.busy_shards(),
+            sr.frames_per_shard
+        );
+        sr.aggregate
+    } else {
+        let mut ex = BlockExecutor::new(
+            be.as_ref(),
+            bundle.device.clone(),
+            prep.arch.clone(),
+            prep.graph.clone(),
+            prep.ncls.clone(),
+            prep.store.clone(),
+        );
+        let warmed = ex.warmup()?;
+        println!(
+            "serving {which} on {}: {n} tasks, order {:?}, {warmed} executables warm",
+            be.name(),
+            prep.order
+        );
+        serve(&mut ex, &plan, frames, 64, None)?
+    };
     println!(
         "frames={} dropped={} wall={:.2}s throughput={:.1} fps",
         report.frames, report.dropped, report.wall_s, report.throughput_fps
@@ -198,12 +246,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_check() -> Result<()> {
-    let dir = default_artifacts_dir();
-    let eng = Engine::load(&dir)?;
-    let n = eng.manifest().entries.len();
-    println!("manifest: {} artifacts, {} archs", n, eng.manifest().archs.len());
+    let be = runtime::backend_from_env()?;
+    println!("backend: {}", be.name());
     // round-trip one layer per arch
-    for arch in eng.manifest().archs.clone().values() {
+    for name in be.arch_names() {
+        let arch = be.arch(&name)?;
         let mut rng = Pcg32::seed(0);
         let mut shape = vec![1usize];
         shape.extend_from_slice(&arch.input);
@@ -211,7 +258,7 @@ fn cmd_check() -> Result<()> {
         let ps = arch.layers[0].param_shapes(2);
         let w = antler::model::Tensor::he_init(ps[0].clone(), &mut rng);
         let b = antler::model::Tensor::zeros(ps[1].clone());
-        let y = eng.run_layer(&arch.name, 0, None, &x, &w, &b)?;
+        let y = be.run_layer(&arch, 0, None, &x, &w, &b)?;
         println!("  {}: layer0 {:?} -> {:?} ok", arch.name, x.shape, y.shape);
     }
     println!("check OK");

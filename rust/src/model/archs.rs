@@ -1,0 +1,109 @@
+//! Built-in architecture registry — the rust-side mirror of
+//! `python/compile/model.py::ARCHS`, so backends that never touch a
+//! manifest (the reference interpreter, the sim-only figure drivers)
+//! still know every common architecture's layer list, shapes and MAC
+//! counts. When PJRT artifacts exist, `manifest.json` is authoritative;
+//! these specs are byte-identical to what `compile.aot` emits.
+
+use std::collections::BTreeMap;
+
+use crate::model::manifest::{ArchSpec, Manifest};
+use crate::util::json::Json;
+
+/// Embedded copy of the manifest `archs` section (entries elided).
+/// Must track python/compile/model.py — test_aot.py checks the python
+/// side; `builtin_matches_layer_algebra` below checks this side.
+const EMBEDDED_ARCHS: &str = r#"{
+  "version": 1,
+  "archs": {
+    "cnn5": {"input": [16,16,1], "ncls": [2,3,5,11], "layers": [
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[16,16,1],"out":[8,8,8],"macs_per_sample":18432},
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[8,8,8],"out":[4,4,16],"macs_per_sample":73728},
+      {"kind":"dense","cfg":{"din":256,"dout":64},"in":[4,4,16],"out":[64],"macs_per_sample":16384},
+      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]},
+    "cnn7": {"input": [32,32,1], "ncls": [2,3,5], "layers": [
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":1,"cout":8},"in":[32,32,1],"out":[16,16,8],"macs_per_sample":73728},
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":8,"cout":16},"in":[16,16,8],"out":[8,8,16],"macs_per_sample":294912},
+      {"kind":"conv_pool","cfg":{"kh":3,"kw":3,"cin":16,"cout":32},"in":[8,8,16],"out":[4,4,32],"macs_per_sample":294912},
+      {"kind":"dense","cfg":{"din":512,"dout":128},"in":[4,4,32],"out":[128],"macs_per_sample":65536},
+      {"kind":"dense","cfg":{"din":128,"dout":64},"in":[128],"out":[64],"macs_per_sample":8192},
+      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]},
+    "dnn4": {"input": [128], "ncls": [2], "layers": [
+      {"kind":"dense","cfg":{"din":128,"dout":64},"in":[128],"out":[64],"macs_per_sample":8192},
+      {"kind":"dense","cfg":{"din":64,"dout":64},"in":[64],"out":[64],"macs_per_sample":4096},
+      {"kind":"dense","cfg":{"din":64,"dout":32},"in":[64],"out":[32],"macs_per_sample":2048},
+      {"kind":"logits","cfg":{"din":32,"dout":0},"in":[32],"out":[2],"macs_per_sample":64}]}
+  },
+  "entries": []
+}"#;
+
+/// Every built-in architecture, keyed by name.
+pub fn builtin_archs() -> BTreeMap<String, ArchSpec> {
+    Manifest::from_json(
+        std::path::PathBuf::from("."),
+        &Json::parse(EMBEDDED_ARCHS).expect("embedded archs parse"),
+    )
+    .expect("embedded manifest parses")
+    .archs
+}
+
+/// One built-in architecture by name.
+pub fn builtin_arch(name: &str) -> Option<ArchSpec> {
+    builtin_archs().remove(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_three_archs() {
+        let archs = builtin_archs();
+        assert_eq!(
+            archs.keys().cloned().collect::<Vec<_>>(),
+            vec!["cnn5", "cnn7", "dnn4"]
+        );
+    }
+
+    #[test]
+    fn builtin_matches_layer_algebra() {
+        // the embedded in/out/macs fields must be derivable from cfg the
+        // same way python/compile/aot.py derives them
+        for (name, arch) in builtin_archs() {
+            let mut shape = arch.input.clone();
+            for (i, l) in arch.layers.iter().enumerate() {
+                assert_eq!(l.in_shape, shape, "{name} layer {i} in_shape");
+                match l.kind {
+                    crate::model::LayerKind::ConvPool => {
+                        let (h, w) = (shape[0], shape[1]);
+                        assert_eq!(shape[2], l.cfg["cin"], "{name} layer {i}");
+                        let macs = (h * w
+                            * l.cfg["kh"]
+                            * l.cfg["kw"]
+                            * l.cfg["cin"]
+                            * l.cfg["cout"]) as u64;
+                        assert_eq!(l.macs_per_sample, macs, "{name} layer {i}");
+                        shape = vec![h / 2, w / 2, l.cfg["cout"]];
+                    }
+                    _ => {
+                        let din: usize = shape.iter().product();
+                        assert_eq!(din, l.cfg["din"], "{name} layer {i}");
+                        let dout = if l.cfg["dout"] == 0 { 2 } else { l.cfg["dout"] };
+                        assert_eq!(l.macs_per_sample, (din * dout) as u64);
+                        shape = vec![dout];
+                    }
+                }
+                assert_eq!(l.out_shape, shape, "{name} layer {i} out_shape");
+            }
+        }
+    }
+
+    #[test]
+    fn builtin_arch_lookup() {
+        assert!(builtin_arch("cnn5").is_some());
+        assert_eq!(builtin_arch("dnn4").unwrap().n_layers(), 4);
+        assert!(builtin_arch("resnet50").is_none());
+    }
+}

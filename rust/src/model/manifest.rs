@@ -43,6 +43,12 @@ pub struct LayerSpec {
 }
 
 impl LayerSpec {
+    /// The per-task classification head: its output width (`dout == 0`
+    /// in the cfg) is chosen per task at instantiation time.
+    pub fn is_logits(&self) -> bool {
+        self.kind == LayerKind::Logits
+    }
+
     /// Parameter shapes [w, b] for a given class count.
     pub fn param_shapes(&self, ncls: usize) -> Vec<Vec<usize>> {
         match self.kind {

@@ -2,6 +2,7 @@
 //! `artifacts/manifest.json`: architectures, layer specs, parameter
 //! layouts, and the `Tensor` type that flows through the whole system.
 
+pub mod archs;
 pub mod manifest;
 pub mod tensor;
 

@@ -1,192 +1,216 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client via
-//! the `xla` crate. This is the only place python-produced bits enter the
-//! system; after `Engine::load`, the process is self-contained.
+//! Multi-backend runtime. A [`Backend`] executes the three block-program
+//! shapes the coordinator needs — single layers (the serving hot path),
+//! one SGD training step, and a whole-network batch eval — behind one
+//! trait, so every layer above (executor, server, trainer, pipeline,
+//! benches) is backend-agnostic.
 //!
-//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
-//! jax ≥ 0.5 serialized protos; the text parser reassigns instruction
-//! ids) — see /opt/xla-example/README.md.
+//! Two implementations:
+//!  * [`ReferenceBackend`] — a pure-Rust interpreter of the block
+//!    programs (conv2d / dense / maxpool / softmax, mirroring
+//!    `python/compile/kernels/ref.py`), always available, `Send + Sync`,
+//!    so the full stack is testable and shardable with no artifacts.
+//!  * [`Engine`] (feature `pjrt`) — the AOT-compiled HLO artifacts from
+//!    `python/compile/aot.py` executed on the CPU PJRT client. `Rc`-based
+//!    and pinned to one thread, which also mirrors the single-core MCU
+//!    execution model being simulated.
 //!
-//! `PjRtClient` is `Rc`-based (!Send), so an `Engine` is pinned to one
-//! thread; the serving coordinator owns it on a dedicated executor thread
-//! — which also mirrors the single-core MCU execution model being
-//! simulated.
+//! Selection: `ANTLER_BACKEND=reference|pjrt` (or the `--backend` CLI
+//! flag, which sets the env var). Unset → PJRT when the feature is on
+//! and artifacts exist, reference otherwise.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
+pub mod reference;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use crate::model::{manifest::Manifest, Tensor};
+pub use reference::ReferenceBackend;
 
-/// Inputs accepted by [`Engine::run`].
-pub enum Arg<'a> {
-    F32(&'a Tensor),
-    I32(&'a [i32]),
-    ScalarF32(f32),
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Arg, Engine};
 
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// Executions performed (for the perf counters).
-    pub exec_count: std::cell::Cell<u64>,
-}
+use anyhow::Result;
 
-impl Engine {
-    /// Create a CPU PJRT client and read the artifact manifest.
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine {
-            client,
-            manifest,
-            exes: RefCell::new(HashMap::new()),
-            exec_count: std::cell::Cell::new(0),
-        })
-    }
+use crate::model::{ArchSpec, Tensor};
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
+/// Environment variable naming the backend to use (`reference` | `pjrt`).
+pub const BACKEND_ENV: &str = "ANTLER_BACKEND";
 
-    /// Compile (once) and cache the named artifact.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(name) {
-            return Ok(Rc::clone(e));
-        }
-        let path = self.manifest.hlo_path(name)?;
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.exes.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
-        Ok(exe)
-    }
+/// An execution backend for the Antler block programs. All methods take
+/// `&self`; implementations use interior mutability for caches/counters.
+pub trait Backend {
+    /// Short identifier (`"reference"` / `"pjrt"`).
+    fn name(&self) -> &'static str;
 
-    /// Eagerly compile every artifact matching `filter` (startup warm-up).
-    pub fn precompile(&self, filter: impl Fn(&str) -> bool) -> Result<usize> {
-        let names: Vec<String> = self
-            .manifest
-            .entries
-            .keys()
-            .filter(|n| filter(n))
-            .cloned()
-            .collect();
-        for n in &names {
-            self.executable(n)?;
-        }
-        Ok(names.len())
-    }
+    /// Look up an architecture this backend can execute.
+    fn arch(&self, name: &str) -> Result<ArchSpec>;
 
-    pub fn compiled_count(&self) -> usize {
-        self.exes.borrow().len()
-    }
+    /// Names of every architecture this backend can execute.
+    fn arch_names(&self) -> Vec<String>;
 
-    /// Execute an artifact. Output shapes come from the manifest entry.
-    /// (Perf note: `entry` is borrowed, not cloned — this is the serving
-    /// hot path; see EXPERIMENTS.md §Perf.)
-    pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
-        let entry = self.manifest.entry(name)?;
-        if args.len() != entry.inputs.len() {
-            bail!(
-                "{name}: expected {} args, got {}",
-                entry.inputs.len(),
-                args.len()
-            );
-        }
-        let exe = self.executable(name)?;
-        let mut literals = Vec::with_capacity(args.len());
-        for (i, a) in args.iter().enumerate() {
-            let want = &entry.inputs[i];
-            literals.push(to_literal(a, want).with_context(|| {
-                format!("{name}: arg {i} (expected shape {want:?})")
-            })?);
-        }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        self.exec_count.set(self.exec_count.get() + 1);
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
-        if tuple.len() != entry.outputs.len() {
-            bail!(
-                "{name}: manifest says {} outputs, got {}",
-                entry.outputs.len(),
-                tuple.len()
-            );
-        }
-        tuple
-            .into_iter()
-            .zip(&entry.outputs)
-            .map(|(lit, shape)| {
-                let data = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("{name}: output not f32: {e:?}"))?;
-                Ok(Tensor::new(shape.clone(), data))
-            })
-            .collect()
-    }
-
-    /// Run a layer artifact: y = layer(x, w, b).
-    pub fn run_layer(
+    /// Run one layer: `y = layer_l(x, w, b)`. `ncls` is `Some` only for
+    /// the logits layer (its output width is chosen per task). The batch
+    /// dimension is `x.shape[0]`.
+    fn run_layer(
         &self,
-        arch: &str,
+        arch: &ArchSpec,
         layer: usize,
         ncls: Option<usize>,
         x: &Tensor,
         w: &Tensor,
         b: &Tensor,
-    ) -> Result<Tensor> {
-        let batch = x.shape[0];
-        let name = self.manifest.layer_artifact(arch, layer, ncls, batch);
-        let mut out = self.run(&name, &[Arg::F32(x), Arg::F32(w), Arg::F32(b)])?;
-        Ok(out.remove(0))
+    ) -> Result<Tensor>;
+
+    /// One SGD step of softmax cross-entropy over the whole network.
+    /// `params` is the flat `[w0, b0, w1, b1, ...]` list, updated in
+    /// place; returns the pre-update batch loss.
+    fn train_step(
+        &self,
+        arch: &ArchSpec,
+        ncls: usize,
+        params: &mut Vec<Tensor>,
+        x: &Tensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Whole-network batch forward → logits `(batch, ncls)`.
+    fn eval_logits(
+        &self,
+        arch: &ArchSpec,
+        ncls: usize,
+        params: &[Tensor],
+        x: &Tensor,
+    ) -> Result<Tensor>;
+
+    /// Warm any compilation caches needed to serve `arch` with these
+    /// per-task class counts; returns the number of entries warmed.
+    /// No-op for backends that don't compile.
+    fn warmup(&self, arch: &ArchSpec, ncls: &[usize]) -> Result<usize> {
+        let _ = (arch, ncls);
+        Ok(0)
     }
 }
 
-fn to_literal(arg: &Arg, want_shape: &[usize]) -> Result<xla::Literal> {
-    match arg {
-        Arg::F32(t) => {
-            if t.shape != want_shape {
-                bail!("shape mismatch: have {:?}", t.shape);
-            }
-            // single-copy construction (vec1+reshape copies twice)
-            let bytes = unsafe {
-                std::slice::from_raw_parts(
-                    t.data.as_ptr() as *const u8,
-                    t.data.len() * 4,
-                )
-            };
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &t.shape,
-                bytes,
-            )
-            .map_err(|e| anyhow!("literal: {e:?}"))
+macro_rules! forward_backend_impl {
+    () => {
+        fn name(&self) -> &'static str {
+            (**self).name()
         }
-        Arg::I32(v) => {
-            if want_shape != [v.len()] {
-                bail!("i32 arg length {} vs shape {:?}", v.len(), want_shape);
-            }
-            Ok(xla::Literal::vec1(v))
+        fn arch(&self, name: &str) -> Result<ArchSpec> {
+            (**self).arch(name)
         }
-        Arg::ScalarF32(x) => {
-            if !want_shape.is_empty() {
-                bail!("scalar arg vs shape {:?}", want_shape);
+        fn arch_names(&self) -> Vec<String> {
+            (**self).arch_names()
+        }
+        fn run_layer(
+            &self,
+            arch: &ArchSpec,
+            layer: usize,
+            ncls: Option<usize>,
+            x: &Tensor,
+            w: &Tensor,
+            b: &Tensor,
+        ) -> Result<Tensor> {
+            (**self).run_layer(arch, layer, ncls, x, w, b)
+        }
+        fn train_step(
+            &self,
+            arch: &ArchSpec,
+            ncls: usize,
+            params: &mut Vec<Tensor>,
+            x: &Tensor,
+            y: &[i32],
+            lr: f32,
+        ) -> Result<f32> {
+            (**self).train_step(arch, ncls, params, x, y, lr)
+        }
+        fn eval_logits(
+            &self,
+            arch: &ArchSpec,
+            ncls: usize,
+            params: &[Tensor],
+            x: &Tensor,
+        ) -> Result<Tensor> {
+            (**self).eval_logits(arch, ncls, params, x)
+        }
+        fn warmup(&self, arch: &ArchSpec, ncls: &[usize]) -> Result<usize> {
+            (**self).warmup(arch, ncls)
+        }
+    };
+}
+
+impl<'a, B: Backend + ?Sized> Backend for &'a B {
+    forward_backend_impl!();
+}
+
+impl<B: Backend + ?Sized> Backend for Box<B> {
+    forward_backend_impl!();
+}
+
+impl<B: Backend + ?Sized> Backend for std::rc::Rc<B> {
+    forward_backend_impl!();
+}
+
+impl<B: Backend + ?Sized> Backend for std::sync::Arc<B> {
+    forward_backend_impl!();
+}
+
+/// True when the PJRT engine can actually load: built with `--features
+/// pjrt` AND the AOT artifacts exist on disk.
+#[cfg(feature = "pjrt")]
+pub fn pjrt_available() -> bool {
+    crate::model::manifest::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+/// True when the PJRT engine can actually load: built with `--features
+/// pjrt` AND the AOT artifacts exist on disk.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_available() -> bool {
+    false
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend() -> Result<Box<dyn Backend>> {
+    let dir = crate::model::manifest::default_artifacts_dir();
+    Ok(Box::new(Engine::load(&dir)?))
+}
+
+/// Artifact-gated engine for PJRT test variants: `Some` only when the
+/// AOT artifacts exist on disk. The single source of truth for artifact
+/// detection in tests — keep skip conditions from drifting apart.
+#[cfg(feature = "pjrt")]
+pub fn pjrt_test_engine() -> Option<Engine> {
+    pjrt_available().then(|| {
+        Engine::load(&crate::model::manifest::default_artifacts_dir())
+            .expect("artifacts exist but the engine failed to load")
+    })
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend() -> Result<Box<dyn Backend>> {
+    anyhow::bail!(
+        "the pjrt backend requires building with `--features pjrt` \
+         (and `python -m compile.aot` artifacts)"
+    )
+}
+
+/// Construct the backend named by `ANTLER_BACKEND`, defaulting to PJRT
+/// when available and the pure-Rust reference backend otherwise.
+pub fn backend_from_env() -> Result<Box<dyn Backend>> {
+    match std::env::var(BACKEND_ENV).ok().as_deref() {
+        Some("reference") | Some("ref") => Ok(Box::new(ReferenceBackend::new())),
+        Some("pjrt") => pjrt_backend(),
+        Some(other) => anyhow::bail!(
+            "unknown {BACKEND_ENV}={other:?} (expected \"reference\" or \"pjrt\")"
+        ),
+        None => {
+            if pjrt_available() {
+                pjrt_backend()
+            } else {
+                Ok(Box::new(ReferenceBackend::new()))
             }
-            Ok(xla::Literal::scalar(*x))
         }
     }
 }
@@ -194,54 +218,27 @@ fn to_literal(arg: &Arg, want_shape: &[usize]) -> Result<xla::Literal> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::manifest::default_artifacts_dir;
 
-    fn engine() -> Option<Engine> {
-        let dir = default_artifacts_dir();
-        if dir.join("manifest.json").exists() {
-            Some(Engine::load(&dir).expect("engine loads"))
-        } else {
-            None // artifacts not built; run `make artifacts`
+    #[test]
+    fn reference_backend_is_always_constructible() {
+        let be = ReferenceBackend::new();
+        assert_eq!(be.name(), "reference");
+        assert!(be.arch("cnn5").is_ok());
+        assert!(be.arch_names().contains(&"dnn4".to_string()));
+    }
+
+    #[test]
+    fn trait_objects_and_smart_pointers_forward() {
+        let boxed: Box<dyn Backend> = Box::new(ReferenceBackend::new());
+        assert_eq!(boxed.name(), "reference");
+        // &dyn Backend is itself a Backend (the executor stores it by value)
+        fn takes_backend<B: Backend>(b: B) -> &'static str {
+            b.name()
         }
-    }
-
-    #[test]
-    fn arg_shape_validation() {
-        let t = Tensor::zeros(vec![2, 3]);
-        assert!(to_literal(&Arg::F32(&t), &[2, 3]).is_ok());
-        assert!(to_literal(&Arg::F32(&t), &[3, 2]).is_err());
-        assert!(to_literal(&Arg::I32(&[1, 2]), &[2]).is_ok());
-        assert!(to_literal(&Arg::I32(&[1, 2]), &[3]).is_err());
-        assert!(to_literal(&Arg::ScalarF32(0.5), &[]).is_ok());
-        assert!(to_literal(&Arg::ScalarF32(0.5), &[1]).is_err());
-    }
-
-    #[test]
-    fn engine_runs_a_layer_artifact() {
-        let Some(eng) = engine() else { return };
-        let x = Tensor::full(vec![1, 16, 16, 1], 0.5);
-        let w = Tensor::full(vec![3, 3, 1, 8], 0.1);
-        let b = Tensor::zeros(vec![8]);
-        let y = eng.run_layer("cnn5", 0, None, &x, &w, &b).unwrap();
-        assert_eq!(y.shape, vec![1, 8, 8, 8]);
-        // conv(0.5, 0.1 kernel) interior = 9*0.5*0.1 = 0.45; pooled max > 0
-        assert!(y.data.iter().all(|&v| v > 0.0));
-        assert!(y.data.iter().any(|&v| (v - 0.45).abs() < 1e-5));
-    }
-
-    #[test]
-    fn executable_cache_hits() {
-        let Some(eng) = engine() else { return };
-        let _ = eng.executable("layer_cnn5_0_b1").unwrap();
-        let before = eng.compiled_count();
-        let _ = eng.executable("layer_cnn5_0_b1").unwrap();
-        assert_eq!(eng.compiled_count(), before);
-    }
-
-    #[test]
-    fn run_rejects_wrong_arity() {
-        let Some(eng) = engine() else { return };
-        let x = Tensor::zeros(vec![1, 16, 16, 1]);
-        assert!(eng.run("layer_cnn5_0_b1", &[Arg::F32(&x)]).is_err());
+        assert_eq!(takes_backend(boxed.as_ref()), "reference");
+        let rc = std::rc::Rc::new(ReferenceBackend::new());
+        assert_eq!(takes_backend(rc), "reference");
+        let arc = std::sync::Arc::new(ReferenceBackend::new());
+        assert_eq!(takes_backend(arc), "reference");
     }
 }

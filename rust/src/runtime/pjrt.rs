@@ -1,0 +1,323 @@
+//! PJRT backend: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate. This is the only place python-produced bits enter the
+//! system; after `Engine::load`, the process is self-contained.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos; the text parser reassigns instruction
+//! ids) — see /opt/xla-example/README.md.
+//!
+//! `PjRtClient` is `Rc`-based (!Send), so an `Engine` is pinned to one
+//! thread; the serving coordinator owns it on a dedicated executor thread
+//! — which also mirrors the single-core MCU execution model being
+//! simulated. Sharded serving uses the `Send` reference backend instead.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::Backend;
+use crate::model::{manifest::Manifest, ArchSpec, Tensor};
+
+/// Inputs accepted by [`Engine::run`].
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Executions performed (for the perf counters).
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and cache the named artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact matching `filter` (startup warm-up).
+    pub fn precompile(&self, filter: impl Fn(&str) -> bool) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .entries
+            .keys()
+            .filter(|n| filter(n))
+            .cloned()
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    /// Execute an artifact. Output shapes come from the manifest entry.
+    /// (Perf note: `entry` is borrowed, not cloned — this is the serving
+    /// hot path; see EXPERIMENTS.md §Perf.)
+    pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.entry(name)?;
+        if args.len() != entry.inputs.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            let want = &entry.inputs[i];
+            literals.push(to_literal(a, want).with_context(|| {
+                format!("{name}: arg {i} (expected shape {want:?})")
+            })?);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        if tuple.len() != entry.outputs.len() {
+            bail!(
+                "{name}: manifest says {} outputs, got {}",
+                entry.outputs.len(),
+                tuple.len()
+            );
+        }
+        tuple
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, shape)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{name}: output not f32: {e:?}"))?;
+                Ok(Tensor::new(shape.clone(), data))
+            })
+            .collect()
+    }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn arch(&self, name: &str) -> Result<ArchSpec> {
+        self.manifest.arch(name).map(|a| a.clone())
+    }
+
+    fn arch_names(&self) -> Vec<String> {
+        self.manifest.archs.keys().cloned().collect()
+    }
+
+    fn run_layer(
+        &self,
+        arch: &ArchSpec,
+        layer: usize,
+        ncls: Option<usize>,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+    ) -> Result<Tensor> {
+        let batch = x.shape[0];
+        let name = self.manifest.layer_artifact(&arch.name, layer, ncls, batch);
+        let mut out = self.run(&name, &[Arg::F32(x), Arg::F32(w), Arg::F32(b)])?;
+        Ok(out.remove(0))
+    }
+
+    fn train_step(
+        &self,
+        arch: &ArchSpec,
+        ncls: usize,
+        params: &mut Vec<Tensor>,
+        x: &Tensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let name = self.manifest.train_artifact(&arch.name, ncls);
+        let mut args: Vec<Arg> = Vec::with_capacity(3 + params.len());
+        args.push(Arg::F32(x));
+        args.push(Arg::I32(y));
+        args.push(Arg::ScalarF32(lr));
+        for p in params.iter() {
+            args.push(Arg::F32(p));
+        }
+        let mut out = self.run(&name, &args)?;
+        if out.len() != params.len() + 1 {
+            bail!("train artifact returned {} outputs", out.len());
+        }
+        let loss = out[0].data[0];
+        for (i, p) in params.iter_mut().enumerate() {
+            *p = std::mem::replace(&mut out[i + 1], Tensor::zeros(vec![0]));
+        }
+        Ok(loss)
+    }
+
+    fn eval_logits(
+        &self,
+        arch: &ArchSpec,
+        ncls: usize,
+        params: &[Tensor],
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let name = self.manifest.eval_artifact(&arch.name, ncls);
+        let mut args: Vec<Arg> = Vec::with_capacity(1 + params.len());
+        args.push(Arg::F32(x));
+        for p in params {
+            args.push(Arg::F32(p));
+        }
+        let mut out = self.run(&name, &args)?;
+        Ok(out.remove(0))
+    }
+
+    /// Pre-compile every batch-1 layer artifact the (arch, class counts)
+    /// pair needs for serving.
+    fn warmup(&self, arch: &ArchSpec, ncls: &[usize]) -> Result<usize> {
+        let mut n = 0;
+        for l in 0..arch.n_layers() {
+            let is_logits = arch.layers[l].is_logits();
+            if is_logits {
+                let mut seen = std::collections::BTreeSet::new();
+                for &c in ncls {
+                    if seen.insert(c) {
+                        let name =
+                            self.manifest.layer_artifact(&arch.name, l, Some(c), 1);
+                        self.executable(&name)?;
+                        n += 1;
+                    }
+                }
+            } else {
+                let name = self.manifest.layer_artifact(&arch.name, l, None, 1);
+                self.executable(&name)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+}
+
+fn to_literal(arg: &Arg, want_shape: &[usize]) -> Result<xla::Literal> {
+    match arg {
+        Arg::F32(t) => {
+            if t.shape != want_shape {
+                bail!("shape mismatch: have {:?}", t.shape);
+            }
+            // single-copy construction (vec1+reshape copies twice)
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    t.data.as_ptr() as *const u8,
+                    t.data.len() * 4,
+                )
+            };
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &t.shape,
+                bytes,
+            )
+            .map_err(|e| anyhow!("literal: {e:?}"))
+        }
+        Arg::I32(v) => {
+            if want_shape != [v.len()] {
+                bail!("i32 arg length {} vs shape {:?}", v.len(), want_shape);
+            }
+            Ok(xla::Literal::vec1(v))
+        }
+        Arg::ScalarF32(x) => {
+            if !want_shape.is_empty() {
+                bail!("scalar arg vs shape {:?}", want_shape);
+            }
+            Ok(xla::Literal::scalar(*x))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::pjrt_test_engine as engine;
+
+    #[test]
+    fn arg_shape_validation() {
+        let t = Tensor::zeros(vec![2, 3]);
+        assert!(to_literal(&Arg::F32(&t), &[2, 3]).is_ok());
+        assert!(to_literal(&Arg::F32(&t), &[3, 2]).is_err());
+        assert!(to_literal(&Arg::I32(&[1, 2]), &[2]).is_ok());
+        assert!(to_literal(&Arg::I32(&[1, 2]), &[3]).is_err());
+        assert!(to_literal(&Arg::ScalarF32(0.5), &[]).is_ok());
+        assert!(to_literal(&Arg::ScalarF32(0.5), &[1]).is_err());
+    }
+
+    #[test]
+    fn engine_runs_a_layer_artifact() {
+        let Some(eng) = engine() else { return };
+        let arch = eng.arch("cnn5").unwrap();
+        let x = Tensor::full(vec![1, 16, 16, 1], 0.5);
+        let w = Tensor::full(vec![3, 3, 1, 8], 0.1);
+        let b = Tensor::zeros(vec![8]);
+        let y = eng.run_layer(&arch, 0, None, &x, &w, &b).unwrap();
+        assert_eq!(y.shape, vec![1, 8, 8, 8]);
+        // conv(0.5, 0.1 kernel) interior = 9*0.5*0.1 = 0.45; pooled max > 0
+        assert!(y.data.iter().all(|&v| v > 0.0));
+        assert!(y.data.iter().any(|&v| (v - 0.45).abs() < 1e-5));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(eng) = engine() else { return };
+        let _ = eng.executable("layer_cnn5_0_b1").unwrap();
+        let before = eng.compiled_count();
+        let _ = eng.executable("layer_cnn5_0_b1").unwrap();
+        assert_eq!(eng.compiled_count(), before);
+    }
+
+    #[test]
+    fn run_rejects_wrong_arity() {
+        let Some(eng) = engine() else { return };
+        let x = Tensor::zeros(vec![1, 16, 16, 1]);
+        assert!(eng.run("layer_cnn5_0_b1", &[Arg::F32(&x)]).is_err());
+    }
+}

@@ -1,0 +1,759 @@
+//! Pure-Rust reference backend: interprets the block programs directly —
+//! conv2d (same-padded, stride 1, NHWC/HWIO), dense, 2×2 maxpool,
+//! leaky-ReLU and softmax cross-entropy — mirroring
+//! `python/compile/kernels/ref.py` to f32 tolerance. It needs no AOT
+//! artifacts, is `Send + Sync` (plain data + atomic counters), and
+//! implements the full [`Backend`] contract including training: the
+//! backward pass is hand-derived for the three layer kinds, so the
+//! trainer, pipeline and serving tests all run on any machine.
+//!
+//! This is the correctness oracle for the PJRT engine (tests/parity.rs)
+//! and the workhorse of the sharded executor pool
+//! (`coordinator::shard`), which wants one `Send` executor per thread.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::Backend;
+use crate::model::{archs::builtin_archs, ArchSpec, LayerKind, LayerSpec, Tensor};
+
+/// Slope of the leaky ReLU — must match `kernels/ref.py::LEAKY_SLOPE`.
+pub const LEAKY_SLOPE: f32 = 0.01;
+
+#[inline]
+fn leaky(v: f32) -> f32 {
+    if v > 0.0 {
+        v
+    } else {
+        LEAKY_SLOPE * v
+    }
+}
+
+#[inline]
+fn leaky_grad(z: f32) -> f32 {
+    if z > 0.0 {
+        1.0
+    } else {
+        LEAKY_SLOPE
+    }
+}
+
+pub struct ReferenceBackend {
+    archs: BTreeMap<String, ArchSpec>,
+    /// Layer executions performed (perf counter, mirrors Engine::exec_count).
+    layer_execs: AtomicU64,
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend {
+            archs: builtin_archs(),
+            layer_execs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn layer_exec_count(&self) -> u64 {
+        self.layer_execs.load(Ordering::Relaxed)
+    }
+
+    /// Mean softmax cross-entropy of `params` on a labelled batch —
+    /// exposed for gradient checking in tests.
+    pub fn loss(
+        &self,
+        arch: &ArchSpec,
+        ncls: usize,
+        params: &[Tensor],
+        x: &Tensor,
+        y: &[i32],
+    ) -> Result<f32> {
+        let logits = self.eval_logits(arch, ncls, params, x)?;
+        let (loss, _) = ce_loss_and_grad(&logits, y, ncls)?;
+        Ok(loss)
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn arch(&self, name: &str) -> Result<ArchSpec> {
+        self.archs
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown arch {name:?}"))
+    }
+
+    fn arch_names(&self) -> Vec<String> {
+        self.archs.keys().cloned().collect()
+    }
+
+    fn run_layer(
+        &self,
+        arch: &ArchSpec,
+        layer: usize,
+        ncls: Option<usize>,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+    ) -> Result<Tensor> {
+        let spec = arch
+            .layers
+            .get(layer)
+            .ok_or_else(|| anyhow!("{}: no layer {layer}", arch.name))?;
+        if spec.kind == LayerKind::Logits {
+            if let Some(c) = ncls {
+                if w.shape.len() != 2 || w.shape[1] != c {
+                    bail!(
+                        "{} layer {layer}: logits weights {:?} vs ncls {c}",
+                        arch.name,
+                        w.shape
+                    );
+                }
+            }
+        }
+        self.layer_execs.fetch_add(1, Ordering::Relaxed);
+        layer_forward(spec, x, w, b)
+    }
+
+    fn train_step(
+        &self,
+        arch: &ArchSpec,
+        ncls: usize,
+        params: &mut Vec<Tensor>,
+        x: &Tensor,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let nl = arch.n_layers();
+        if params.len() != 2 * nl {
+            bail!("expected {} params, got {}", 2 * nl, params.len());
+        }
+        let bsz = x.shape[0];
+        if y.len() != bsz {
+            bail!("batch {bsz} vs {} labels", y.len());
+        }
+
+        // ---- forward, caching what the backward pass needs
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(nl); // activation entering layer l
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(nl);
+        let mut cur = x.clone();
+        for (l, spec) in arch.layers.iter().enumerate() {
+            let w = &params[2 * l];
+            let b = &params[2 * l + 1];
+            let (out, cache) = layer_forward_cached(spec, &cur, w, b)?;
+            inputs.push(std::mem::replace(&mut cur, out));
+            caches.push(cache);
+        }
+        let logits = cur;
+        let (loss, mut grad) = ce_loss_and_grad(&logits, y, ncls)?;
+
+        // ---- backward + SGD update, last layer first
+        for l in (0..nl).rev() {
+            let spec = &arch.layers[l];
+            let w = &params[2 * l];
+            let (dw, db, dx) =
+                layer_backward(spec, &inputs[l], w, &caches[l], &grad)?;
+            apply_sgd(&mut params[2 * l], &dw, lr);
+            apply_sgd(&mut params[2 * l + 1], &db, lr);
+            grad = dx;
+        }
+        Ok(loss)
+    }
+
+    fn eval_logits(
+        &self,
+        arch: &ArchSpec,
+        ncls: usize,
+        params: &[Tensor],
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let nl = arch.n_layers();
+        if params.len() != 2 * nl {
+            bail!("expected {} params, got {}", 2 * nl, params.len());
+        }
+        let mut cur = x.clone();
+        for (l, spec) in arch.layers.iter().enumerate() {
+            if spec.kind == LayerKind::Logits && params[2 * l].shape[1] != ncls {
+                bail!(
+                    "logits weights {:?} vs ncls {ncls}",
+                    params[2 * l].shape
+                );
+            }
+            cur = layer_forward(spec, &cur, &params[2 * l], &params[2 * l + 1])?;
+        }
+        Ok(cur)
+    }
+}
+
+// ------------------------------------------------------------------ layers
+
+/// What the backward pass needs beyond the layer input.
+enum LayerCache {
+    /// Pre-activation conv output `z` and the flat argmax index (into the
+    /// pre-pool tensor) of every pooled element.
+    ConvPool { z: Tensor, pool_idx: Vec<usize> },
+    /// Pre-activation dense output `z` (the logits layer reuses this
+    /// without a nonlinearity).
+    Dense { z: Tensor },
+}
+
+fn layer_forward(spec: &LayerSpec, x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    match spec.kind {
+        LayerKind::ConvPool => {
+            let mut z = conv2d_raw(x, w, b)?;
+            for v in z.data.iter_mut() {
+                *v = leaky(*v);
+            }
+            let (p, _) = maxpool2x2(&z);
+            Ok(p)
+        }
+        LayerKind::Dense => {
+            let mut z = dense_raw(x, w, b)?;
+            for v in z.data.iter_mut() {
+                *v = leaky(*v);
+            }
+            Ok(z)
+        }
+        LayerKind::Logits => dense_raw(x, w, b),
+    }
+}
+
+fn layer_forward_cached(
+    spec: &LayerSpec,
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+) -> Result<(Tensor, LayerCache)> {
+    match spec.kind {
+        LayerKind::ConvPool => {
+            let z = conv2d_raw(x, w, b)?;
+            let mut a = z.clone();
+            for v in a.data.iter_mut() {
+                *v = leaky(*v);
+            }
+            let (p, pool_idx) = maxpool2x2(&a);
+            Ok((p, LayerCache::ConvPool { z, pool_idx }))
+        }
+        LayerKind::Dense => {
+            let z = dense_raw(x, w, b)?;
+            let mut a = z.clone();
+            for v in a.data.iter_mut() {
+                *v = leaky(*v);
+            }
+            Ok((a, LayerCache::Dense { z }))
+        }
+        LayerKind::Logits => {
+            let z = dense_raw(x, w, b)?;
+            Ok((z.clone(), LayerCache::Dense { z }))
+        }
+    }
+}
+
+/// Backward through one layer. Returns (dw, db, dx).
+fn layer_backward(
+    spec: &LayerSpec,
+    x: &Tensor,
+    w: &Tensor,
+    cache: &LayerCache,
+    dout: &Tensor,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    match (spec.kind, cache) {
+        (LayerKind::ConvPool, LayerCache::ConvPool { z, pool_idx }) => {
+            // un-pool: route each pooled gradient to its argmax source
+            let mut da = Tensor::zeros(z.shape.clone());
+            for (o, &src) in pool_idx.iter().enumerate() {
+                da.data[src] += dout.data[o];
+            }
+            // through the leaky ReLU
+            let mut dz = da;
+            for (g, &zv) in dz.data.iter_mut().zip(&z.data) {
+                *g *= leaky_grad(zv);
+            }
+            conv2d_backward(x, w, &dz)
+        }
+        (LayerKind::Dense, LayerCache::Dense { z }) => {
+            let mut dz = dout.clone();
+            for (g, &zv) in dz.data.iter_mut().zip(&z.data) {
+                *g *= leaky_grad(zv);
+            }
+            dense_backward(x, w, &dz)
+        }
+        (LayerKind::Logits, LayerCache::Dense { .. }) => {
+            dense_backward(x, w, dout)
+        }
+        _ => bail!("layer cache kind mismatch"),
+    }
+}
+
+fn apply_sgd(p: &mut Tensor, g: &Tensor, lr: f32) {
+    debug_assert_eq!(p.shape, g.shape);
+    for (pv, &gv) in p.data.iter_mut().zip(&g.data) {
+        *pv -= lr * gv;
+    }
+}
+
+// ------------------------------------------------------------------ dense
+
+/// y = flatten(x) @ w + b. x: (B, ...); w: (K, D); b: (D).
+fn dense_raw(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let bsz = x.shape[0];
+    let k: usize = x.shape[1..].iter().product();
+    if w.shape.len() != 2 || w.shape[0] != k {
+        bail!("dense: input {:?} vs weights {:?}", x.shape, w.shape);
+    }
+    let d = w.shape[1];
+    if b.shape != [d] {
+        bail!("dense: bias {:?} vs width {d}", b.shape);
+    }
+    let mut out = vec![0.0f32; bsz * d];
+    for i in 0..bsz {
+        let xi = &x.data[i * k..(i + 1) * k];
+        let oi = &mut out[i * d..(i + 1) * d];
+        oi.copy_from_slice(&b.data);
+        for (kk, &xv) in xi.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[kk * d..(kk + 1) * d];
+            for (ov, &wv) in oi.iter_mut().zip(wrow) {
+                *ov += xv * wv;
+            }
+        }
+    }
+    Ok(Tensor::new(vec![bsz, d], out))
+}
+
+/// Backward for y = flatten(x) @ w + b given dz = ∂L/∂y.
+/// Returns (dw, db, dx) with dx in x's original shape.
+fn dense_backward(x: &Tensor, w: &Tensor, dz: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+    let bsz = x.shape[0];
+    let k: usize = x.shape[1..].iter().product();
+    let d = w.shape[1];
+    if dz.shape != [bsz, d] {
+        bail!("dense backward: dz {:?} vs ({bsz}, {d})", dz.shape);
+    }
+    let mut dw = vec![0.0f32; k * d];
+    let mut db = vec![0.0f32; d];
+    let mut dx = vec![0.0f32; bsz * k];
+    for i in 0..bsz {
+        let xi = &x.data[i * k..(i + 1) * k];
+        let gi = &dz.data[i * d..(i + 1) * d];
+        for (bv, &gv) in db.iter_mut().zip(gi) {
+            *bv += gv;
+        }
+        let dxi = &mut dx[i * k..(i + 1) * k];
+        for kk in 0..k {
+            let wrow = &w.data[kk * d..(kk + 1) * d];
+            let dwrow = &mut dw[kk * d..(kk + 1) * d];
+            let xv = xi[kk];
+            let mut acc = 0.0f32;
+            for dd in 0..d {
+                dwrow[dd] += xv * gi[dd];
+                acc += wrow[dd] * gi[dd];
+            }
+            dxi[kk] = acc;
+        }
+    }
+    Ok((
+        Tensor::new(vec![k, d], dw),
+        Tensor::new(vec![d], db),
+        Tensor::new(x.shape.clone(), dx),
+    ))
+}
+
+// ------------------------------------------------------------------- conv
+
+/// Same-padded stride-1 conv + bias (no activation).
+/// x: (B, H, W, Cin) NHWC; w: (KH, KW, Cin, Cout) HWIO; b: (Cout).
+fn conv2d_raw(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if x.rank() != 4 || w.rank() != 4 {
+        bail!("conv2d: x {:?}, w {:?}", x.shape, w.shape);
+    }
+    let (bsz, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, wcin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if wcin != cin {
+        bail!("conv2d: cin {cin} vs kernel {wcin}");
+    }
+    if b.shape != [cout] {
+        bail!("conv2d: bias {:?} vs cout {cout}", b.shape);
+    }
+    // XLA SAME padding for stride 1: total k-1, low half rounded down.
+    let (pad_t, pad_l) = ((kh - 1) / 2, (kw - 1) / 2);
+    let mut out = vec![0.0f32; bsz * h * wd * cout];
+    let mut acc = vec![0.0f32; cout];
+    for n in 0..bsz {
+        for oy in 0..h {
+            for ox in 0..wd {
+                acc.copy_from_slice(&b.data);
+                for ky in 0..kh {
+                    let iy = oy + ky;
+                    if iy < pad_t || iy >= h + pad_t {
+                        continue;
+                    }
+                    let iy = iy - pad_t;
+                    for kx in 0..kw {
+                        let ix = ox + kx;
+                        if ix < pad_l || ix >= wd + pad_l {
+                            continue;
+                        }
+                        let ix = ix - pad_l;
+                        let xbase = ((n * h + iy) * wd + ix) * cin;
+                        let wbase = (ky * kw + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[xbase + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w.data[wbase + ci * cout..wbase + (ci + 1) * cout];
+                            for (av, &wv) in acc.iter_mut().zip(wrow) {
+                                *av += xv * wv;
+                            }
+                        }
+                    }
+                }
+                let obase = ((n * h + oy) * wd + ox) * cout;
+                out[obase..obase + cout].copy_from_slice(&acc);
+            }
+        }
+    }
+    Ok(Tensor::new(vec![bsz, h, wd, cout], out))
+}
+
+/// Backward for z = conv2d(x, w) + b given dz. Returns (dw, db, dx).
+fn conv2d_backward(x: &Tensor, w: &Tensor, dz: &Tensor) -> Result<(Tensor, Tensor, Tensor)> {
+    let (bsz, h, wd, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, _, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    if dz.shape != [bsz, h, wd, cout] {
+        bail!("conv backward: dz {:?}", dz.shape);
+    }
+    let (pad_t, pad_l) = ((kh - 1) / 2, (kw - 1) / 2);
+    let mut dw = vec![0.0f32; kh * kw * cin * cout];
+    let mut db = vec![0.0f32; cout];
+    let mut dx = vec![0.0f32; bsz * h * wd * cin];
+    for n in 0..bsz {
+        for oy in 0..h {
+            for ox in 0..wd {
+                let zbase = ((n * h + oy) * wd + ox) * cout;
+                let gz = &dz.data[zbase..zbase + cout];
+                for (bv, &gv) in db.iter_mut().zip(gz) {
+                    *bv += gv;
+                }
+                for ky in 0..kh {
+                    let iy = oy + ky;
+                    if iy < pad_t || iy >= h + pad_t {
+                        continue;
+                    }
+                    let iy = iy - pad_t;
+                    for kx in 0..kw {
+                        let ix = ox + kx;
+                        if ix < pad_l || ix >= wd + pad_l {
+                            continue;
+                        }
+                        let ix = ix - pad_l;
+                        let xbase = ((n * h + iy) * wd + ix) * cin;
+                        let wbase = (ky * kw + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x.data[xbase + ci];
+                            let woff = wbase + ci * cout;
+                            let wrow = &w.data[woff..woff + cout];
+                            let dwrow = &mut dw[woff..woff + cout];
+                            let mut acc = 0.0f32;
+                            for co in 0..cout {
+                                dwrow[co] += xv * gz[co];
+                                acc += wrow[co] * gz[co];
+                            }
+                            dx[xbase + ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((
+        Tensor::new(w.shape.clone(), dw),
+        Tensor::new(vec![cout], db),
+        Tensor::new(x.shape.clone(), dx),
+    ))
+}
+
+// ------------------------------------------------------------------- pool
+
+/// 2×2 max pooling, stride 2 (even H, W). Returns the pooled tensor and
+/// the flat source index of every pooled element (for the backward pass).
+fn maxpool2x2(x: &Tensor) -> (Tensor, Vec<usize>) {
+    let (bsz, h, wd, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / 2, wd / 2);
+    let mut out = vec![0.0f32; bsz * oh * ow * c];
+    let mut idx = vec![0usize; out.len()];
+    for n in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for cc in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = 0usize;
+                    for dy in 0..2 {
+                        for dxo in 0..2 {
+                            let src =
+                                ((n * h + 2 * oy + dy) * wd + 2 * ox + dxo) * c + cc;
+                            let v = x.data[src];
+                            if v > best {
+                                best = v;
+                                best_i = src;
+                            }
+                        }
+                    }
+                    let o = ((n * oh + oy) * ow + ox) * c + cc;
+                    out[o] = best;
+                    idx[o] = best_i;
+                }
+            }
+        }
+    }
+    (Tensor::new(vec![bsz, oh, ow, c], out), idx)
+}
+
+// ------------------------------------------------------------------- loss
+
+/// Mean softmax cross-entropy and ∂L/∂logits for int labels.
+fn ce_loss_and_grad(logits: &Tensor, y: &[i32], ncls: usize) -> Result<(f32, Tensor)> {
+    let bsz = logits.shape[0];
+    if logits.shape != [bsz, ncls] {
+        bail!("loss: logits {:?} vs ncls {ncls}", logits.shape);
+    }
+    let mut loss = 0.0f32;
+    let mut grad = vec![0.0f32; bsz * ncls];
+    let inv_b = 1.0 / bsz as f32;
+    for i in 0..bsz {
+        let label = y[i];
+        if label < 0 || label as usize >= ncls {
+            bail!("label {label} out of range 0..{ncls}");
+        }
+        let row = &logits.data[i * ncls..(i + 1) * ncls];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&v| (v - m).exp()).sum();
+        let lse = m + sum.ln();
+        loss += lse - row[label as usize];
+        let g = &mut grad[i * ncls..(i + 1) * ncls];
+        for (j, gv) in g.iter_mut().enumerate() {
+            let p = (row[j] - lse).exp();
+            *gv = (p - if j == label as usize { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    Ok((loss * inv_b, Tensor::new(vec![bsz, ncls], grad)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn backend() -> ReferenceBackend {
+        ReferenceBackend::new()
+    }
+
+    #[test]
+    fn conv_pool_layer_matches_hand_value() {
+        // mirror of the PJRT `engine_runs_a_layer_artifact` oracle
+        let be = backend();
+        let arch = be.arch("cnn5").unwrap();
+        let x = Tensor::full(vec![1, 16, 16, 1], 0.5);
+        let w = Tensor::full(vec![3, 3, 1, 8], 0.1);
+        let b = Tensor::zeros(vec![8]);
+        let y = be.run_layer(&arch, 0, None, &x, &w, &b).unwrap();
+        assert_eq!(y.shape, vec![1, 8, 8, 8]);
+        // conv(0.5, 0.1 kernel) interior = 9*0.5*0.1 = 0.45; pooled max > 0
+        assert!(y.data.iter().all(|&v| v > 0.0));
+        assert!(y.data.iter().any(|&v| (v - 0.45).abs() < 1e-5));
+        assert_eq!(be.layer_exec_count(), 1);
+    }
+
+    #[test]
+    fn dense_layer_computes_affine_leaky() {
+        let be = backend();
+        let arch = be.arch("dnn4").unwrap();
+        // din=128 for layer 0; use w = 0 except first row → y depends on x[0]
+        let mut wdat = vec![0.0f32; 128 * 64];
+        wdat[0] = 2.0; // w[0][0]
+        let w = Tensor::new(vec![128, 64], wdat);
+        let b = Tensor::full(vec![64], 0.5);
+        let mut xdat = vec![0.0f32; 128];
+        xdat[0] = -1.0;
+        let x = Tensor::new(vec![1, 128], xdat);
+        let y = be.run_layer(&arch, 0, None, &x, &w, &b).unwrap();
+        // y[0] = leaky(-2 + 0.5) = 0.01 * -1.5; y[1..] = 0.5
+        assert!((y.data[0] - (-0.015)).abs() < 1e-6);
+        assert!((y.data[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn maxpool_routes_to_argmax() {
+        let x = Tensor::new(
+            vec![1, 2, 2, 1],
+            vec![1.0, 4.0, 3.0, 2.0], // (0,0)=1 (0,1)=4 (1,0)=3 (1,1)=2
+        );
+        let (p, idx) = maxpool2x2(&x);
+        assert_eq!(p.shape, vec![1, 1, 1, 1]);
+        assert_eq!(p.data, vec![4.0]);
+        assert_eq!(idx, vec![1]);
+    }
+
+    #[test]
+    fn softmax_loss_and_grad_sum_to_zero() {
+        let logits = Tensor::new(vec![2, 3], vec![1.0, 2.0, 0.5, -1.0, 0.0, 3.0]);
+        let (loss, grad) = ce_loss_and_grad(&logits, &[1, 2], 3).unwrap();
+        assert!(loss > 0.0);
+        // each row of the softmax-CE gradient sums to zero
+        for i in 0..2 {
+            let s: f32 = grad.data[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "row {i} sums to {s}");
+        }
+        // the true-label entry is negative (probability < 1)
+        assert!(grad.data[1] < 0.0);
+        assert!(grad.data[3 + 2] < 0.0);
+    }
+
+    /// Finite-difference gradient check of the whole train_step backward
+    /// pass, through conv+pool+leaky and dense layers alike.
+    #[test]
+    fn train_step_gradients_match_finite_differences() {
+        let be = backend();
+        for arch_name in ["dnn4", "cnn5"] {
+            let arch = be.arch(arch_name).unwrap();
+            let ncls = 2usize;
+            let mut rng = Pcg32::seed(0x9A0 + arch.n_layers() as u64);
+            let params: Vec<Tensor> = arch
+                .flat_param_shapes(ncls)
+                .into_iter()
+                .map(|s| Tensor::he_init(s, &mut rng))
+                .collect();
+            let bsz = 3usize;
+            let mut xshape = vec![bsz];
+            xshape.extend_from_slice(&arch.input);
+            let n: usize = xshape.iter().product();
+            let x = Tensor::new(
+                xshape,
+                (0..n).map(|_| rng.gauss() * 0.5).collect(),
+            );
+            let y: Vec<i32> = (0..bsz).map(|i| (i % ncls) as i32).collect();
+
+            // analytic gradient via the SGD update: g = (before - after)/lr
+            let lr = 1e-3f32;
+            let mut stepped = params.clone();
+            be.train_step(&arch, ncls, &mut stepped, &x, &y, lr).unwrap();
+
+            // probe a few parameter coordinates across tensors
+            for (ti, off) in [(0usize, 0usize), (0, 3), (2, 1)] {
+                let g_analytic =
+                    (params[ti].data[off] - stepped[ti].data[off]) / lr;
+                let eps = 1e-2f32;
+                let mut plus = params.clone();
+                plus[ti].data[off] += eps;
+                let mut minus = params.clone();
+                minus[ti].data[off] -= eps;
+                let lp = be.loss(&arch, ncls, &plus, &x, &y).unwrap();
+                let lm = be.loss(&arch, ncls, &minus, &x, &y).unwrap();
+                let g_numeric = (lp - lm) / (2.0 * eps);
+                let tol = 1e-2f32.max(0.15 * g_numeric.abs());
+                assert!(
+                    (g_analytic - g_numeric).abs() < tol,
+                    "{arch_name} param {ti}[{off}]: analytic {g_analytic} vs numeric {g_numeric}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_separable_toy_task() {
+        let be = backend();
+        let arch = be.arch("dnn4").unwrap();
+        let mut rng = Pcg32::seed(77);
+        let mut params: Vec<Tensor> = arch
+            .flat_param_shapes(2)
+            .into_iter()
+            .map(|s| Tensor::he_init(s, &mut rng))
+            .collect();
+        let mut losses = Vec::new();
+        for _ in 0..100 {
+            // label = sign of the mean of the first 8 features
+            let bsz = 32;
+            let mut xd = Vec::with_capacity(bsz * 128);
+            let mut y = Vec::with_capacity(bsz);
+            for _ in 0..bsz {
+                let row: Vec<f32> = (0..128).map(|_| rng.gauss()).collect();
+                let m: f32 = row[..8].iter().sum::<f32>() / 8.0;
+                y.push((m > 0.0) as i32);
+                xd.extend(row);
+            }
+            let x = Tensor::new(vec![bsz, 128], xd);
+            losses.push(be.train_step(&arch, 2, &mut params, &x, &y, 0.05).unwrap());
+        }
+        let head = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(
+            tail < head * 0.7,
+            "loss did not fall: {head} -> {tail}"
+        );
+    }
+
+    #[test]
+    fn eval_matches_layerwise_execution_exactly() {
+        // blockwise (run_layer chain) and whole-net eval must agree bit-
+        // for-bit: both walk the same kernels in the same order
+        let be = backend();
+        let arch = be.arch("cnn5").unwrap();
+        let mut rng = Pcg32::seed(21);
+        let params: Vec<Tensor> = arch
+            .flat_param_shapes(3)
+            .into_iter()
+            .map(|s| Tensor::he_init(s, &mut rng))
+            .collect();
+        let x = Tensor::new(
+            vec![2, 16, 16, 1],
+            (0..512).map(|_| rng.gauss()).collect(),
+        );
+        let whole = be.eval_logits(&arch, 3, &params, &x).unwrap();
+        let mut cur = x;
+        for l in 0..arch.n_layers() {
+            let is_logits = arch.layers[l].is_logits();
+            cur = be
+                .run_layer(
+                    &arch,
+                    l,
+                    is_logits.then_some(3),
+                    &cur,
+                    &params[2 * l],
+                    &params[2 * l + 1],
+                )
+                .unwrap();
+        }
+        assert_eq!(whole, cur);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_labels() {
+        let be = backend();
+        let arch = be.arch("dnn4").unwrap();
+        let mut rng = Pcg32::seed(1);
+        let mut params: Vec<Tensor> = arch
+            .flat_param_shapes(2)
+            .into_iter()
+            .map(|s| Tensor::he_init(s, &mut rng))
+            .collect();
+        let x = Tensor::zeros(vec![2, 128]);
+        // wrong arity
+        assert!(be.eval_logits(&arch, 2, &params[1..], &x).is_err());
+        // out-of-range label
+        assert!(be.train_step(&arch, 2, &mut params, &x, &[0, 5], 0.1).is_err());
+        // label count mismatch
+        assert!(be.train_step(&arch, 2, &mut params, &x, &[0], 0.1).is_err());
+    }
+}

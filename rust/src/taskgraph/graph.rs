@@ -165,7 +165,7 @@ impl TaskGraph {
             for tasks in p.groups() {
                 for l in layers.clone() {
                     let spec = &arch.layers[l];
-                    let c = if spec.cfg.get("dout") == Some(&0) {
+                    let c = if spec.is_logits() {
                         assert_eq!(tasks.len(), 1, "logits layer must be private");
                         ncls[tasks[0]]
                     } else {
@@ -200,7 +200,7 @@ impl TaskGraph {
         self.segment_layers(arch, s)
             .map(|l| {
                 let spec = &arch.layers[l];
-                let c = if spec.cfg.get("dout") == Some(&0) { ncls[task] } else { 2 };
+                let c = if spec.is_logits() { ncls[task] } else { 2 };
                 spec.param_bytes(c)
             })
             .sum()

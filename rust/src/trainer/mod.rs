@@ -1,18 +1,20 @@
-//! Training and evaluation drivers. Python never trains anything: the
-//! AOT `train_*` artifacts compute (loss, updated params) for one SGD
-//! step, and this module drives them from rust — individually per task
-//! (the Vanilla baseline and the affinity-profiling networks) or
-//! interleaved across a task graph (multitask training of shared blocks,
-//! the rust-side analog of the paper's branched-MTL retraining step [59]).
+//! Training and evaluation drivers, generic over the execution
+//! [`Backend`]: one SGD step computes (loss, updated params) — via the
+//! AOT `train_*` artifact on PJRT, or the hand-derived backward pass on
+//! the reference backend — and this module drives it from rust,
+//! individually per task (the Vanilla baseline and the affinity-profiling
+//! networks) or interleaved across a task graph (multitask training of
+//! shared blocks, the rust-side analog of the paper's branched-MTL
+//! retraining step [59]).
 
 pub mod weights;
 
 pub use weights::GraphWeights;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::model::{ArchSpec, Tensor};
-use crate::runtime::{Arg, Engine};
+use crate::runtime::Backend;
 use crate::taskgraph::TaskGraph;
 use crate::util::rng::Pcg32;
 
@@ -27,39 +29,23 @@ pub fn init_params(arch: &ArchSpec, ncls: usize, rng: &mut Pcg32) -> Vec<Tensor>
         .collect()
 }
 
-/// One SGD step through the AOT train artifact. Returns the loss;
-/// `params` is updated in place.
-pub fn train_step(
-    engine: &Engine,
-    arch: &str,
+/// One SGD step on the backend. Returns the loss; `params` is updated in
+/// place.
+pub fn train_step<B: Backend + ?Sized>(
+    backend: &B,
+    arch: &ArchSpec,
     ncls: usize,
     params: &mut Vec<Tensor>,
     x: &Tensor,
     y: &[i32],
     lr: f32,
 ) -> Result<f32> {
-    let name = engine.manifest().train_artifact(arch, ncls);
-    let mut args: Vec<Arg> = Vec::with_capacity(3 + params.len());
-    args.push(Arg::F32(x));
-    args.push(Arg::I32(y));
-    args.push(Arg::ScalarF32(lr));
-    for p in params.iter() {
-        args.push(Arg::F32(p));
-    }
-    let mut out = engine.run(&name, &args)?;
-    if out.len() != params.len() + 1 {
-        return Err(anyhow!("train artifact returned {} outputs", out.len()));
-    }
-    let loss = out[0].data[0];
-    for (i, p) in params.iter_mut().enumerate() {
-        *p = std::mem::replace(&mut out[i + 1], Tensor::zeros(vec![0]));
-    }
-    Ok(loss)
+    backend.train_step(arch, ncls, params, x, y, lr)
 }
 
 /// Train one network individually: `batch_fn(rng)` supplies (x, y).
-pub fn train_individual(
-    engine: &Engine,
+pub fn train_individual<B: Backend + ?Sized>(
+    backend: &B,
     arch: &ArchSpec,
     ncls: usize,
     steps: usize,
@@ -71,7 +57,7 @@ pub fn train_individual(
     let mut losses = Vec::with_capacity(steps);
     for _ in 0..steps {
         let (x, y) = batch_fn(rng);
-        losses.push(train_step(engine, &arch.name, ncls, &mut params, &x, &y, lr)?);
+        losses.push(train_step(backend, arch, ncls, &mut params, &x, &y, lr)?);
     }
     Ok((params, losses))
 }
@@ -81,8 +67,8 @@ pub fn train_individual(
 /// stepped, and written back — shared blocks therefore accumulate
 /// gradients from every task that owns them.
 #[allow(clippy::too_many_arguments)]
-pub fn train_graph(
-    engine: &Engine,
+pub fn train_graph<B: Backend + ?Sized>(
+    backend: &B,
     arch: &ArchSpec,
     graph: &TaskGraph,
     ncls: &[usize],
@@ -111,7 +97,7 @@ pub fn train_graph(
         let mut params = store.assemble(graph, arch, task);
         let (x, y) = batch_fn(task, rng);
         let loss = train_step(
-            engine, &arch.name, ncls[task], &mut params, &x, &y, lr * 0.2,
+            backend, arch, ncls[task], &mut params, &x, &y, lr * 0.2,
         )?;
         store.write_back(graph, arch, task, params);
         losses.push(loss);
@@ -121,18 +107,19 @@ pub fn train_graph(
         let mut params = store.assemble(graph, arch, task);
         let (x, y) = batch_fn(task, rng);
         let loss =
-            train_step(engine, &arch.name, ncls[task], &mut params, &x, &y, lr)?;
+            train_step(backend, arch, ncls[task], &mut params, &x, &y, lr)?;
         store.write_back_filtered(graph, arch, task, params, true);
         losses.push(loss);
     }
     Ok(losses)
 }
 
-/// Accuracy of a parameter set over a test set, via the batch-64 eval
-/// artifact (the Pallas serving path). The final ragged batch is padded
-/// by repetition and the padding predictions are discarded.
-pub fn evaluate(
-    engine: &Engine,
+/// Accuracy of a parameter set over a test set, via the backend's batch
+/// eval (the Pallas serving path on PJRT). The final ragged batch is
+/// padded by repetition and the padding predictions are discarded — the
+/// same flow on every backend, so accuracies stay comparable.
+pub fn evaluate<B: Backend + ?Sized>(
+    backend: &B,
     arch: &ArchSpec,
     ncls: usize,
     params: &[Tensor],
@@ -141,7 +128,6 @@ pub fn evaluate(
 ) -> Result<f64> {
     let n = x.shape[0];
     assert_eq!(n, y.len());
-    let name = engine.manifest().eval_artifact(&arch.name, ncls);
     let mut correct = 0usize;
     let mut done = 0usize;
     while done < n {
@@ -154,12 +140,7 @@ pub fn evaluate(
             let pad = x.slice_batch(0, EVAL_BATCH - take);
             Tensor::concat_batch(&[&part, &pad])
         };
-        let mut args: Vec<Arg> = vec![Arg::F32(&batch)];
-        for p in params {
-            args.push(Arg::F32(p));
-        }
-        let out = engine.run(&name, &args)?;
-        let logits = &out[0];
+        let logits = backend.eval_logits(arch, ncls, params, &batch)?;
         for i in 0..take {
             let row = &logits.data[i * ncls..(i + 1) * ncls];
             let pred = row
@@ -187,24 +168,17 @@ pub fn tail_mean(losses: &[f32], k: usize) -> f32 {
 mod tests {
     use super::*;
     use crate::data::dataset_by_name;
-    use crate::model::manifest::default_artifacts_dir;
-
-    fn engine() -> Option<Engine> {
-        let dir = default_artifacts_dir();
-        dir.join("manifest.json")
-            .exists()
-            .then(|| Engine::load(&dir).expect("engine"))
-    }
+    use crate::runtime::ReferenceBackend;
 
     #[test]
     fn individual_training_learns_imu_task() {
-        let Some(eng) = engine() else { return };
-        let arch = eng.manifest().arch("dnn4").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let arch = be.arch("dnn4").unwrap();
         let ds = dataset_by_name("hhar-s").unwrap().generate(&[128], 360);
         let (train, test) = ds.split();
         let mut rng = Pcg32::seed(1);
         let (params, losses) = train_individual(
-            &eng,
+            &be,
             &arch,
             2,
             60,
@@ -220,14 +194,14 @@ mod tests {
             tail_mean(&losses, 10)
         );
         let (xt, yt) = ds.gather(&test, 0);
-        let acc = evaluate(&eng, &arch, 2, &params, &xt, &yt).unwrap();
+        let acc = evaluate(&be, &arch, 2, &params, &xt, &yt).unwrap();
         assert!(acc > 0.7, "accuracy {acc}");
     }
 
     #[test]
     fn graph_training_updates_shared_blocks() {
-        let Some(eng) = engine() else { return };
-        let arch = eng.manifest().arch("dnn4").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let arch = be.arch("dnn4").unwrap();
         let graph = TaskGraph::shared(2, TaskGraph::default_bounds(4, 3));
         let ncls = vec![2, 2];
         let mut rng = Pcg32::seed(2);
@@ -236,7 +210,7 @@ mod tests {
         let (train, _) = ds.split();
         let before = store.assemble(&graph, &arch, 0);
         let losses = train_graph(
-            &eng,
+            &be,
             &arch,
             &graph,
             &ncls,
@@ -258,5 +232,38 @@ mod tests {
         assert!(p0[last].l2_dist(&p1[last]) > 0.0);
         // but they share the trunk tensors exactly
         assert_eq!(p0[0], p1[0]);
+    }
+
+    /// Same training flow on the PJRT engine — kept behind artifact
+    /// detection so `make artifacts` coverage still exercises the AOT
+    /// train path.
+    #[cfg(feature = "pjrt")]
+    mod pjrt {
+        use super::super::*;
+        use crate::data::dataset_by_name;
+        use crate::runtime::pjrt_test_engine as engine;
+
+        #[test]
+        fn individual_training_learns_imu_task_pjrt() {
+            let Some(eng) = engine() else { return };
+            let arch = eng.arch("dnn4").unwrap();
+            let ds = dataset_by_name("hhar-s").unwrap().generate(&[128], 360);
+            let (train, test) = ds.split();
+            let mut rng = Pcg32::seed(1);
+            let (params, losses) = train_individual(
+                &eng,
+                &arch,
+                2,
+                60,
+                0.05,
+                &mut rng,
+                |r| ds.balanced_batch(0, &train, TRAIN_BATCH, r),
+            )
+            .unwrap();
+            assert!(tail_mean(&losses, 10) < losses[0] * 0.8);
+            let (xt, yt) = ds.gather(&test, 0);
+            let acc = evaluate(&eng, &arch, 2, &params, &xt, &yt).unwrap();
+            assert!(acc > 0.7, "accuracy {acc}");
+        }
     }
 }

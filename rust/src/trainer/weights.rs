@@ -31,7 +31,7 @@ impl GraphWeights {
                 let mut tensors = Vec::new();
                 for l in graph.segment_layers(arch, s) {
                     let spec = &arch.layers[l];
-                    let c = if spec.cfg.get("dout") == Some(&0) {
+                    let c = if spec.is_logits() {
                         ncls[tasks[0]]
                     } else {
                         2

@@ -1,0 +1,116 @@
+//! PJRT ↔ reference-backend parity: same weights + input ⇒ logits within
+//! 1e-4 and identical argmax predictions. Compiled only with the `pjrt`
+//! feature and runs only when the AOT artifacts exist (`make artifacts`);
+//! the reference backend is the always-on oracle.
+#![cfg(feature = "pjrt")]
+
+use antler::model::Tensor;
+use antler::runtime::{pjrt_test_engine as engine, Backend, ReferenceBackend};
+use antler::util::rng::Pcg32;
+
+fn gauss_tensor(shape: Vec<usize>, scale: f32, rng: &mut Pcg32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gauss() * scale).collect())
+}
+
+#[test]
+fn layerwise_parity_on_cnn5() {
+    let Some(eng) = engine() else { return };
+    let rb = ReferenceBackend::new();
+    let arch = eng.arch("cnn5").unwrap();
+    let mut rng = Pcg32::seed(0xC0FFEE);
+    let mut cur_p = gauss_tensor(vec![1, 16, 16, 1], 1.0, &mut rng);
+    let mut cur_r = cur_p.clone();
+    for l in 0..arch.n_layers() {
+        let is_logits = arch.layers[l].is_logits();
+        let ncls = is_logits.then_some(2usize);
+        let shapes = arch.layers[l].param_shapes(2);
+        let w = Tensor::he_init(shapes[0].clone(), &mut rng);
+        let b = gauss_tensor(shapes[1].clone(), 0.1, &mut rng);
+        let yp = eng.run_layer(&arch, l, ncls, &cur_p, &w, &b).unwrap();
+        let yr = rb.run_layer(&arch, l, ncls, &cur_r, &w, &b).unwrap();
+        assert_eq!(yp.shape, yr.shape, "layer {l} shape");
+        let diff = yp.max_abs_diff(&yr);
+        assert!(diff < 1e-4, "layer {l} diverged: max |Δ| = {diff}");
+        cur_p = yp;
+        cur_r = yr;
+    }
+}
+
+#[test]
+fn whole_network_eval_parity_and_argmax() {
+    let Some(eng) = engine() else { return };
+    let rb = ReferenceBackend::new();
+    for (arch_name, ncls) in [("cnn5", 3usize), ("dnn4", 2)] {
+        let arch = eng.arch(arch_name).unwrap();
+        let mut rng = Pcg32::seed(0xBEEF ^ ncls as u64);
+        let params: Vec<Tensor> = arch
+            .flat_param_shapes(ncls)
+            .into_iter()
+            .map(|s| Tensor::he_init(s, &mut rng))
+            .collect();
+        // the PJRT eval artifact is lowered at batch 64
+        let mut xshape = vec![64usize];
+        xshape.extend_from_slice(&arch.input);
+        let xb = gauss_tensor(xshape, 1.0, &mut rng);
+        let lp = eng.eval_logits(&arch, ncls, &params, &xb).unwrap();
+        let lr = rb.eval_logits(&arch, ncls, &params, &xb).unwrap();
+        assert_eq!(lp.shape, lr.shape);
+        let diff = lp.max_abs_diff(&lr);
+        assert!(diff < 1e-4, "{arch_name}: logits max |Δ| = {diff}");
+        for i in 0..64 {
+            let row_p = &lp.data[i * ncls..(i + 1) * ncls];
+            let row_r = &lr.data[i * ncls..(i + 1) * ncls];
+            let am = |row: &[f32]| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0
+            };
+            assert_eq!(am(row_p), am(row_r), "{arch_name}: row {i} argmax");
+        }
+    }
+}
+
+#[test]
+fn blockwise_serving_parity() {
+    // the full executor stack on both backends must produce identical
+    // predictions for the same graph weights
+    use antler::coordinator::BlockExecutor;
+    use antler::device::Device;
+    use antler::taskgraph::TaskGraph;
+    use antler::trainer::GraphWeights;
+
+    let Some(eng) = engine() else { return };
+    let rb = ReferenceBackend::new();
+    let arch = eng.arch("cnn5").unwrap();
+    let graph = TaskGraph::shared(3, vec![1, 3, 4]);
+    let ncls = vec![2usize, 2, 2];
+    let mut rng = Pcg32::seed(0xABBA);
+    let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+    let mut ex_p = BlockExecutor::new(
+        &eng,
+        Device::msp430(),
+        arch.clone(),
+        graph.clone(),
+        ncls.clone(),
+        store.clone(),
+    );
+    let mut ex_r = BlockExecutor::new(
+        &rb,
+        Device::msp430(),
+        arch.clone(),
+        graph,
+        ncls,
+        store,
+    );
+    for sample in 0..6u64 {
+        let x = gauss_tensor(vec![1, 16, 16, 1], 1.0, &mut rng);
+        for t in 0..3 {
+            let (pp, _) = ex_p.run_task(sample, t, &x).unwrap();
+            let (pr, _) = ex_r.run_task(sample, t, &x).unwrap();
+            assert_eq!(pp, pr, "sample {sample} task {t}");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Property tests over the ordering solvers and the serve-plan
+//! constraint machinery, on the `testkit::prop_check` harness
+//! (`ANTLER_PROP_SEED=<seed> cargo test <name>` replays a failure).
+
+use antler::affinity::synthetic_affinity;
+use antler::coordinator::ServePlan;
+use antler::device::Device;
+use antler::memory::cost_matrix;
+use antler::model::archs::builtin_archs;
+use antler::ordering::{solve_brute, solve_held_karp, OrderingProblem};
+use antler::taskgraph::enumerate;
+use antler::testkit::{gen, prop_check};
+
+/// Brute force and Held–Karp must agree on the optimal cost for every
+/// small ordering instance derived from a random task graph — with and
+/// without random precedence DAGs.
+#[test]
+fn prop_brute_and_held_karp_agree_on_random_task_graphs() {
+    let archs = builtin_archs();
+    let arch = archs["cnn5"].clone();
+    prop_check(
+        "brute-vs-held-karp",
+        40,
+        |rng| {
+            let n = gen::usize_in(rng, 3, 7); // 3..=6 tasks
+            let aff = synthetic_affinity(n, 3, rng);
+            let graphs = enumerate::clustered(&aff, &[1, 3, 4], 40);
+            let g = graphs[rng.below(graphs.len())].clone();
+            let prec = gen::precedence_dag(rng, n, n / 2);
+            (n, g, prec)
+        },
+        |(n, g, prec)| {
+            let device = Device::msp430();
+            let ncls = vec![2usize; *n];
+            let c = cost_matrix(&device, &arch, g, &ncls, false);
+            let p = OrderingProblem::from_matrix(c).with_precedence(prec.clone());
+            match (solve_brute(&p), solve_held_karp(&p)) {
+                (Some(bf), Some(hk)) => {
+                    if !p.is_valid(&bf.order) {
+                        return Err(format!("brute order invalid: {:?}", bf.order));
+                    }
+                    if !p.is_valid(&hk.order) {
+                        return Err(format!("hk order invalid: {:?}", hk.order));
+                    }
+                    if (bf.cost - hk.cost).abs() > 1e-9 {
+                        return Err(format!(
+                            "cost mismatch: brute {} vs held-karp {}",
+                            bf.cost, hk.cost
+                        ));
+                    }
+                    Ok(())
+                }
+                (None, None) => Ok(()), // both deem it infeasible
+                (bf, hk) => Err(format!(
+                    "feasibility disagreement: brute {:?} vs hk {:?}",
+                    bf.map(|s| s.order),
+                    hk.map(|s| s.order)
+                )),
+            }
+        },
+    );
+}
+
+/// A ServePlan built from a conditional ordering solution never gates a
+/// task on an undecided prerequisite: by the time the serving loop
+/// consults `preds[pre]`, the prerequisite has already executed (or been
+/// decided) earlier in the order — the §4.3 invariant.
+#[test]
+fn prop_serve_plan_conditional_respects_precedence() {
+    prop_check(
+        "serveplan-conditional-precedence",
+        40,
+        |rng| {
+            let n = gen::usize_in(rng, 3, 9); // 3..=8 tasks
+            let flat = gen::sym_cost_matrix(rng, n, 50.0);
+            let cost: Vec<Vec<f64>> =
+                (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+            let dag = gen::precedence_dag(rng, n, n);
+            let cond: Vec<(usize, usize, f64)> = dag
+                .iter()
+                .map(|&(a, b)| (a, b, 0.25 + 0.5 * rng.f64()))
+                .collect();
+            (n, cost, cond)
+        },
+        |(n, cost, cond)| {
+            let p = OrderingProblem::from_matrix(cost.clone())
+                .with_conditional(cond.clone());
+            let sol = solve_held_karp(&p)
+                .ok_or_else(|| "acyclic DAG must be feasible".to_string())?;
+            if !p.is_valid(&sol.order) {
+                return Err(format!("solver order invalid: {:?}", sol.order));
+            }
+            let plan = ServePlan {
+                order: sol.order.clone(),
+                conditional: cond.iter().map(|&(a, b, _)| (a, b)).collect(),
+            };
+            // replay the server's gating loop: every prerequisite a task
+            // is gated on must already be decided when the task comes up
+            let mut decided = vec![false; *n];
+            for &t in &plan.order {
+                for &(pre, dep) in &plan.conditional {
+                    if dep == t && !decided[pre] {
+                        return Err(format!(
+                            "task {t} gated on undecided prerequisite {pre} \
+                             in order {:?}",
+                            plan.order
+                        ));
+                    }
+                }
+                decided[t] = true;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The expected-cost fitness of the solver's order is never beaten by a
+/// random valid order (Held–Karp optimality spot-check under
+/// conditionals).
+#[test]
+fn prop_held_karp_beats_random_valid_orders() {
+    prop_check(
+        "hk-beats-random",
+        30,
+        |rng| {
+            let n = gen::usize_in(rng, 4, 8);
+            let flat = gen::sym_cost_matrix(rng, n, 30.0);
+            let cost: Vec<Vec<f64>> =
+                (0..n).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect();
+            let perms: Vec<Vec<usize>> =
+                (0..20).map(|_| gen::permutation(rng, n)).collect();
+            (cost, perms)
+        },
+        |(cost, perms)| {
+            let p = OrderingProblem::from_matrix(cost.clone());
+            let sol = solve_held_karp(&p).ok_or("unconstrained must solve")?;
+            for perm in perms {
+                if p.is_valid(perm) && p.fitness(perm) < sol.cost - 1e-9 {
+                    return Err(format!(
+                        "random order {:?} ({}) beats solver ({})",
+                        perm,
+                        p.fitness(perm),
+                        sol.cost
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
