@@ -4,10 +4,21 @@
 # backend — zero artifact-gated skips.
 #
 #   ./ci.sh            # tier-1 gate (whole suite on the reference backend)
+#                      # + bench compile check + clippy (advisory)
+#   ./ci.sh --strict   # clippy findings become fatal
 #   ./ci.sh --pjrt     # additionally build+test with --features pjrt
 #                      # (runs the PJRT/parity tests when artifacts exist)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+STRICT=0
+PJRT=0
+for arg in "$@"; do
+    case "$arg" in
+        --strict) STRICT=1 ;;
+        --pjrt) PJRT=1 ;;
+    esac
+done
 
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
@@ -15,7 +26,29 @@ cargo build --release
 # reference backend — engine tests cannot skip
 cargo test -q
 
-if [[ "${1:-}" == "--pjrt" ]]; then
+# benches are harness=false binaries that cargo test does not compile;
+# without this they rot silently
+echo "== benches compile: cargo bench --no-run =="
+cargo bench --no-run
+
+# clippy on the default feature set. Advisory by default so that lint
+# drift in a newer clippy release cannot break the tier-1 gate; --strict
+# (the mode CI proper should run) makes findings fatal.
+echo "== clippy: cargo clippy -- -D warnings =="
+if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
+    if cargo clippy -- -D warnings; then
+        echo "clippy clean"
+    elif [[ "$STRICT" == 1 ]]; then
+        echo "clippy findings (fatal under --strict)"
+        exit 1
+    else
+        echo "WARNING: clippy findings above (advisory; ./ci.sh --strict gates on them)"
+    fi
+else
+    echo "(clippy not installed; skipped)"
+fi
+
+if [[ "$PJRT" == 1 ]]; then
     echo "== pjrt feature build =="
     cargo build --release --features pjrt
     cargo test -q --features pjrt

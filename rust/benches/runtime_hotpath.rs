@@ -1,12 +1,19 @@
 //! `cargo bench` target: the serving hot path on the live runtime —
 //! per-layer execution, whole-task execution with and without activation
-//! caching, the end-to-end serve loop, and the sharded executor pool.
-//! Runs on whichever backend `ANTLER_BACKEND` selects (the reference
-//! backend needs no artifacts, so this never skips). This is the §Perf
-//! measurement harness (EXPERIMENTS.md).
+//! caching, the end-to-end serve loop, cross-frame batching (batch-1 vs
+//! batch-8 on the shared trunk), and the sharded executor pool under
+//! both schedulers (work-stealing vs the round-robin baseline, even and
+//! skewed workloads). Runs on whichever backend `ANTLER_BACKEND` selects
+//! (the reference backend needs no artifacts, so this never skips). This
+//! is the §Perf measurement harness (EXPERIMENTS.md).
+
+use std::time::Duration;
 
 use antler::bench::bench_fn;
-use antler::coordinator::{serve, serve_sharded, BlockExecutor, ServePlan};
+use antler::coordinator::{
+    serve, serve_sharded, serve_sharded_opts, BlockExecutor, ServePlan,
+    ShardOpts,
+};
 use antler::device::Device;
 use antler::model::Tensor;
 use antler::runtime::{backend_from_env, Backend, ReferenceBackend};
@@ -87,13 +94,79 @@ fn main() {
         ex.layer_skips as f64 / (ex.layer_execs + ex.layer_skips) as f64 * 100.0
     );
 
-    // sharded pool scaling (always on the Send reference backend)
-    for shards in [1usize, 2, 4] {
+    // ---- cross-frame batching: the shared trunk (both conv layers),
+    // 8 frames one at a time vs one batch-8 forward. The blocked batch
+    // kernels give each sample an independent accumulation chain, so
+    // batch-8 must clear >= 2x frames/sec (EXPERIMENTS.md §Perf gate).
+    let rbe = ReferenceBackend::new();
+    let trunk_frames: Vec<Tensor> = (0..8)
+        .map(|i| {
+            let data = (0..256)
+                .map(|k| ((i * 31 + k) % 11) as f32 * 0.07 - 0.3)
+                .collect();
+            Tensor::new(vec![1, 16, 16, 1], data)
+        })
+        .collect();
+    let refs: Vec<&Tensor> = trunk_frames.iter().collect();
+    let xb8 = Tensor::concat_batch(&refs);
+    let w0 = Tensor::he_init(arch.layers[0].param_shapes(2)[0].clone(), &mut rng);
+    let b0 = Tensor::zeros(arch.layers[0].param_shapes(2)[1].clone());
+    let w1 = Tensor::he_init(arch.layers[1].param_shapes(2)[0].clone(), &mut rng);
+    let b1 = Tensor::zeros(arch.layers[1].param_shapes(2)[1].clone());
+    let t1 = bench_fn("trunk/batch1_x8_frames", 5, 150, || {
+        for f in &trunk_frames {
+            let y0 = rbe.run_layer(&arch, 0, None, f, &w0, &b0).unwrap();
+            let _ = rbe.run_layer(&arch, 1, None, &y0, &w1, &b1).unwrap();
+        }
+    });
+    let t8 = bench_fn("trunk/batch8_one_call", 5, 150, || {
+        let y0 = rbe.run_layer(&arch, 0, None, &xb8, &w0, &b0).unwrap();
+        let _ = rbe.run_layer(&arch, 1, None, &y0, &w1, &b1).unwrap();
+    });
+    println!(
+        "trunk batch-8 speedup: {:.2}x frames/sec over batch-1",
+        t1.mean_ns / t8.mean_ns
+    );
+
+    // ---- the batched serving round: 8 frames through run_round_batched
+    // vs 8 per-frame task rounds on an identical executor
+    let mut ex_b = BlockExecutor::new(
+        ReferenceBackend::new(),
+        Device::msp430(),
+        arch.clone(),
+        graph.clone(),
+        ncls.clone(),
+        store.clone(),
+    );
+    let round_frames: Vec<(u64, Tensor)> = (0..8u64)
+        .map(|i| (i, trunk_frames[i as usize].clone()))
+        .collect();
+    let order: Vec<usize> = (0..5).collect();
+    let r1 = bench_fn("round/batch1_8_frames_5_tasks", 2, 40, || {
+        for (_, x) in &round_frames {
+            sid += 1; // a fresh sample id per frame; tasks share it
+            for &t in &order {
+                let _ = ex_b.run_task(sid, t, x).unwrap();
+            }
+        }
+    });
+    let ids: Vec<u64> = round_frames.iter().map(|(i, _)| *i).collect();
+    let r8 = bench_fn("round/batch8_5_tasks", 2, 40, || {
+        let inputs: Vec<&Tensor> = round_frames.iter().map(|(_, x)| x).collect();
+        let _ = ex_b.run_round_batched(&ids, &inputs, &order, &[]).unwrap();
+    });
+    println!(
+        "serving batch-8 speedup: {:.2}x frames/sec over batch-1",
+        r1.mean_ns / r8.mean_ns
+    );
+
+    // ---- sharded pool scaling (always on the Send reference backend)
+    let make_shard = {
         let arch2 = arch.clone();
         let graph2 = graph.clone();
         let ncls2 = ncls.clone();
         let store2 = store.clone();
-        let make = move |_s: usize| {
+        move |_s: usize| {
             Ok(BlockExecutor::new(
                 ReferenceBackend::new(),
                 Device::msp430(),
@@ -102,13 +175,75 @@ fn main() {
                 ncls2.clone(),
                 store2.clone(),
             ))
-        };
+        }
+    };
+    for shards in [1usize, 2, 4] {
+        let make = make_shard.clone();
         let frames = frames.clone();
         let plan = plan.clone();
-        bench_fn(&format!("shard/{shards}x_20_frames"), 1, 10, move || {
+        bench_fn(&format!("shard/rr_{shards}x_20_frames"), 1, 10, move || {
             let _ =
                 serve_sharded(make.clone(), shards, &plan, frames.clone(), 32, None)
                     .unwrap();
         });
     }
+    for shards in [2usize, 4] {
+        let make = make_shard.clone();
+        let frames = frames.clone();
+        let plan = plan.clone();
+        let opts = ShardOpts { queue_depth: 32, batch: 4, ..ShardOpts::default() };
+        bench_fn(
+            &format!("shard/steal_b4_{shards}x_20_frames"),
+            1,
+            10,
+            move || {
+                let _ = serve_sharded_opts(
+                    make.clone(),
+                    shards,
+                    &plan,
+                    frames.clone(),
+                    &opts,
+                )
+                .unwrap();
+            },
+        );
+    }
+
+    // ---- the skewed-workload drop gap: one shard paced 10x slower.
+    // Round-robin keeps dealing every 3rd frame to the straggler's full
+    // queue; work stealing lets the idle siblings take them instead.
+    let skew = |steal: bool| ShardOpts {
+        queue_depth: 2,
+        batch: if steal { 4 } else { 1 },
+        steal,
+        local_depth: 1,
+        pace: Some(Duration::from_micros(400)),
+        handicap: Some((0, Duration::from_millis(4))),
+    };
+    let total = 60;
+    let skew_frames: Vec<(u64, Tensor)> = (0..total as u64)
+        .map(|i| (i, trunk_frames[(i % 8) as usize].clone()))
+        .collect();
+    let skew_plan = ServePlan::unconditional(vec![0]);
+    let rr = serve_sharded_opts(
+        make_shard.clone(),
+        3,
+        &skew_plan,
+        skew_frames.clone(),
+        &skew(false),
+    )
+    .unwrap();
+    let ws = serve_sharded_opts(
+        make_shard.clone(),
+        3,
+        &skew_plan,
+        skew_frames,
+        &skew(true),
+    )
+    .unwrap();
+    println!(
+        "skewed 3-shard serve, {total} frames, straggler 10x: round-robin \
+         dropped {} | work-stealing dropped {}",
+        rr.aggregate.dropped, ws.aggregate.dropped
+    );
 }

@@ -7,7 +7,7 @@
 //! blocks genuinely execute once per sample — the runtime and the cost
 //! model cannot drift apart.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::device::{Cost, Device};
 use crate::memory::{ExecSim, SegmentAction};
@@ -15,6 +15,29 @@ use crate::model::{ArchSpec, Tensor};
 use crate::runtime::Backend;
 use crate::taskgraph::TaskGraph;
 use crate::trainer::GraphWeights;
+
+/// Output of [`BlockExecutor::run_round_batched`]: one full multitask
+/// round over a micro-batch of frames.
+#[derive(Debug, Clone)]
+pub struct BatchRound {
+    /// `predictions[i][t]`: predicted class of task `t` for frame `i`;
+    /// `None` = skipped by a runtime conditional.
+    pub predictions: Vec<Vec<Option<usize>>>,
+    /// Per-frame simulated device cost. Weight-block loads happen once
+    /// per batch and are amortized evenly over the frames that used the
+    /// block — the batching win of the cost model.
+    pub costs: Vec<Cost>,
+    /// (frame, task) pairs skipped by conditionals.
+    pub tasks_skipped: usize,
+}
+
+/// Batch-level activation cache entry: the output of one segment for the
+/// batch rows named by `ids` (in row order), computed under `group`.
+struct BatchAct {
+    ids: Vec<u64>,
+    group: usize,
+    out: Tensor,
+}
 
 pub struct BlockExecutor<B: Backend> {
     pub backend: B,
@@ -77,6 +100,13 @@ impl<B: Backend> BlockExecutor<B> {
     /// A no-op (0) on backends that don't compile.
     pub fn warmup(&self) -> Result<usize> {
         self.backend.warmup(&self.arch, &self.ncls)
+    }
+
+    /// Weight-block residency per segment slot: the group id whose block
+    /// is currently loaded, or `None` while the slot is cold. The shard
+    /// scheduler publishes this to route frames to already-warm shards.
+    pub fn resident(&self) -> &[Option<usize>] {
+        &self.sim.resident
     }
 
     fn plan(&mut self, sample: u64, task: usize) -> (Vec<SegmentAction>, Cost) {
@@ -149,6 +179,168 @@ impl<B: Backend> BlockExecutor<B> {
             .unwrap_or(0);
         Ok((pred, cost))
     }
+
+    /// Execute one full multitask round (all of `order`, honouring the
+    /// `conditional` (prereq, dependent) gates) over a micro-batch of
+    /// batch-1 frames in one backend forward per segment.
+    ///
+    /// Semantics match running [`Self::run_task`] per frame per task:
+    /// the reference backend's batched kernels are bitwise identical
+    /// row-for-row, so `predictions` equals the single-frame loop's
+    /// output frame-for-frame. Activation reuse across tasks happens at
+    /// batch granularity (one cached tensor per segment for the whole
+    /// batch); per-sample activation caches are invalidated around the
+    /// call. Weight residency carries over in both directions, and each
+    /// cold block is loaded once per batch with the simulated load cost
+    /// split over the frames that used it.
+    pub fn run_round_batched(
+        &mut self,
+        ids: &[u64],
+        inputs: &[&Tensor],
+        order: &[usize],
+        conditional: &[(usize, usize)],
+    ) -> Result<BatchRound> {
+        let m = ids.len();
+        ensure!(m > 0, "run_round_batched: empty batch");
+        ensure!(
+            inputs.len() == m,
+            "run_round_batched: {m} ids vs {} inputs",
+            inputs.len()
+        );
+        for t in inputs {
+            ensure!(t.shape[0] == 1, "each batched frame must be batch-1");
+        }
+        let xbatch = Tensor::concat_batch(inputs);
+        let nseg = self.graph.n_segments();
+        let n_tasks = self.graph.n_tasks;
+        // the per-sample caches describe one sample at a time and cannot
+        // represent a batch: invalidate around the batched round (weight
+        // residency, which is sample-independent, persists)
+        for s in 0..nseg {
+            self.sim.act_cache[s] = None;
+            self.act[s] = None;
+        }
+        let mut bact: Vec<Option<BatchAct>> = (0..nseg).map(|_| None).collect();
+        let mut preds: Vec<Vec<Option<usize>>> = vec![vec![None; n_tasks]; m];
+        let mut costs = vec![Cost::default(); m];
+        let mut tasks_skipped = 0usize;
+        for &t in order {
+            let active: Vec<usize> = (0..m)
+                .filter(|&i| {
+                    !conditional
+                        .iter()
+                        .any(|&(pre, dep)| dep == t && preds[i][pre] == Some(0))
+                })
+                .collect();
+            tasks_skipped += m - active.len();
+            if active.is_empty() {
+                continue;
+            }
+            let act_ids: Vec<u64> = active.iter().map(|&i| ids[i]).collect();
+            let mut x: Option<Tensor> = None;
+            for s in 0..nseg {
+                let group = self.graph.group_of(s, t);
+                let nlayers =
+                    self.graph.segment_layers(&self.arch, s).len() as u64;
+                let hit = matches!(
+                    &bact[s],
+                    Some(c) if c.group == group
+                        && act_ids.iter().all(|id| c.ids.contains(id))
+                );
+                if hit {
+                    let c = bact[s].as_ref().unwrap();
+                    x = Some(gather_rows(&c.out, &c.ids, &act_ids));
+                    self.layer_skips += nlayers * active.len() as u64;
+                    continue;
+                }
+                let mut cur = match x.take() {
+                    Some(tensor) => tensor,
+                    None => gather_rows(&xbatch, ids, &act_ids),
+                };
+                if self.sim.resident[s] != Some(group) {
+                    let bytes =
+                        self.graph.segment_bytes(&self.arch, s, t, &self.ncls);
+                    let lc = self
+                        .sim
+                        .device
+                        .load_cost(bytes)
+                        .scaled(1.0 / active.len() as f64);
+                    for &i in &active {
+                        costs[i].add(lc);
+                    }
+                    self.sim.resident[s] = Some(group);
+                }
+                let elems: u64 = self
+                    .graph
+                    .segment_layers(&self.arch, s)
+                    .map(|l| self.arch.layers[l].out_elems() as u64)
+                    .sum();
+                let ec = self
+                    .sim
+                    .device
+                    .exec_cost(self.graph.segment_macs(&self.arch, s), elems);
+                for &i in &active {
+                    costs[i].add(ec);
+                }
+                let weights = &self.store.blocks[s][group];
+                let mut wi = 0;
+                for l in self.graph.segment_layers(&self.arch, s) {
+                    let is_logits = self.arch.layers[l].is_logits();
+                    let ncls = is_logits.then_some(self.ncls[t]);
+                    cur = self.backend.run_layer(
+                        &self.arch,
+                        l,
+                        ncls,
+                        &cur,
+                        &weights[wi],
+                        &weights[wi + 1],
+                    )?;
+                    wi += 2;
+                    self.layer_execs += active.len() as u64;
+                }
+                bact[s] = Some(BatchAct {
+                    ids: act_ids.clone(),
+                    group,
+                    out: cur.clone(),
+                });
+                x = Some(cur);
+            }
+            let logits = x.ok_or_else(|| anyhow!("no segments executed"))?;
+            let width = self.ncls[t];
+            for (row, &i) in active.iter().enumerate() {
+                let rl = &logits.data[row * width..(row + 1) * width];
+                let pred = rl
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                preds[i][t] = Some(pred);
+            }
+        }
+        Ok(BatchRound { predictions: preds, costs, tasks_skipped })
+    }
+}
+
+/// Rows of `src` correspond to `ids` in order; return the rows named by
+/// `want` (every id in `want` must be present in `ids`), preserving the
+/// order of `want`.
+fn gather_rows(src: &Tensor, ids: &[u64], want: &[u64]) -> Tensor {
+    if ids == want {
+        return src.clone();
+    }
+    let per: usize = src.shape[1..].iter().product();
+    let mut data = Vec::with_capacity(want.len() * per);
+    for w in want {
+        let row = ids
+            .iter()
+            .position(|id| id == w)
+            .expect("batched activation row present");
+        data.extend_from_slice(&src.data[row * per..(row + 1) * per]);
+    }
+    let mut shape = src.shape.clone();
+    shape[0] = want.len();
+    Tensor::new(shape, data)
 }
 
 #[cfg(test)]
@@ -223,6 +415,108 @@ mod tests {
     fn warmup_is_noop_on_reference_backend() {
         let ex = setup(ReferenceBackend::new());
         assert_eq!(ex.warmup().unwrap(), 0);
+    }
+
+    fn gauss_frames(n: usize, seed: u64) -> Vec<(u64, Tensor)> {
+        let mut rng = Pcg32::seed(seed);
+        (0..n as u64)
+            .map(|i| {
+                let data = (0..256).map(|_| rng.gauss()).collect();
+                (i, Tensor::new(vec![1, 16, 16, 1], data))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_round_matches_per_frame_predictions() {
+        // batch size 5 exercises the 4+1 kernel blocks; predictions must
+        // be identical to running every frame through run_task alone
+        let frames = gauss_frames(5, 0xF00D);
+        let order = [0usize, 1, 2];
+
+        let mut single = setup(ReferenceBackend::new());
+        let mut want: Vec<Vec<Option<usize>>> = Vec::new();
+        for (id, x) in &frames {
+            let mut preds = vec![None; 3];
+            for &t in &order {
+                let (p, _) = single.run_task(*id, t, x).unwrap();
+                preds[t] = Some(p);
+            }
+            want.push(preds);
+        }
+
+        let mut batched = setup(ReferenceBackend::new());
+        let ids: Vec<u64> = frames.iter().map(|(id, _)| *id).collect();
+        let inputs: Vec<&Tensor> = frames.iter().map(|(_, x)| x).collect();
+        let out = batched.run_round_batched(&ids, &inputs, &order, &[]).unwrap();
+        assert_eq!(out.predictions, want);
+        assert_eq!(out.tasks_skipped, 0);
+        // shared segments executed once per batch: skips were recorded
+        assert!(batched.layer_skips > 0);
+        assert!(out.costs.iter().all(|c| c.time() > 0.0));
+    }
+
+    #[test]
+    fn batched_round_honours_conditionals_per_frame() {
+        let frames = gauss_frames(6, 0xCAFE);
+        let order = [0usize, 1, 2];
+        let conditional = [(0usize, 1usize), (0usize, 2usize)];
+
+        let mut single = setup(ReferenceBackend::new());
+        let mut want: Vec<Vec<Option<usize>>> = Vec::new();
+        let mut want_skipped = 0usize;
+        for (id, x) in &frames {
+            let mut preds: Vec<Option<usize>> = vec![None; 3];
+            for &t in &order {
+                let gated = conditional
+                    .iter()
+                    .any(|&(pre, dep)| dep == t && preds[pre] == Some(0));
+                if gated {
+                    want_skipped += 1;
+                    continue;
+                }
+                let (p, _) = single.run_task(*id, t, x).unwrap();
+                preds[t] = Some(p);
+            }
+            want.push(preds);
+        }
+
+        let mut batched = setup(ReferenceBackend::new());
+        let ids: Vec<u64> = frames.iter().map(|(id, _)| *id).collect();
+        let inputs: Vec<&Tensor> = frames.iter().map(|(_, x)| x).collect();
+        let out = batched
+            .run_round_batched(&ids, &inputs, &order, &conditional)
+            .unwrap();
+        assert_eq!(out.predictions, want);
+        assert_eq!(out.tasks_skipped, want_skipped);
+    }
+
+    #[test]
+    fn batched_round_amortizes_loads_across_frames() {
+        // the per-frame simulated load share of a batch of 4 must be a
+        // quarter of a lone frame's (same cold start, same round)
+        let frames = gauss_frames(4, 0xBEEF);
+        let order = [0usize, 1, 2];
+        let ids: Vec<u64> = frames.iter().map(|(id, _)| *id).collect();
+        let inputs: Vec<&Tensor> = frames.iter().map(|(_, x)| x).collect();
+
+        let mut lone = setup(ReferenceBackend::new());
+        let lone_out = lone
+            .run_round_batched(&ids[..1], &inputs[..1], &order, &[])
+            .unwrap();
+        let mut batched = setup(ReferenceBackend::new());
+        let out = batched.run_round_batched(&ids, &inputs, &order, &[]).unwrap();
+        for c in &out.costs {
+            assert!(
+                (c.load_s - lone_out.costs[0].load_s / 4.0).abs() < 1e-12,
+                "load share {} vs lone {}",
+                c.load_s,
+                lone_out.costs[0].load_s
+            );
+        }
+        // residency persisted: an immediate second batch never loads
+        let out2 = batched.run_round_batched(&ids, &inputs, &order, &[]).unwrap();
+        assert!(out2.costs.iter().all(|c| c.load_s == 0.0));
     }
 
     /// PJRT variants — kept behind artifact detection.

@@ -1,17 +1,23 @@
 //! L3 coordinator: the live Antler system. `executor` runs task graphs
 //! block-by-block on an execution backend with the §2.3 caching
-//! semantics; `server` is the serving loop (sources → bounded queue →
-//! ordered multitask execution with conditional skipping → metrics);
-//! `shard` round-robins frames across a pool of `Send` executors;
-//! `pipeline` wires offline preparation (affinity → graph → order →
-//! trained weights) into a ready-to-serve executor.
+//! semantics (single frames or cross-frame micro-batches); `server` is
+//! the serving loop (sources → bounded queue → ordered multitask
+//! execution with conditional skipping → metrics); `shard` schedules
+//! frames across a pool of `Send` executors — a shared-injector
+//! work-stealing scheduler with residency-aware dispatch and batching,
+//! plus the round-robin baseline; `pipeline` wires offline preparation
+//! (affinity → graph → order → trained weights) into a ready-to-serve
+//! executor.
 
 pub mod executor;
 pub mod pipeline;
 pub mod server;
 pub mod shard;
 
-pub use executor::BlockExecutor;
+pub use executor::{BatchRound, BlockExecutor};
 pub use pipeline::{prepare, Prepared, PrepareConfig};
-pub use server::{serve, Frame, FrameResult, ServePlan, ServeReport};
-pub use shard::{serve_sharded, ShardReport};
+pub use server::{
+    process_frame, run_executor, serve, Frame, FrameResult, ServePlan,
+    ServeReport,
+};
+pub use shard::{serve_sharded, serve_sharded_opts, ShardOpts, ShardReport};

@@ -85,9 +85,27 @@ pub fn build_report(
     layer_execs: u64,
     layer_skips: u64,
 ) -> ServeReport {
+    if results.is_empty() {
+        // all frames dropped (or none offered): an explicitly well-formed
+        // zero report — no percentiles over an empty sample, no 0/0
+        return ServeReport {
+            frames: 0,
+            dropped,
+            wall_s,
+            throughput_fps: 0.0,
+            latency_p50_ms: 0.0,
+            latency_p95_ms: 0.0,
+            latency_p99_ms: 0.0,
+            sim_time_per_frame_s: 0.0,
+            sim_energy_per_frame_j: 0.0,
+            tasks_skipped,
+            layer_execs,
+            layer_skips,
+        };
+    }
     let lat_ms: Vec<f64> =
         results.iter().map(|r| r.wall_latency_s * 1e3).collect();
-    let n = results.len().max(1);
+    let n = results.len();
     ServeReport {
         frames: results.len(),
         dropped,
@@ -109,6 +127,47 @@ pub fn build_report(
     }
 }
 
+/// Execute one frame's full multitask round on the executor. Returns the
+/// frame's result plus the number of conditionally skipped tasks — the
+/// unit of work shared by the single-executor loop and every shard
+/// scheduler (`coordinator::shard`).
+pub fn process_frame<B: Backend>(
+    exec: &mut BlockExecutor<B>,
+    plan: &ServePlan,
+    frame: Frame,
+) -> Result<(FrameResult, usize)> {
+    let started = Instant::now();
+    let queue_wait = started.duration_since(frame.enqueued).as_secs_f64();
+    let n = exec.graph.n_tasks;
+    let mut preds: Vec<Option<usize>> = vec![None; n];
+    let mut cost = Cost::default();
+    let mut skipped = 0usize;
+    for &t in &plan.order {
+        // conditional skip: prerequisite predicted "absent" (class 0)
+        let gated = plan
+            .conditional
+            .iter()
+            .any(|&(pre, dep)| dep == t && preds[pre] == Some(0));
+        if gated {
+            skipped += 1;
+            continue;
+        }
+        let (pred, c) = exec.run_task(frame.id, t, &frame.input)?;
+        preds[t] = Some(pred);
+        cost.add(c);
+    }
+    Ok((
+        FrameResult {
+            id: frame.id,
+            predictions: preds,
+            sim_cost: cost,
+            wall_latency_s: frame.enqueued.elapsed().as_secs_f64(),
+            queue_wait_s: queue_wait,
+        },
+        skipped,
+    ))
+}
+
 /// Run the executor loop over a frame receiver until it closes.
 pub fn run_executor<B: Backend>(
     exec: &mut BlockExecutor<B>,
@@ -118,32 +177,9 @@ pub fn run_executor<B: Backend>(
     let mut results = Vec::new();
     let mut skipped = 0usize;
     while let Ok(frame) = rx.recv() {
-        let started = Instant::now();
-        let queue_wait = started.duration_since(frame.enqueued).as_secs_f64();
-        let n = exec.graph.n_tasks;
-        let mut preds: Vec<Option<usize>> = vec![None; n];
-        let mut cost = Cost::default();
-        for &t in &plan.order {
-            // conditional skip: prerequisite predicted "absent" (class 0)
-            let gated = plan
-                .conditional
-                .iter()
-                .any(|&(pre, dep)| dep == t && preds[pre] == Some(0));
-            if gated {
-                skipped += 1;
-                continue;
-            }
-            let (pred, c) = exec.run_task(frame.id, t, &frame.input)?;
-            preds[t] = Some(pred);
-            cost.add(c);
-        }
-        results.push(FrameResult {
-            id: frame.id,
-            predictions: preds,
-            sim_cost: cost,
-            wall_latency_s: frame.enqueued.elapsed().as_secs_f64(),
-            queue_wait_s: queue_wait,
-        });
+        let (result, sk) = process_frame(exec, plan, frame)?;
+        results.push(result);
+        skipped += sk;
     }
     Ok((results, skipped))
 }
@@ -273,6 +309,29 @@ mod tests {
         assert_eq!(dropped, 4);
         // the one accepted frame is still in the queue
         assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn zero_frame_report_is_well_formed() {
+        // the all-frames-dropped case: every metric must be a finite,
+        // sensible zero — not a percentile over an empty sample
+        let r = build_report(&[], 7, 0.25, 0, 0, 0);
+        assert_eq!(r.frames, 0);
+        assert_eq!(r.dropped, 7);
+        for v in [
+            r.throughput_fps,
+            r.latency_p50_ms,
+            r.latency_p95_ms,
+            r.latency_p99_ms,
+            r.sim_time_per_frame_s,
+            r.sim_energy_per_frame_j,
+        ] {
+            assert!(v.is_finite(), "non-finite metric in zero-frame report");
+            assert_eq!(v, 0.0);
+        }
+        // degenerate wall clock must not poison throughput either
+        let r0 = build_report(&[], 0, 0.0, 0, 0, 0);
+        assert!(r0.throughput_fps.is_finite());
     }
 
     #[test]

@@ -1,15 +1,47 @@
-//! Sharded serving: round-robin frames across N executors, each owning
-//! its own `Send` backend (the pure-Rust reference interpreter), running
-//! on the existing `exec::pool::ThreadPool`. This is the first step
-//! toward the heavy-traffic serving north star: one process, N cores,
-//! N independent §2.3 state machines, one aggregate [`ServeReport`].
+//! Sharded serving: N executors, each owning its own `Send` backend (the
+//! pure-Rust reference interpreter), running on the existing
+//! `exec::pool::ThreadPool`. This is the heavy-traffic serving layer:
+//! one process, N cores, N independent §2.3 state machines, one
+//! aggregate [`ServeReport`].
+//!
+//! Two schedulers:
+//!
+//! * **Work-stealing** (the default, [`ShardOpts::steal`]): frames land
+//!   in one shared bounded injector queue, plus a small per-shard deque
+//!   for frames whose tagged shard is already *warm* (its
+//!   [`BlockExecutor`] has the entry segment weights resident — the
+//!   residency-aware routing from the ROADMAP). Idle shards drain their
+//!   own deque, then the injector, then steal from the longest sibling
+//!   deque — so a stalled or dead shard never strands frames that
+//!   healthy shards had capacity for. A shard whose executor fails is
+//!   marked dead, its queued frames are returned to the injector, and
+//!   serving continues on the survivors (the failure is reported in
+//!   [`ShardReport::shard_errors`]).
+//!
+//! * **Round-robin** (the PR-3 baseline, kept for comparison): frames
+//!   are dealt to per-shard bounded queues blindly; a full — or dead —
+//!   shard queue drops the frame even while siblings idle. This is
+//!   exactly the under-utilization the paper's cost model penalizes;
+//!   the regression tests and `benches/runtime_hotpath.rs` measure the
+//!   gap (EXPERIMENTS.md §Perf).
+//!
+//! Cross-frame micro-batching ([`ShardOpts::batch`]): a shard drains up
+//! to `batch` queued frames in one pop and runs them through
+//! [`BlockExecutor::run_round_batched`] — one batched forward per
+//! segment per task, amortizing weight-block loads (the batching case
+//! from *Batching-Aware Joint Model Onloading and Offloading*,
+//! PAPERS.md) while the reference backend's block kernels keep the
+//! predictions bitwise identical to the single-frame loop.
 //!
 //! Sharding is by frame, so per-sample activation reuse across tasks is
 //! preserved inside every shard (a frame's whole task round runs on one
 //! executor); only cross-frame weight residency is per-shard state.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicIsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, TrySendError};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -18,7 +50,43 @@ use crate::model::Tensor;
 use crate::runtime::Backend;
 
 use super::executor::BlockExecutor;
-use super::server::{build_report, run_executor, Frame, ServePlan, ServeReport};
+use super::server::{
+    build_report, process_frame, Frame, FrameResult, ServePlan, ServeReport,
+};
+
+/// Knobs for a sharded serve.
+#[derive(Debug, Clone)]
+pub struct ShardOpts {
+    /// Bound of the shared injector queue (work-stealing) or of each
+    /// per-shard queue (round-robin). Overflow drops the frame.
+    pub queue_depth: usize,
+    /// Max frames a shard drains into one batched forward (1 = off).
+    /// Work-stealing only: the round-robin baseline deliberately keeps
+    /// PR 3's frame-at-a-time behavior and ignores this.
+    pub batch: usize,
+    /// Work-stealing scheduler (default) vs the round-robin baseline.
+    pub steal: bool,
+    /// Bound of each per-shard preferred deque (work-stealing only).
+    pub local_depth: usize,
+    /// Delay between produced frames (a paced sensor front-end).
+    pub pace: Option<Duration>,
+    /// Test/bench knob: (shard, per-frame delay) slowing one shard down
+    /// to model a straggler or a core stolen by another tenant.
+    pub handicap: Option<(usize, Duration)>,
+}
+
+impl Default for ShardOpts {
+    fn default() -> ShardOpts {
+        ShardOpts {
+            queue_depth: 64,
+            batch: 1,
+            steal: true,
+            local_depth: 2,
+            pace: None,
+            handicap: None,
+        }
+    }
+}
 
 /// Aggregate result of a sharded serve.
 #[derive(Debug, Clone)]
@@ -26,6 +94,11 @@ pub struct ShardReport {
     pub shards: usize,
     /// Frames actually processed by each shard.
     pub frames_per_shard: Vec<usize>,
+    /// Shards whose executor failed mid-stream (work continued on the
+    /// survivors; the poisoned frames are counted as dropped).
+    pub shard_errors: Vec<(usize, String)>,
+    /// Every frame's result, sorted by frame id.
+    pub results: Vec<FrameResult>,
     /// Pool-wide metrics (frames/drops/latency percentiles/sim cost and
     /// layer counters summed over every shard).
     pub aggregate: ServeReport,
@@ -38,20 +111,79 @@ impl ShardReport {
     }
 }
 
+/// What one shard worker hands back when its loop ends.
+struct ShardOutcome {
+    shard: usize,
+    results: Vec<FrameResult>,
+    tasks_skipped: usize,
+    layer_execs: u64,
+    layer_skips: u64,
+    /// Executor failure that killed the shard, if any.
+    error: Option<String>,
+    /// Frames consumed but not served because of that failure.
+    failed: usize,
+}
+
 /// Serve `frames` across `n_shards` executors built by `make_executor`
 /// (one per shard, each owning its backend — the backend must be `Send`,
 /// which the reference backend is and PJRT deliberately is not).
 ///
-/// Frames are distributed round-robin over per-shard bounded queues;
-/// a full shard queue drops the frame (counted), like the single-executor
-/// loop. Returns when every shard has drained its queue.
+/// Compatibility wrapper over [`serve_sharded_opts`] running the
+/// round-robin baseline with batching off, like PR 3's scheduler.
 pub fn serve_sharded<B, F>(
-    mut make_executor: F,
+    make_executor: F,
     n_shards: usize,
     plan: &ServePlan,
     frames: Vec<(u64, Tensor)>,
     queue_depth: usize,
-    pace: Option<std::time::Duration>,
+    pace: Option<Duration>,
+) -> Result<ShardReport>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    let opts = ShardOpts {
+        queue_depth,
+        pace,
+        steal: false,
+        batch: 1,
+        ..ShardOpts::default()
+    };
+    serve_sharded_opts(make_executor, n_shards, plan, frames, &opts)
+}
+
+/// Serve `frames` across `n_shards` executors with explicit scheduler
+/// options. Returns when every shard has drained and reported.
+pub fn serve_sharded_opts<B, F>(
+    make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    frames: Vec<(u64, Tensor)>,
+    opts: &ShardOpts,
+) -> Result<ShardReport>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    if opts.steal {
+        serve_work_stealing(make_executor, n_shards, plan, frames, opts)
+    } else {
+        serve_round_robin(make_executor, n_shards, plan, frames, opts)
+    }
+}
+
+// --------------------------------------------------------- round-robin
+
+/// The PR-3 baseline: deal frames to per-shard bounded queues in strict
+/// rotation. Kept as the comparison point for the work-stealing
+/// scheduler; its known pathology (frames offered to a full or dead
+/// shard are dropped while siblings idle) is measured, not fixed.
+fn serve_round_robin<B, F>(
+    mut make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    frames: Vec<(u64, Tensor)>,
+    opts: &ShardOpts,
 ) -> Result<ShardReport>
 where
     B: Backend + Send + 'static,
@@ -62,16 +194,46 @@ where
     let (res_tx, res_rx) = channel();
     let mut frame_txs = Vec::with_capacity(n);
     for s in 0..n {
-        let (tx, rx) = sync_channel::<Frame>(queue_depth.max(1));
+        let (tx, rx) = sync_channel::<Frame>(opts.queue_depth.max(1));
         frame_txs.push(tx);
         let mut ex = make_executor(s)?;
         let plan = plan.clone();
         let res_tx = res_tx.clone();
+        let handicap = opts.handicap;
         pool.execute(move || {
-            let out = run_executor(&mut ex, &plan, rx).map(|(results, skipped)| {
-                (results, skipped, ex.layer_execs, ex.layer_skips)
-            });
-            let _ = res_tx.send((s, out));
+            let mut out = ShardOutcome {
+                shard: s,
+                results: Vec::new(),
+                tasks_skipped: 0,
+                layer_execs: 0,
+                layer_skips: 0,
+                error: None,
+                failed: 0,
+            };
+            while let Ok(frame) = rx.recv() {
+                if let Some((hs, d)) = handicap {
+                    if hs == s {
+                        std::thread::sleep(d);
+                    }
+                }
+                match process_frame(&mut ex, &plan, frame) {
+                    Ok((r, sk)) => {
+                        out.results.push(r);
+                        out.tasks_skipped += sk;
+                    }
+                    Err(e) => {
+                        out.error = Some(format!("{e:#}"));
+                        // keep consuming so frames already accepted into
+                        // this shard's queue are accounted as dropped
+                        // rather than silently vanishing
+                        out.failed = 1 + rx.iter().count();
+                        break;
+                    }
+                }
+            }
+            out.layer_execs = ex.layer_execs;
+            out.layer_skips = ex.layer_skips;
+            let _ = res_tx.send(out);
         });
     }
     drop(res_tx);
@@ -83,38 +245,377 @@ where
         match frame_txs[i % n].try_send(frame) {
             Ok(()) => {}
             Err(TrySendError::Full(_)) => dropped += 1,
-            // a dead shard's queue: count the frame as dropped and keep
-            // feeding the others — the collection loop below propagates
-            // the worker's actual error
+            // a dead shard's queue: the frame is dropped even when live
+            // shards had capacity — the round-robin pathology the
+            // work-stealing scheduler exists to fix
             Err(TrySendError::Disconnected(_)) => dropped += 1,
         }
-        if let Some(p) = pace {
+        if let Some(p) = opts.pace {
             std::thread::sleep(p);
         }
     }
     drop(frame_txs); // closes every queue; shard loops drain and exit
 
+    collect_outcomes(n, res_rx, dropped, t0)
+}
+
+// -------------------------------------------------------- work stealing
+
+/// Shared scheduler state: one bounded injector plus per-shard deques.
+struct StealState {
+    global: VecDeque<Frame>,
+    locals: Vec<VecDeque<Frame>>,
+    dead: Vec<bool>,
+    closed: bool,
+}
+
+struct StealQueue {
+    st: Mutex<StealState>,
+    cv: Condvar,
+}
+
+impl StealQueue {
+    fn new(n: usize) -> StealQueue {
+        StealQueue {
+            st: Mutex::new(StealState {
+                global: VecDeque::new(),
+                locals: (0..n).map(|_| VecDeque::new()).collect(),
+                dead: vec![false; n],
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one frame: onto the preferred shard's deque when that
+    /// shard is live and its deque has room, else onto the bounded
+    /// injector. Returns false (frame dropped) only when the injector is
+    /// full — there is no per-shard overflow, so a slow shard cannot
+    /// strand frames the others could serve.
+    fn push(
+        &self,
+        frame: Frame,
+        preferred: Option<usize>,
+        queue_depth: usize,
+        local_depth: usize,
+    ) -> bool {
+        let mut st = self.st.lock().unwrap();
+        if let Some(p) = preferred {
+            if p < st.locals.len() && !st.dead[p] && st.locals[p].len() < local_depth
+            {
+                st.locals[p].push_back(frame);
+                drop(st);
+                self.cv.notify_all();
+                return true;
+            }
+        }
+        if st.global.len() < queue_depth {
+            st.global.push_back(frame);
+            drop(st);
+            self.cv.notify_all();
+            return true;
+        }
+        false
+    }
+
+    /// No more frames will be pushed; drain-and-exit.
+    fn close(&self) {
+        self.st.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Shard `s`'s executor failed: flag it and return its queued frames
+    /// to the injector front so the survivors pick them up promptly.
+    fn mark_dead(&self, s: usize) {
+        let mut st = self.st.lock().unwrap();
+        st.dead[s] = true;
+        let orphans: Vec<Frame> = st.locals[s].drain(..).collect();
+        for f in orphans.into_iter().rev() {
+            st.global.push_front(f);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Pop up to `max` frames for shard `me`: own deque first, then the
+    /// injector, then (only when otherwise idle) steal from the longest
+    /// sibling deque. Blocks while empty; `None` once closed and fully
+    /// drained.
+    fn pop_batch(&self, me: usize, max: usize) -> Option<Vec<Frame>> {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            let mut batch = Vec::new();
+            while batch.len() < max {
+                if let Some(f) = st.locals[me].pop_front() {
+                    batch.push(f);
+                    continue;
+                }
+                if let Some(f) = st.global.pop_front() {
+                    batch.push(f);
+                    continue;
+                }
+                break;
+            }
+            if batch.is_empty() {
+                let victim = (0..st.locals.len())
+                    .filter(|&v| v != me && !st.locals[v].is_empty())
+                    .max_by_key(|&v| st.locals[v].len());
+                if let Some(v) = victim {
+                    while batch.len() < max {
+                        match st.locals[v].pop_front() {
+                            Some(f) => batch.push(f),
+                            None => break,
+                        }
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                return Some(batch);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Frames nobody will ever pop (every worker exited early). Counted
+    /// as dropped so frame conservation holds even in total failure.
+    fn drain_remaining(&self) -> usize {
+        let mut st = self.st.lock().unwrap();
+        let mut n = st.global.len();
+        st.global.clear();
+        for l in st.locals.iter_mut() {
+            n += l.len();
+            l.clear();
+        }
+        n
+    }
+}
+
+/// Per-shard weight-residency board: the group id resident in each
+/// segment slot, published by the shard after every round so the
+/// dispatcher can route tagged frames to already-warm executors.
+struct ResidencyBoard {
+    segs: Vec<AtomicIsize>,
+}
+
+impl ResidencyBoard {
+    fn new(nseg: usize) -> ResidencyBoard {
+        ResidencyBoard { segs: (0..nseg).map(|_| AtomicIsize::new(-1)).collect() }
+    }
+
+    fn publish(&self, resident: &[Option<usize>]) {
+        for (slot, r) in self.segs.iter().zip(resident) {
+            slot.store(r.map_or(-1, |g| g as isize), Ordering::Relaxed);
+        }
+    }
+
+    /// True when every segment the plan needs a stable group for is
+    /// already resident (`None` entries are don't-cares: segments whose
+    /// group changes between tasks within a round anyway).
+    fn warm_for(&self, needed: &[Option<usize>]) -> bool {
+        self.segs.iter().zip(needed).all(|(slot, need)| match need {
+            Some(g) => slot.load(Ordering::Relaxed) == *g as isize,
+            None => true,
+        })
+    }
+}
+
+/// The shared-injector work-stealing scheduler with residency-aware
+/// dispatch and cross-frame micro-batching.
+fn serve_work_stealing<B, F>(
+    mut make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    frames: Vec<(u64, Tensor)>,
+    opts: &ShardOpts,
+) -> Result<ShardReport>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    let n = n_shards.max(1);
+    // build executors up front: the dispatcher reads the graph shape for
+    // residency routing before the workers take ownership
+    let mut executors = Vec::with_capacity(n);
+    for s in 0..n {
+        executors.push(make_executor(s)?);
+    }
+    // a shard is "warm" when the blocks every task in the round shares
+    // (the stable trunk) are resident; branch segments swap groups
+    // within a round and are excluded from the test
+    let graph = &executors[0].graph;
+    let nseg = graph.n_segments();
+    let needed: Vec<Option<usize>> = match plan.order.first() {
+        Some(&t0) => (0..nseg)
+            .map(|s| {
+                let g0 = graph.group_of(s, t0);
+                plan.order
+                    .iter()
+                    .all(|&t| graph.group_of(s, t) == g0)
+                    .then_some(g0)
+            })
+            .collect(),
+        None => Vec::new(),
+    };
+    let boards: Vec<Arc<ResidencyBoard>> =
+        (0..n).map(|_| Arc::new(ResidencyBoard::new(nseg))).collect();
+    let queue = Arc::new(StealQueue::new(n));
+    let pool = ThreadPool::new(n);
+    let (res_tx, res_rx) = channel();
+    let batch = opts.batch.max(1);
+    for (s, mut ex) in executors.into_iter().enumerate() {
+        let queue = Arc::clone(&queue);
+        let board = Arc::clone(&boards[s]);
+        let plan = plan.clone();
+        let res_tx = res_tx.clone();
+        let handicap = opts.handicap;
+        pool.execute(move || {
+            let mut out = ShardOutcome {
+                shard: s,
+                results: Vec::new(),
+                tasks_skipped: 0,
+                layer_execs: 0,
+                layer_skips: 0,
+                error: None,
+                failed: 0,
+            };
+            while let Some(popped) = queue.pop_batch(s, batch) {
+                if let Some((hs, d)) = handicap {
+                    if hs == s {
+                        std::thread::sleep(d * popped.len() as u32);
+                    }
+                }
+                let m = popped.len();
+                let step: Result<()> = (|| {
+                    if m == 1 {
+                        let frame = popped.into_iter().next().unwrap();
+                        let (r, sk) = process_frame(&mut ex, &plan, frame)?;
+                        out.results.push(r);
+                        out.tasks_skipped += sk;
+                    } else {
+                        let ids: Vec<u64> =
+                            popped.iter().map(|f| f.id).collect();
+                        let enq: Vec<Instant> =
+                            popped.iter().map(|f| f.enqueued).collect();
+                        let inputs: Vec<&Tensor> =
+                            popped.iter().map(|f| &f.input).collect();
+                        let started = Instant::now();
+                        let round = ex.run_round_batched(
+                            &ids,
+                            &inputs,
+                            &plan.order,
+                            &plan.conditional,
+                        )?;
+                        for i in 0..m {
+                            out.results.push(FrameResult {
+                                id: ids[i],
+                                predictions: round.predictions[i].clone(),
+                                sim_cost: round.costs[i],
+                                wall_latency_s: enq[i]
+                                    .elapsed()
+                                    .as_secs_f64(),
+                                queue_wait_s: started
+                                    .duration_since(enq[i])
+                                    .as_secs_f64(),
+                            });
+                        }
+                        out.tasks_skipped += round.tasks_skipped;
+                    }
+                    Ok(())
+                })();
+                match step {
+                    Ok(()) => board.publish(ex.resident()),
+                    Err(e) => {
+                        // this shard is broken: surface the error, give
+                        // its queued frames back, let the others serve
+                        out.error = Some(format!("{e:#}"));
+                        out.failed += m;
+                        queue.mark_dead(s);
+                        break;
+                    }
+                }
+            }
+            out.layer_execs = ex.layer_execs;
+            out.layer_skips = ex.layer_skips;
+            let _ = res_tx.send(out);
+        });
+    }
+    drop(res_tx);
+
+    let t0 = Instant::now();
+    let mut dropped = 0usize;
+    let qd = opts.queue_depth.max(1);
+    let ld = opts.local_depth.max(1);
+    for (id, input) in frames {
+        // residency-aware dispatch: a frame sticks to its tagged shard
+        // only while that shard is warm and has deque room; otherwise it
+        // goes to the injector where any idle shard takes it
+        let preferred = if needed.is_empty() {
+            None
+        } else {
+            let p = (id as usize) % n;
+            boards[p].warm_for(&needed).then_some(p)
+        };
+        let frame = Frame { id, input, enqueued: Instant::now() };
+        if !queue.push(frame, preferred, qd, ld) {
+            dropped += 1;
+        }
+        if let Some(p) = opts.pace {
+            std::thread::sleep(p);
+        }
+    }
+    queue.close();
+
+    let report = collect_outcomes(n, res_rx, dropped, t0);
+    // if every worker died early, queued frames were never consumed
+    let leftover = queue.drain_remaining();
+    report.map(|mut r| {
+        r.aggregate.dropped += leftover;
+        r
+    })
+}
+
+// --------------------------------------------------------- aggregation
+
+fn collect_outcomes(
+    n: usize,
+    res_rx: std::sync::mpsc::Receiver<ShardOutcome>,
+    mut dropped: usize,
+    t0: Instant,
+) -> Result<ShardReport> {
     let mut frames_per_shard = vec![0usize; n];
+    let mut shard_errors = Vec::new();
     let mut all = Vec::new();
     let mut skipped = 0usize;
     let mut layer_execs = 0u64;
     let mut layer_skips = 0u64;
     for _ in 0..n {
-        let (s, out) = res_rx
+        let out = res_rx
             .recv()
             .map_err(|_| anyhow!("a shard worker died before reporting"))?;
-        let (results, sk, le, ls) = out?;
-        frames_per_shard[s] = results.len();
-        skipped += sk;
-        layer_execs += le;
-        layer_skips += ls;
-        all.extend(results);
+        frames_per_shard[out.shard] = out.results.len();
+        skipped += out.tasks_skipped;
+        layer_execs += out.layer_execs;
+        layer_skips += out.layer_skips;
+        dropped += out.failed;
+        if let Some(e) = out.error {
+            shard_errors.push((out.shard, e));
+        }
+        all.extend(out.results);
     }
+    shard_errors.sort_by_key(|&(s, _)| s);
+    all.sort_by_key(|r| r.id);
     let wall = t0.elapsed().as_secs_f64();
+    let aggregate =
+        build_report(&all, dropped, wall, skipped, layer_execs, layer_skips);
     Ok(ShardReport {
         shards: n,
         frames_per_shard,
-        aggregate: build_report(&all, dropped, wall, skipped, layer_execs, layer_skips),
+        shard_errors,
+        results: all,
+        aggregate,
     })
 }
 
@@ -122,6 +623,7 @@ where
 mod tests {
     use super::*;
     use crate::device::Device;
+    use crate::model::ArchSpec;
     use crate::runtime::ReferenceBackend;
     use crate::taskgraph::{Partition, TaskGraph};
     use crate::trainer::GraphWeights;
@@ -182,6 +684,7 @@ mod tests {
         assert!(report.aggregate.layer_execs > 0);
         // per-frame activation reuse still happens inside each shard
         assert!(report.aggregate.layer_skips > 0);
+        assert!(report.shard_errors.is_empty());
     }
 
     #[test]
@@ -220,5 +723,272 @@ mod tests {
             serve_sharded(make_executor, 3, &plan, frames(18), 16, None).unwrap();
         assert_eq!(report.aggregate.frames, 18);
         assert!(report.aggregate.tasks_skipped <= 36);
+    }
+
+    #[test]
+    fn work_stealing_covers_all_frames() {
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let opts = ShardOpts { queue_depth: 64, ..ShardOpts::default() };
+        let report =
+            serve_sharded_opts(make_executor, 3, &plan, frames(24), &opts)
+                .unwrap();
+        assert_eq!(report.aggregate.dropped, 0);
+        assert_eq!(report.aggregate.frames, 24);
+        assert!(report.shard_errors.is_empty());
+        // results arrive sorted by frame id, every id exactly once
+        let ids: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..24u64).collect::<Vec<_>>());
+        assert_eq!(
+            report.frames_per_shard.iter().sum::<usize>(),
+            report.aggregate.frames
+        );
+    }
+
+    #[test]
+    fn work_stealing_batched_matches_single_executor_predictions() {
+        let plan = ServePlan {
+            order: vec![0, 1, 2],
+            conditional: vec![(0, 2)],
+        };
+        let fr = frames(17);
+        // baseline: one executor, frame at a time
+        let mut ex = make_executor(0).unwrap();
+        let (tx, rx) = channel();
+        for (id, x) in fr.clone() {
+            tx.send(Frame { id, input: x, enqueued: Instant::now() })
+                .unwrap();
+        }
+        drop(tx);
+        let (mut base, _) =
+            crate::coordinator::server::run_executor(&mut ex, &plan, rx).unwrap();
+        base.sort_by_key(|r| r.id);
+
+        let opts = ShardOpts {
+            queue_depth: 64,
+            batch: 4,
+            ..ShardOpts::default()
+        };
+        let report =
+            serve_sharded_opts(make_executor, 2, &plan, fr, &opts).unwrap();
+        assert_eq!(report.aggregate.dropped, 0);
+        assert_eq!(report.results.len(), base.len());
+        for (got, want) in report.results.iter().zip(&base) {
+            assert_eq!(got.id, want.id);
+            assert_eq!(
+                got.predictions, want.predictions,
+                "frame {} diverged under sharded batching",
+                got.id
+            );
+        }
+    }
+
+    /// Regression for the round-robin dead-shard pathology: with work
+    /// stealing, killing one shard must not strand the frames it would
+    /// have been dealt — the survivors absorb them, frame conservation
+    /// holds, and at most the poisoned frame itself is lost.
+    #[test]
+    fn dead_shard_frames_are_absorbed_by_survivors() {
+        struct FailingBackend {
+            inner: ReferenceBackend,
+            fail: bool,
+        }
+        impl Backend for FailingBackend {
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+            fn arch(&self, name: &str) -> Result<ArchSpec> {
+                self.inner.arch(name)
+            }
+            fn arch_names(&self) -> Vec<String> {
+                self.inner.arch_names()
+            }
+            fn run_layer(
+                &self,
+                arch: &ArchSpec,
+                layer: usize,
+                ncls: Option<usize>,
+                x: &Tensor,
+                w: &Tensor,
+                b: &Tensor,
+            ) -> Result<Tensor> {
+                anyhow::ensure!(!self.fail, "injected shard fault");
+                self.inner.run_layer(arch, layer, ncls, x, w, b)
+            }
+            fn train_step(
+                &self,
+                arch: &ArchSpec,
+                ncls: usize,
+                params: &mut Vec<Tensor>,
+                x: &Tensor,
+                y: &[i32],
+                lr: f32,
+            ) -> Result<f32> {
+                self.inner.train_step(arch, ncls, params, x, y, lr)
+            }
+            fn eval_logits(
+                &self,
+                arch: &ArchSpec,
+                ncls: usize,
+                params: &[Tensor],
+                x: &Tensor,
+            ) -> Result<Tensor> {
+                self.inner.eval_logits(arch, ncls, params, x)
+            }
+        }
+
+        let make = |shard: usize| -> Result<BlockExecutor<FailingBackend>> {
+            let template = make_executor(0)?;
+            Ok(BlockExecutor::new(
+                FailingBackend {
+                    inner: ReferenceBackend::new(),
+                    fail: shard == 0,
+                },
+                Device::msp430(),
+                template.arch.clone(),
+                template.graph.clone(),
+                template.ncls.clone(),
+                template.store.clone(),
+            ))
+        };
+
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let total = 40;
+        let opts = ShardOpts { queue_depth: 64, ..ShardOpts::default() };
+        let report =
+            serve_sharded_opts(make, 3, &plan, frames(total), &opts).unwrap();
+        // conservation with dropped ≈ 0: only the frame that poisoned
+        // shard 0 can be lost
+        assert_eq!(report.aggregate.frames + report.aggregate.dropped, total);
+        assert!(
+            report.aggregate.dropped <= 1,
+            "survivors failed to absorb: {} dropped",
+            report.aggregate.dropped
+        );
+        assert_eq!(report.frames_per_shard[0], 0);
+        assert!(report.aggregate.frames >= total - 1);
+        if report.aggregate.dropped == 1 {
+            assert_eq!(report.shard_errors.len(), 1);
+            assert_eq!(report.shard_errors[0].0, 0);
+            assert!(report.shard_errors[0].1.contains("injected shard fault"));
+        }
+    }
+
+    /// The skewed-workload acceptance gate: one shard paced 10x slower.
+    /// Work stealing must drop strictly fewer frames than round-robin at
+    /// equal queue depth, because the straggler's share is stolen by the
+    /// idle siblings instead of overflowing its private queue.
+    #[test]
+    fn work_stealing_beats_round_robin_under_skew() {
+        // single-task rounds keep per-frame compute far below the 40 ms
+        // handicap even in debug builds, so the skew dominates timing
+        let plan = ServePlan::unconditional(vec![0]);
+        let total = 45;
+        let skew = |steal: bool| ShardOpts {
+            queue_depth: 2,
+            batch: if steal { 4 } else { 1 },
+            steal,
+            local_depth: 1,
+            pace: Some(Duration::from_millis(8)),
+            handicap: Some((0, Duration::from_millis(40))),
+        };
+        let rr = serve_sharded_opts(
+            make_executor,
+            3,
+            &plan,
+            frames(total),
+            &skew(false),
+        )
+        .unwrap();
+        let ws = serve_sharded_opts(
+            make_executor,
+            3,
+            &plan,
+            frames(total),
+            &skew(true),
+        )
+        .unwrap();
+        assert_eq!(rr.aggregate.frames + rr.aggregate.dropped, total);
+        assert_eq!(ws.aggregate.frames + ws.aggregate.dropped, total);
+        // the baseline must actually exhibit the pathology...
+        assert!(
+            rr.aggregate.dropped > 0,
+            "round-robin did not overflow the straggler's queue"
+        );
+        // ...and work stealing must strictly beat it
+        assert!(
+            ws.aggregate.dropped < rr.aggregate.dropped,
+            "steal dropped {} vs round-robin {}",
+            ws.aggregate.dropped,
+            rr.aggregate.dropped
+        );
+    }
+
+    #[test]
+    fn all_shards_dead_still_conserves_frames() {
+        struct AlwaysFail(ReferenceBackend);
+        impl Backend for AlwaysFail {
+            fn name(&self) -> &'static str {
+                "always-fail"
+            }
+            fn arch(&self, name: &str) -> Result<ArchSpec> {
+                self.0.arch(name)
+            }
+            fn arch_names(&self) -> Vec<String> {
+                self.0.arch_names()
+            }
+            fn run_layer(
+                &self,
+                _arch: &ArchSpec,
+                _layer: usize,
+                _ncls: Option<usize>,
+                _x: &Tensor,
+                _w: &Tensor,
+                _b: &Tensor,
+            ) -> Result<Tensor> {
+                anyhow::bail!("total outage")
+            }
+            fn train_step(
+                &self,
+                arch: &ArchSpec,
+                ncls: usize,
+                params: &mut Vec<Tensor>,
+                x: &Tensor,
+                y: &[i32],
+                lr: f32,
+            ) -> Result<f32> {
+                self.0.train_step(arch, ncls, params, x, y, lr)
+            }
+            fn eval_logits(
+                &self,
+                arch: &ArchSpec,
+                ncls: usize,
+                params: &[Tensor],
+                x: &Tensor,
+            ) -> Result<Tensor> {
+                self.0.eval_logits(arch, ncls, params, x)
+            }
+        }
+        let make = |_s: usize| -> Result<BlockExecutor<AlwaysFail>> {
+            let template = make_executor(0)?;
+            Ok(BlockExecutor::new(
+                AlwaysFail(ReferenceBackend::new()),
+                Device::msp430(),
+                template.arch.clone(),
+                template.graph.clone(),
+                template.ncls.clone(),
+                template.store.clone(),
+            ))
+        };
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let total = 20;
+        let opts = ShardOpts { queue_depth: 64, ..ShardOpts::default() };
+        let report =
+            serve_sharded_opts(make, 2, &plan, frames(total), &opts).unwrap();
+        assert_eq!(report.aggregate.frames, 0);
+        assert_eq!(report.aggregate.dropped, total);
+        assert_eq!(report.shard_errors.len(), 2);
+        // the zero-frame report is well-formed (the build_report guard)
+        assert!(report.aggregate.throughput_fps.is_finite());
+        assert_eq!(report.aggregate.latency_p99_ms, 0.0);
     }
 }

@@ -1,7 +1,9 @@
 //! Minimal concurrency substrate (the offline mirror has no tokio):
-//! a fixed thread pool with a shared injector queue, plus a `parallel_map`
-//! helper used by the enumeration sweeps and the serving coordinator.
+//! a fixed thread pool with a shared injector queue, plus `parallel_map`
+//! / `try_parallel_map` helpers used by the enumeration sweeps and the
+//! serving coordinator. Panicking jobs are contained per item — they
+//! never take a pool worker down with them.
 
 pub mod pool;
 
-pub use pool::{parallel_map, ThreadPool};
+pub use pool::{parallel_map, try_parallel_map, ThreadPool};

@@ -4,6 +4,7 @@
 //! negligible; see EXPERIMENTS.md §Perf for measurements.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -82,24 +83,39 @@ fn worker_loop(sh: Arc<Shared>) {
                 q = sh.cv.wait(q).unwrap();
             }
         };
-        job();
+        // contain a panicking job: letting it unwind through here would
+        // kill this worker thread and silently shrink the pool for every
+        // later submitter. The job's owner observes the failure through
+        // its own channel/slot going unfilled (see `parallel_map`, which
+        // records the payload per item).
+        let _ = catch_unwind(AssertUnwindSafe(job));
     }
 }
 
-/// Map `f` over `items` on `threads` threads, preserving order.
+/// Map `f` over `items` on `threads` threads, preserving order, with the
+/// outcome of every item surfaced individually: `Ok(result)` or
+/// `Err(panic payload)`. A panicking item neither kills its worker (see
+/// `worker_loop`) nor aborts the map — every other item still completes.
 /// Falls back to a sequential loop for a single thread (avoids overhead).
-pub fn parallel_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+pub fn try_parallel_map<T, R, F>(
+    threads: usize,
+    items: Vec<T>,
+    f: F,
+) -> Vec<std::thread::Result<R>>
 where
     T: Send + 'static,
     R: Send + 'static,
     F: Fn(T) -> R + Send + Sync + 'static,
 {
     if threads <= 1 || items.len() <= 1 {
-        return items.into_iter().map(f).collect();
+        return items
+            .into_iter()
+            .map(|item| catch_unwind(AssertUnwindSafe(|| f(item))))
+            .collect();
     }
     let f = Arc::new(f);
     let n = items.len();
-    let slots: Arc<Mutex<Vec<Option<R>>>> =
+    let slots: Arc<Mutex<Vec<Option<std::thread::Result<R>>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
     let pool = ThreadPool::new(threads.min(n));
     let (tx, rx) = std::sync::mpsc::channel::<()>();
@@ -108,22 +124,45 @@ where
         let slots = Arc::clone(&slots);
         let tx = tx.clone();
         pool.execute(move || {
-            let r = f(item);
+            // record the item's outcome — value or panic payload — before
+            // signalling, so the collector below never deadlocks on a
+            // panicked item (the old code hung its misleading
+            // `expect("worker panicked")` on exactly that)
+            let r = catch_unwind(AssertUnwindSafe(|| f(item)));
             slots.lock().unwrap()[i] = Some(r);
             let _ = tx.send(());
         });
     }
     drop(tx);
     for _ in 0..n {
-        rx.recv().expect("worker panicked");
+        rx.recv().expect("parallel_map worker vanished");
     }
-    Arc::try_unwrap(slots)
-        .ok()
-        .expect("slots still shared")
-        .into_inner()
-        .unwrap()
+    // every slot was written before its signal was sent, so after n
+    // signals the results are complete. Take them under the lock —
+    // Arc::try_unwrap would race with the last worker's Arc clone, which
+    // drops only after its send, and panic spuriously.
+    let results = std::mem::take(&mut *slots.lock().unwrap());
+    results
         .into_iter()
         .map(|o| o.expect("missing result"))
+        .collect()
+}
+
+/// Map `f` over `items` on `threads` threads, preserving order. If any
+/// item panicked, the first panic is re-raised on the caller's thread —
+/// after every other item has completed and with the pool left healthy.
+pub fn parallel_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    try_parallel_map(threads, items, f)
+        .into_iter()
+        .map(|r| match r {
+            Ok(v) => v,
+            Err(payload) => resume_unwind(payload),
+        })
         .collect()
 }
 
@@ -169,5 +208,67 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        // a single worker: the panicking job and the follow-up MUST run
+        // on the same thread, proving containment (not a respawn)
+        let pool = ThreadPool::new(1);
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.execute(|| panic!("contained"));
+        pool.execute(move || {
+            let _ = tx.send(42);
+        });
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            42,
+            "pool lost its worker to a panicking job"
+        );
+    }
+
+    #[test]
+    fn try_parallel_map_surfaces_panic_per_item() {
+        let out = try_parallel_map(4, vec![1usize, 2, 3, 4], |x| {
+            if x == 3 {
+                panic!("item three");
+            }
+            x * 10
+        });
+        assert_eq!(out.len(), 4);
+        assert_eq!(*out[0].as_ref().unwrap(), 10);
+        assert_eq!(*out[1].as_ref().unwrap(), 20);
+        assert!(out[2].is_err(), "panicking item must surface as Err");
+        assert_eq!(*out[3].as_ref().unwrap(), 40);
+    }
+
+    #[test]
+    fn parallel_map_completes_other_items_despite_panic() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(4, (0..16usize).collect::<Vec<_>>(), move |x| {
+                if x == 7 {
+                    panic!("boom");
+                }
+                d.fetch_add(1, Ordering::SeqCst);
+                x
+            })
+        }));
+        assert!(caught.is_err(), "the panic must reach the caller");
+        // every non-panicking item still ran to completion
+        assert_eq!(done.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn try_parallel_map_sequential_path_catches_too() {
+        let out = try_parallel_map(1, vec![0usize, 1], |x| {
+            if x == 0 {
+                panic!("seq");
+            }
+            x
+        });
+        assert!(out[0].is_err());
+        assert_eq!(*out[1].as_ref().unwrap(), 1);
     }
 }

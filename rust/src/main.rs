@@ -5,7 +5,8 @@
 //!   antler order  --nodes N [--precedence a>b,c>d] [--cyclic]
 //!   antler graph  --dataset <name> [--bp 3] [--max-graphs 400]
 //!   antler serve  --deployment <audio|image> [--frames 100]
-//!                 [--conditional] [--shards N] [--steps-ind N] [--steps-re N]
+//!                 [--conditional] [--shards N] [--batch B] [--steal]
+//!                 [--round-robin] [--steps-ind N] [--steps-re N]
 //!   antler check  # verify backend + layer round-trip
 //!
 //! Every subcommand accepts `--backend reference|pjrt` (equivalent to
@@ -16,7 +17,9 @@
 use anyhow::{anyhow, Result};
 
 use antler::bench;
-use antler::coordinator::{pipeline, serve, serve_sharded, BlockExecutor, ServePlan};
+use antler::coordinator::{
+    pipeline, serve, serve_sharded_opts, BlockExecutor, ServePlan, ShardOpts,
+};
 use antler::data;
 use antler::device::Device;
 use antler::ordering::{solve_held_karp, OrderingProblem};
@@ -77,7 +80,9 @@ fn print_usage() {
          \x20 order           solve a random task-ordering instance exactly\n\
          \x20 graph           enumerate+select a task graph for a dataset analog\n\
          \x20 serve           run the live serving loop on a deployment stream\n\
-         \x20                 (--shards N shards it over N reference executors)\n\
+         \x20                 (--shards N executors, work-stealing scheduler;\n\
+         \x20                 --batch B drains B frames per forward;\n\
+         \x20                 --round-robin selects the baseline scheduler)\n\
          \x20 check           verify backend + layer round-trip\n\
          \n\
          global: --backend reference|pjrt (or ANTLER_BACKEND)"
@@ -154,13 +159,20 @@ fn cmd_graph(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let which = args.get_or("deployment", "audio");
     let shards = args.usize("shards", 1);
+    let batch = args.usize("batch", 1);
+    // --steal is the (default) work-stealing scheduler; --round-robin
+    // opts back into the PR-3 baseline for comparison
+    let steal = args.flag("steal") || !args.flag("round-robin");
     // refuse the incompatible combination BEFORE the expensive prepare:
-    // sharded serving needs Send executors, and the PJRT engine is
-    // Rc-based (!Send)
-    if shards > 1 && std::env::var(runtime::BACKEND_ENV).as_deref() == Ok("pjrt") {
+    // sharded/batched serving needs Send executors, and the PJRT engine
+    // is Rc-based (!Send)
+    if (shards > 1 || batch > 1)
+        && std::env::var(runtime::BACKEND_ENV).as_deref() == Ok("pjrt")
+    {
         return Err(anyhow!(
-            "--shards requires the Send reference backend; the pjrt engine \
-             is single-threaded (drop --backend pjrt or --shards)"
+            "--shards/--batch require the Send reference backend; the pjrt \
+             engine is single-threaded (drop --backend pjrt, --shards and \
+             --batch)"
         ));
     }
     let (bundle, be) = bench::figures_train::deployment_bundle(which, args)?;
@@ -177,12 +189,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let plan = ServePlan { order: prep.order.clone(), conditional };
 
-    let report = if shards > 1 {
-        // sharded serving always runs on the Send reference backend —
-        // one executor per shard, round-robin over the pool
+    let report = if shards > 1 || batch > 1 {
+        // sharded/batched serving always runs on the Send reference
+        // backend — one executor per shard on the scheduler pool
         println!(
-            "sharded serving runs on the reference backend ({shards} executors)"
+            "sharded serving runs on the reference backend ({shards} \
+             executor{}, {} scheduler{})",
+            if shards == 1 { "" } else { "s" },
+            if steal { "work-stealing" } else { "round-robin" },
+            if steal {
+                format!(", batch {batch}")
+            } else {
+                String::from(", frame-at-a-time")
+            },
         );
+        if !steal && batch > 1 {
+            println!(
+                "note: --batch is a work-stealing feature; the round-robin \
+                 baseline serves frame-at-a-time"
+            );
+        }
         let make = |_s: usize| {
             Ok(BlockExecutor::new(
                 ReferenceBackend::new(),
@@ -193,13 +219,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 prep.store.clone(),
             ))
         };
-        let sr = serve_sharded(make, shards, &plan, frames, 64, None)?;
+        let opts = ShardOpts {
+            queue_depth: 64,
+            batch,
+            steal,
+            ..ShardOpts::default()
+        };
+        let sr = serve_sharded_opts(make, shards, &plan, frames, &opts)?;
         println!(
             "sharded over {} executors ({} busy): per-shard frames {:?}",
             sr.shards,
             sr.busy_shards(),
             sr.frames_per_shard
         );
+        for (s, e) in &sr.shard_errors {
+            println!("shard {s} FAILED mid-stream: {e}");
+        }
         sr.aggregate
     } else {
         let mut ex = BlockExecutor::new(

@@ -50,6 +50,13 @@ pub trait Backend {
     /// Run one layer: `y = layer_l(x, w, b)`. `ncls` is `Some` only for
     /// the logits layer (its output width is chosen per task). The batch
     /// dimension is `x.shape[0]`.
+    ///
+    /// Contract for batch-N inputs: every output row must equal the
+    /// result of running that row alone (the reference backend makes
+    /// this bitwise-exact; PJRT agrees to the parity-test tolerance).
+    /// The cross-frame batching serving path (`coordinator::shard`)
+    /// relies on it to keep batched predictions frame-for-frame
+    /// identical to the single-executor loop.
     fn run_layer(
         &self,
         arch: &ArchSpec,

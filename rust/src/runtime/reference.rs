@@ -10,6 +10,13 @@
 //! This is the correctness oracle for the PJRT engine (tests/parity.rs)
 //! and the workhorse of the sharded executor pool
 //! (`coordinator::shard`), which wants one `Send` executor per thread.
+//!
+//! All forward kernels are batch-N: the leading dimension of `x` is the
+//! batch, and rows are computed in sample blocks (4/2/1) whose
+//! per-sample accumulation order matches a batch-1 call exactly, so a
+//! batched forward is bitwise identical row-for-row to running each
+//! sample alone. Cross-frame micro-batching in the shard scheduler
+//! (`coordinator::shard`, `--batch`) builds on that guarantee.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -304,6 +311,15 @@ fn apply_sgd(p: &mut Tensor, g: &Tensor, lr: f32) {
 // ------------------------------------------------------------------ dense
 
 /// y = flatten(x) @ w + b. x: (B, ...); w: (K, D); b: (D).
+///
+/// Batched rows are processed in sample blocks of 4/2/1
+/// ([`dense_block`]): each sample keeps its own accumulator and walks the
+/// weight rows in the same order as a batch-1 call, so the result is
+/// bitwise identical row-for-row regardless of how frames are batched —
+/// the invariant the sharded/batched serving parity tests rely on. The
+/// block form reuses each weight row across the block and gives the CPU
+/// independent accumulation chains, which is where cross-frame batching
+/// earns its wall-clock speedup (EXPERIMENTS.md §Perf).
 fn dense_raw(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
     let bsz = x.shape[0];
     let k: usize = x.shape[1..].iter().product();
@@ -315,21 +331,49 @@ fn dense_raw(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
         bail!("dense: bias {:?} vs width {d}", b.shape);
     }
     let mut out = vec![0.0f32; bsz * d];
-    for i in 0..bsz {
-        let xi = &x.data[i * k..(i + 1) * k];
-        let oi = &mut out[i * d..(i + 1) * d];
-        oi.copy_from_slice(&b.data);
-        for (kk, &xv) in xi.iter().enumerate() {
+    for row in out.chunks_mut(d) {
+        row.copy_from_slice(&b.data);
+    }
+    let mut i = 0;
+    while i + 4 <= bsz {
+        dense_block::<4>(x, w, &mut out, i, k, d);
+        i += 4;
+    }
+    while i + 2 <= bsz {
+        dense_block::<2>(x, w, &mut out, i, k, d);
+        i += 2;
+    }
+    while i < bsz {
+        dense_block::<1>(x, w, &mut out, i, k, d);
+        i += 1;
+    }
+    Ok(Tensor::new(vec![bsz, d], out))
+}
+
+/// Accumulate `NB` consecutive samples starting at row `i0`. Per sample
+/// the weight rows are visited in exactly the batch-1 order (kk ascending,
+/// zero inputs skipped), so each output row is bitwise independent of NB.
+fn dense_block<const NB: usize>(
+    x: &Tensor,
+    w: &Tensor,
+    out: &mut [f32],
+    i0: usize,
+    k: usize,
+    d: usize,
+) {
+    for kk in 0..k {
+        let wrow = &w.data[kk * d..(kk + 1) * d];
+        for sb in 0..NB {
+            let xv = x.data[(i0 + sb) * k + kk];
             if xv == 0.0 {
                 continue;
             }
-            let wrow = &w.data[kk * d..(kk + 1) * d];
+            let oi = &mut out[(i0 + sb) * d..(i0 + sb + 1) * d];
             for (ov, &wv) in oi.iter_mut().zip(wrow) {
                 *ov += xv * wv;
             }
         }
     }
-    Ok(Tensor::new(vec![bsz, d], out))
 }
 
 /// Backward for y = flatten(x) @ w + b given dz = ∂L/∂y.
@@ -374,6 +418,15 @@ fn dense_backward(x: &Tensor, w: &Tensor, dz: &Tensor) -> Result<(Tensor, Tensor
 
 /// Same-padded stride-1 conv + bias (no activation).
 /// x: (B, H, W, Cin) NHWC; w: (KH, KW, Cin, Cout) HWIO; b: (Cout).
+///
+/// Like [`dense_raw`], the batch is processed in sample blocks of 4/2/1
+/// ([`conv2d_block`]) with per-sample accumulation order identical to a
+/// batch-1 call — bitwise-identical rows for any batch split. Blocking
+/// amortizes the padding tests, index arithmetic and kernel-row loads
+/// over the block, and (crucially for the narrow per-pixel accumulators
+/// of these MCU-scale nets) gives the CPU NB independent FMA chains
+/// instead of one latency-bound chain — the batched serving speedup
+/// measured by `benches/runtime_hotpath.rs` (EXPERIMENTS.md §Perf).
 fn conv2d_raw(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
     if x.rank() != 4 || w.rank() != 4 {
         bail!("conv2d: x {:?}, w {:?}", x.shape, w.shape);
@@ -386,46 +439,83 @@ fn conv2d_raw(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
     if b.shape != [cout] {
         bail!("conv2d: bias {:?} vs cout {cout}", b.shape);
     }
+    let mut out = vec![0.0f32; bsz * h * wd * cout];
+    let mut n = 0;
+    while n + 4 <= bsz {
+        conv2d_block::<4>(x, w, b, &mut out, n);
+        n += 4;
+    }
+    while n + 2 <= bsz {
+        conv2d_block::<2>(x, w, b, &mut out, n);
+        n += 2;
+    }
+    while n < bsz {
+        conv2d_block::<1>(x, w, b, &mut out, n);
+        n += 1;
+    }
+    Ok(Tensor::new(vec![bsz, h, wd, cout], out))
+}
+
+/// Convolve `NB` consecutive samples starting at batch row `n0` into
+/// `out`. Shapes are re-read from the (already validated) tensors. Per
+/// sample the kernel taps are visited in exactly the batch-1 order
+/// (ky, kx, ci ascending; zero inputs skipped), so every output row is
+/// bitwise independent of the blocking factor.
+fn conv2d_block<const NB: usize>(
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+    out: &mut [f32],
+    n0: usize,
+) {
+    let (h, wd, cin) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, cout) = (w.shape[0], w.shape[1], w.shape[3]);
     // XLA SAME padding for stride 1: total k-1, low half rounded down.
     let (pad_t, pad_l) = ((kh - 1) / 2, (kw - 1) / 2);
-    let mut out = vec![0.0f32; bsz * h * wd * cout];
-    let mut acc = vec![0.0f32; cout];
-    for n in 0..bsz {
-        for oy in 0..h {
-            for ox in 0..wd {
-                acc.copy_from_slice(&b.data);
-                for ky in 0..kh {
-                    let iy = oy + ky;
-                    if iy < pad_t || iy >= h + pad_t {
+    let mut acc = vec![0.0f32; NB * cout];
+    for oy in 0..h {
+        for ox in 0..wd {
+            for sb in 0..NB {
+                acc[sb * cout..(sb + 1) * cout].copy_from_slice(&b.data);
+            }
+            for ky in 0..kh {
+                let iy = oy + ky;
+                if iy < pad_t || iy >= h + pad_t {
+                    continue;
+                }
+                let iy = iy - pad_t;
+                for kx in 0..kw {
+                    let ix = ox + kx;
+                    if ix < pad_l || ix >= wd + pad_l {
                         continue;
                     }
-                    let iy = iy - pad_t;
-                    for kx in 0..kw {
-                        let ix = ox + kx;
-                        if ix < pad_l || ix >= wd + pad_l {
-                            continue;
-                        }
-                        let ix = ix - pad_l;
-                        let xbase = ((n * h + iy) * wd + ix) * cin;
-                        let wbase = (ky * kw + kx) * cin * cout;
-                        for ci in 0..cin {
+                    let ix = ix - pad_l;
+                    let wbase = (ky * kw + kx) * cin * cout;
+                    for ci in 0..cin {
+                        let wrow =
+                            &w.data[wbase + ci * cout..wbase + (ci + 1) * cout];
+                        for sb in 0..NB {
+                            let xbase =
+                                (((n0 + sb) * h + iy) * wd + ix) * cin;
                             let xv = x.data[xbase + ci];
                             if xv == 0.0 {
                                 continue;
                             }
-                            let wrow = &w.data[wbase + ci * cout..wbase + (ci + 1) * cout];
-                            for (av, &wv) in acc.iter_mut().zip(wrow) {
+                            let accs = &mut acc[sb * cout..(sb + 1) * cout];
+                            for (av, &wv) in accs.iter_mut().zip(wrow) {
                                 *av += xv * wv;
                             }
                         }
                     }
                 }
-                let obase = ((n * h + oy) * wd + ox) * cout;
-                out[obase..obase + cout].copy_from_slice(&acc);
+            }
+            for sb in 0..NB {
+                let obase = (((n0 + sb) * h + oy) * wd + ox) * cout;
+                out[obase..obase + cout]
+                    .copy_from_slice(&acc[sb * cout..(sb + 1) * cout]);
             }
         }
     }
-    Ok(Tensor::new(vec![bsz, h, wd, cout], out))
 }
 
 /// Backward for z = conv2d(x, w) + b given dz. Returns (dw, db, dx).
@@ -736,6 +826,70 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(whole, cur);
+    }
+
+    /// Cross-frame batching contract: batched execution must be bitwise
+    /// identical, row for row, to running every sample alone — the
+    /// sharded/batched serving path depends on this to keep predictions
+    /// frame-for-frame equal to the single-executor loop. Batch size 7
+    /// exercises all three block widths (4 + 2 + 1).
+    #[test]
+    fn batched_forward_matches_per_sample_rows_exactly() {
+        let be = backend();
+        let arch = be.arch("cnn5").unwrap();
+        let mut rng = Pcg32::seed(0xBA7C);
+        let bsz = 7usize;
+        let x = Tensor::new(
+            vec![bsz, 16, 16, 1],
+            (0..bsz * 256).map(|_| rng.gauss()).collect(),
+        );
+        // walk conv/pool + dense + logits layers through the whole net
+        let params: Vec<Tensor> = arch
+            .flat_param_shapes(3)
+            .into_iter()
+            .map(|s| Tensor::he_init(s, &mut rng))
+            .collect();
+        let mut batched = x.clone();
+        let mut singles: Vec<Tensor> =
+            (0..bsz).map(|i| x.slice_batch(i, 1)).collect();
+        for l in 0..arch.n_layers() {
+            let is_logits = arch.layers[l].is_logits();
+            let ncls = is_logits.then_some(3);
+            batched = be
+                .run_layer(&arch, l, ncls, &batched, &params[2 * l], &params[2 * l + 1])
+                .unwrap();
+            for s in singles.iter_mut() {
+                *s = be
+                    .run_layer(&arch, l, ncls, s, &params[2 * l], &params[2 * l + 1])
+                    .unwrap();
+            }
+            for (i, s) in singles.iter().enumerate() {
+                assert_eq!(
+                    batched.slice_batch(i, 1).data,
+                    s.data,
+                    "layer {l} row {i} diverged from per-sample execution"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_block_widths_agree_exactly() {
+        // every batch size from 1 to 9 must produce identical rows — the
+        // 4/2/1 block dispatch must be invisible
+        let mut rng = Pcg32::seed(0xDE45);
+        let w = Tensor::he_init(vec![32, 16], &mut rng);
+        let b = Tensor::new(vec![16], (0..16).map(|i| i as f32 * 0.01).collect());
+        let x9 = Tensor::new(
+            vec![9, 32],
+            (0..9 * 32).map(|_| rng.gauss()).collect(),
+        );
+        let full = dense_raw(&x9, &w, &b).unwrap();
+        for bsz in 1..=9usize {
+            let xs = x9.slice_batch(0, bsz);
+            let ys = dense_raw(&xs, &w, &b).unwrap();
+            assert_eq!(ys.data, full.data[..bsz * 16], "bsz {bsz}");
+        }
     }
 
     #[test]

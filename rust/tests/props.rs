@@ -3,13 +3,20 @@
 //! (`ANTLER_PROP_SEED=<seed> cargo test <name>` replays a failure).
 
 use antler::affinity::synthetic_affinity;
-use antler::coordinator::ServePlan;
+use antler::coordinator::{
+    run_executor, serve_sharded_opts, BlockExecutor, Frame, ServePlan,
+    ShardOpts,
+};
 use antler::device::Device;
 use antler::memory::cost_matrix;
 use antler::model::archs::builtin_archs;
+use antler::model::Tensor;
 use antler::ordering::{solve_brute, solve_held_karp, OrderingProblem};
+use antler::runtime::ReferenceBackend;
 use antler::taskgraph::enumerate;
 use antler::testkit::{gen, prop_check};
+use antler::trainer::GraphWeights;
+use antler::util::rng::Pcg32;
 
 /// Brute force and Held–Karp must agree on the optimal cost for every
 /// small ordering instance derived from a random task graph — with and
@@ -108,6 +115,116 @@ fn prop_serve_plan_conditional_respects_precedence() {
                     }
                 }
                 decided[t] = true;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Conditional skipping under sharding + batching: for any random task
+/// graph, execution order and conditional gates, the work-stealing
+/// sharded/batched serve produces frame-for-frame identical
+/// `predictions` to the single-executor loop on the same frames — the
+/// §4.3 mechanism survives both the scheduler and the batched kernels
+/// (which are bitwise identical row-for-row by construction).
+#[test]
+fn prop_sharded_batched_serving_matches_single_executor() {
+    let archs = builtin_archs();
+    let arch = archs["cnn5"].clone();
+    let device = Device::msp430();
+    prop_check(
+        "sharded-batched-parity",
+        8,
+        |rng| {
+            let n = gen::usize_in(rng, 3, 6); // 3..=5 tasks
+            let aff = synthetic_affinity(n, 3, rng);
+            let graphs = enumerate::clustered(&aff, &[1, 3, 4], 30);
+            let g = graphs[rng.below(graphs.len())].clone();
+            let order = gen::permutation(rng, n);
+            // random gates that respect the order: prereq decided first
+            let mut cond = Vec::new();
+            for j in 1..n {
+                if rng.chance(0.5) {
+                    let i = rng.below(j);
+                    cond.push((order[i], order[j]));
+                }
+            }
+            let n_frames = gen::usize_in(rng, 5, 13);
+            let seed = rng.next_u64();
+            (g, order, cond, n_frames, seed)
+        },
+        |(g, order, cond, n_frames, seed)| {
+            let n = g.n_tasks;
+            let ncls = vec![2usize; n];
+            let mut wrng = Pcg32::seed(*seed);
+            let store = GraphWeights::init(g, &arch, &ncls, &mut wrng);
+            let frames: Vec<(u64, Tensor)> = (0..*n_frames as u64)
+                .map(|i| {
+                    let data = (0..256).map(|_| wrng.gauss()).collect();
+                    (i, Tensor::new(vec![1, 16, 16, 1], data))
+                })
+                .collect();
+            let plan = ServePlan {
+                order: order.clone(),
+                conditional: cond.clone(),
+            };
+            let make_executor = |_s: usize| {
+                Ok(BlockExecutor::new(
+                    ReferenceBackend::new(),
+                    device.clone(),
+                    arch.clone(),
+                    g.clone(),
+                    ncls.clone(),
+                    store.clone(),
+                ))
+            };
+
+            // baseline: one executor, one frame at a time
+            let mut ex = make_executor(0).map_err(|e: anyhow::Error| e.to_string())?;
+            let (tx, rx) = std::sync::mpsc::channel();
+            for (id, x) in frames.clone() {
+                tx.send(Frame {
+                    id,
+                    input: x,
+                    enqueued: std::time::Instant::now(),
+                })
+                .map_err(|_| "feed failed".to_string())?;
+            }
+            drop(tx);
+            let (mut base, _) =
+                run_executor(&mut ex, &plan, rx).map_err(|e| e.to_string())?;
+            base.sort_by_key(|r| r.id);
+
+            // candidate: 3 shards, work stealing, micro-batches of 4
+            let opts = ShardOpts {
+                queue_depth: frames.len() + 1,
+                batch: 4,
+                ..ShardOpts::default()
+            };
+            let report =
+                serve_sharded_opts(make_executor, 3, &plan, frames, &opts)
+                    .map_err(|e| e.to_string())?;
+            if report.aggregate.dropped != 0 {
+                return Err(format!(
+                    "unexpected drops: {}",
+                    report.aggregate.dropped
+                ));
+            }
+            if report.results.len() != base.len() {
+                return Err(format!(
+                    "{} sharded results vs {} baseline",
+                    report.results.len(),
+                    base.len()
+                ));
+            }
+            for (got, want) in report.results.iter().zip(&base) {
+                if got.id != want.id || got.predictions != want.predictions {
+                    return Err(format!(
+                        "frame {} predictions diverged: sharded {:?} vs \
+                         single {:?}",
+                        want.id, got.predictions, want.predictions
+                    ));
+                }
             }
             Ok(())
         },
