@@ -4,18 +4,21 @@
 # backend — zero artifact-gated skips.
 #
 #   ./ci.sh            # tier-1 gate (whole suite on the reference backend)
-#                      # + bench compile check + clippy (advisory)
-#   ./ci.sh --strict   # clippy findings become fatal
+#                      # + bench compile check + clippy (GATING: findings
+#                      # are fatal by default)
+#   ./ci.sh --advisory # escape hatch: clippy findings warn instead of
+#                      # failing (for lint drift in a newer clippy release)
 #   ./ci.sh --pjrt     # additionally build+test with --features pjrt
 #                      # (runs the PJRT/parity tests when artifacts exist)
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
-STRICT=0
+STRICT=1
 PJRT=0
 for arg in "$@"; do
     case "$arg" in
-        --strict) STRICT=1 ;;
+        --strict) STRICT=1 ;;   # kept for compatibility; already the default
+        --advisory) STRICT=0 ;;
         --pjrt) PJRT=1 ;;
     esac
 done
@@ -31,18 +34,18 @@ cargo test -q
 echo "== benches compile: cargo bench --no-run =="
 cargo bench --no-run
 
-# clippy on the default feature set. Advisory by default so that lint
-# drift in a newer clippy release cannot break the tier-1 gate; --strict
-# (the mode CI proper should run) makes findings fatal.
+# clippy on the default feature set — gating by default (a finding fails
+# CI). `--advisory` is the escape hatch for lint drift in a newer clippy
+# release: findings warn, the gate passes.
 echo "== clippy: cargo clippy -- -D warnings =="
 if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
     if cargo clippy -- -D warnings; then
         echo "clippy clean"
     elif [[ "$STRICT" == 1 ]]; then
-        echo "clippy findings (fatal under --strict)"
+        echo "clippy findings (fatal; ./ci.sh --advisory to downgrade)"
         exit 1
     else
-        echo "WARNING: clippy findings above (advisory; ./ci.sh --strict gates on them)"
+        echo "WARNING: clippy findings above (advisory mode)"
     fi
 else
     echo "(clippy not installed; skipped)"

@@ -11,8 +11,8 @@ use std::time::Duration;
 
 use antler::bench::bench_fn;
 use antler::coordinator::{
-    serve, serve_sharded, serve_sharded_opts, BlockExecutor, ServePlan,
-    ShardOpts,
+    serve, serve_sharded, serve_sharded_opts, serve_sharded_sources,
+    BlockExecutor, ServePlan, ShardOpts, Source,
 };
 use antler::device::Device;
 use antler::model::Tensor;
@@ -215,6 +215,7 @@ fn main() {
     let skew = |steal: bool| ShardOpts {
         queue_depth: 2,
         batch: if steal { 4 } else { 1 },
+        adaptive_batch: false,
         steal,
         local_depth: 1,
         pace: Some(Duration::from_micros(400)),
@@ -246,4 +247,107 @@ fn main() {
          dropped {} | work-stealing dropped {}",
         rr.aggregate.dropped, ws.aggregate.dropped
     );
+
+    // ---- the ingest-bound scenario: 4 fast synthetic sources (one frame
+    // due every 500 us, 2 ms staleness budget, 400 us admission cost per
+    // frame — the decode/copy model). One producer thread would need
+    // 4 x 400 us of admission work per 500 us tick (3.2x oversubscribed),
+    // so it falls behind every schedule and sheds stale frames; four
+    // producers hold one schedule each (0.8x) and shed (near) none. Same
+    // shards, same queue depth — the drop gap is pure ingest parallelism.
+    let src_frames = |s: usize| -> Vec<(u64, Tensor)> {
+        (0..40u64)
+            .map(|i| {
+                (s as u64 * 1000 + i, trunk_frames[(i % 8) as usize].clone())
+            })
+            .collect()
+    };
+    let mk_sources = || -> Vec<Source> {
+        (0..4)
+            .map(|s| Source {
+                name: format!("sensor{s}"),
+                frames: src_frames(s),
+                interval: Some(Duration::from_micros(500)),
+                slack: Some(Duration::from_millis(2)),
+                prep: Some(Duration::from_micros(400)),
+            })
+            .collect()
+    };
+    let ingest_plan = ServePlan::unconditional(vec![0]);
+    let ingest_opts = ShardOpts { queue_depth: 32, ..ShardOpts::default() };
+    for k in [1usize, 4] {
+        let (sr, ing) = serve_sharded_sources(
+            make_shard.clone(),
+            4,
+            &ingest_plan,
+            mk_sources(),
+            k,
+            &ingest_opts,
+        )
+        .unwrap();
+        println!(
+            "ingest-bound 4 sources x 40 frames, K={k} producer{}: offered {} \
+             delivered {} dropped {} ({} stale, {} backpressure); served {}",
+            if k == 1 { "" } else { "s" },
+            ing.offered(),
+            ing.delivered(),
+            sr.aggregate.dropped,
+            ing.dropped_stale(),
+            ing.dropped_backpressure(),
+            sr.aggregate.frames
+        );
+    }
+
+    // ---- adaptive vs fixed batch under bursty load: 6 sources on the
+    // same 3 ms schedule deliver synchronized 6-frame bursts (one
+    // producer each). Fixed batch-1 pays per-frame overhead through every
+    // burst; fixed batch-8 holds frames for batches the lulls never fill;
+    // adaptive grows into the burst and collapses to 1 in the lull —
+    // batch histograms + p95 tell the story (EXPERIMENTS.md §Perf).
+    let bursty_sources = || -> Vec<Source> {
+        (0..6)
+            .map(|s| {
+                Source::paced(
+                    &format!("burst{s}"),
+                    (0..30u64)
+                        .map(|i| {
+                            (
+                                s as u64 * 1000 + i,
+                                trunk_frames[(i % 8) as usize].clone(),
+                            )
+                        })
+                        .collect(),
+                    Duration::from_millis(3),
+                )
+            })
+            .collect()
+    };
+    for (label, batch, adaptive) in
+        [("fixed-1", 1usize, false), ("fixed-8", 8, false), ("auto-8", 8, true)]
+    {
+        let opts = ShardOpts {
+            queue_depth: 8,
+            batch,
+            adaptive_batch: adaptive,
+            ..ShardOpts::default()
+        };
+        // aggregate.dropped already folds the ingest drops in
+        let (sr, _ing) = serve_sharded_sources(
+            make_shard.clone(),
+            2,
+            &ingest_plan,
+            bursty_sources(),
+            6,
+            &opts,
+        )
+        .unwrap();
+        println!(
+            "bursty 6x30 frames, 2 shards, {label}: dropped {} p95 {:.2} ms \
+             mean batch {:.2} hist {:?}",
+            sr.aggregate.dropped,
+            sr.aggregate.latency_p95_ms,
+            sr.mean_batch(),
+            sr.total_hist()
+        );
+    }
 }

@@ -1,0 +1,496 @@
+//! Multi-producer ingest tier: K producer threads feeding a shared sink
+//! (the work-stealing scheduler's bounded injector in production, any
+//! `Fn(Frame) -> bool` in tests) from a set of independent frame
+//! sources.
+//!
+//! A [`Source`] models a real sampling front-end: frames arrive on a
+//! schedule (`interval`), cost CPU to admit (`prep` — the decode/copy a
+//! real driver does), and go stale (`slack`) when the producer falls
+//! behind the schedule — a sensor does not deliver ancient frames, it
+//! drops them and keeps up. The pool assigns sources to producers
+//! round-robin; each producer rotates fairly among its sources that are
+//! currently due (so a flood source cannot starve a paced sibling into
+//! staleness) and sleeps to the earliest schedule otherwise — one
+//! thread paces many slow sources and K threads split sources one
+//! thread cannot hold (the ingest-bound regime `benches/runtime_hotpath`
+//! measures: K=4 keeps every schedule where K=1 drops stale frames).
+//!
+//! Accounting is per source and exact: every offered frame is delivered,
+//! dropped stale, or dropped by sink backpressure — nothing else — so
+//! `delivered + dropped == offered` holds per source and in aggregate
+//! (asserted at the shutdown barrier). The barrier itself is
+//! `std::thread::scope`: [`run_ingest`] returns only after every
+//! producer has joined and handed back its source reports, so a report
+//! can never under-count an in-flight frame.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::model::Tensor;
+
+use super::server::Frame;
+
+/// One frame source behind the ingest tier.
+#[derive(Debug)]
+pub struct Source {
+    /// Name used in per-source accounting ("mic0", "cam1", ...).
+    pub name: String,
+    /// The frames this source will offer, in order.
+    pub frames: Vec<(u64, Tensor)>,
+    /// Real-time schedule: frame `i` is due at pool start + `i * interval`.
+    /// `None` = flood (every frame due immediately).
+    pub interval: Option<Duration>,
+    /// Staleness budget: a frame whose producer reaches it more than
+    /// `slack` past its due time is dropped at ingest (a sampling
+    /// front-end sheds overrun frames instead of delivering them late).
+    /// `None` = deliver no matter how late. Ignored without a schedule
+    /// (`interval`): a flood source has nothing to fall behind.
+    pub slack: Option<Duration>,
+    /// Per-frame admission cost (the decode/copy model), burned on the
+    /// producer thread before hand-off. This is what makes a fast source
+    /// "faster than one producer thread".
+    pub prep: Option<Duration>,
+}
+
+impl Source {
+    /// An unpaced source: every frame due immediately, never stale.
+    pub fn flood(name: &str, frames: Vec<(u64, Tensor)>) -> Source {
+        Source {
+            name: name.to_string(),
+            frames,
+            interval: None,
+            slack: None,
+            prep: None,
+        }
+    }
+
+    /// A paced source: one frame due every `interval`, never stale.
+    pub fn paced(
+        name: &str,
+        frames: Vec<(u64, Tensor)>,
+        interval: Duration,
+    ) -> Source {
+        Source { interval: Some(interval), ..Source::flood(name, frames) }
+    }
+}
+
+/// Per-source accounting after the pool drains.
+#[derive(Debug, Clone)]
+pub struct SourceReport {
+    pub name: String,
+    /// Frames the source held when ingest started.
+    pub offered: usize,
+    /// Frames handed to the sink and accepted.
+    pub delivered: usize,
+    /// Frames shed at ingest because the producer fell behind the
+    /// source's schedule by more than its slack.
+    pub dropped_stale: usize,
+    /// Frames the sink rejected (downstream queue full).
+    pub dropped_backpressure: usize,
+}
+
+impl SourceReport {
+    pub fn dropped(&self) -> usize {
+        self.dropped_stale + self.dropped_backpressure
+    }
+}
+
+/// Aggregate result of one ingest run.
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Producer threads actually used (clamped to the source count).
+    pub producers: usize,
+    /// Per-source accounting, in the order the sources were given.
+    pub sources: Vec<SourceReport>,
+}
+
+impl IngestReport {
+    pub fn offered(&self) -> usize {
+        self.sources.iter().map(|s| s.offered).sum()
+    }
+
+    pub fn delivered(&self) -> usize {
+        self.sources.iter().map(|s| s.delivered).sum()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.sources.iter().map(|s| s.dropped()).sum()
+    }
+
+    pub fn dropped_stale(&self) -> usize {
+        self.sources.iter().map(|s| s.dropped_stale).sum()
+    }
+
+    pub fn dropped_backpressure(&self) -> usize {
+        self.sources.iter().map(|s| s.dropped_backpressure).sum()
+    }
+}
+
+/// One producer's view of one source while the pool runs.
+struct Cursor {
+    /// Original index in the caller's source list (reports are returned
+    /// in that order).
+    src_i: usize,
+    name: String,
+    interval: Option<Duration>,
+    slack: Option<Duration>,
+    prep: Option<Duration>,
+    frames: VecDeque<(u64, Tensor)>,
+    offered: usize,
+    sent: usize,
+    delivered: usize,
+    stale: usize,
+    backpressure: usize,
+}
+
+impl Cursor {
+    fn new(src_i: usize, src: Source) -> Cursor {
+        let offered = src.frames.len();
+        Cursor {
+            src_i,
+            name: src.name,
+            interval: src.interval,
+            slack: src.slack,
+            prep: src.prep,
+            frames: src.frames.into(),
+            offered,
+            sent: 0,
+            delivered: 0,
+            stale: 0,
+            backpressure: 0,
+        }
+    }
+
+    /// When the source's next frame is due. Flood sources are always due.
+    fn due(&self, start: Instant) -> Instant {
+        match self.interval {
+            Some(iv) => start + iv * self.sent as u32,
+            None => start,
+        }
+    }
+
+    fn into_report(self) -> (usize, SourceReport) {
+        (
+            self.src_i,
+            SourceReport {
+                name: self.name,
+                offered: self.offered,
+                delivered: self.delivered,
+                dropped_stale: self.stale,
+                dropped_backpressure: self.backpressure,
+            },
+        )
+    }
+}
+
+/// Burn `d` of CPU on this thread — the synthetic decode/copy cost.
+/// Busy-wait, not sleep: admission work occupies the producer, which is
+/// exactly what makes a single producer fall behind several schedules.
+fn busy_wait(d: Duration) {
+    let t = Instant::now();
+    while t.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// One producer thread's loop: rotate fairly among the owned sources
+/// that are due (sleeping to the earliest schedule when none are) and
+/// pump frames into the sink until every owned source is exhausted.
+fn produce<S>(
+    mut curs: Vec<Cursor>,
+    start: Instant,
+    sink: &S,
+) -> Vec<(usize, SourceReport)>
+where
+    S: Fn(Frame) -> bool,
+{
+    if curs.is_empty() {
+        return Vec::new();
+    }
+    let mut rot = 0usize;
+    let m = curs.len();
+    loop {
+        // pick among the owned sources fairly: rotate over sources whose
+        // next frame is already due (a flood source is due forever, and a
+        // strict earliest-due pick would let it starve a paced sibling
+        // into staleness); only when nothing is due yet, sleep until the
+        // earliest-due source. Per-source FIFO is preserved either way —
+        // frames always leave a source front-first.
+        let now = Instant::now();
+        let due_now = (0..m)
+            .map(|off| (rot + off) % m)
+            .find(|&i| {
+                !curs[i].frames.is_empty() && curs[i].due(start) <= now
+            });
+        let ci = match due_now {
+            Some(i) => i,
+            None => {
+                let next = curs
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| !c.frames.is_empty())
+                    .min_by_key(|(_, c)| c.due(start))
+                    .map(|(i, _)| i);
+                let Some(i) = next else { break };
+                i
+            }
+        };
+        rot = (ci + 1) % m;
+        let c = &mut curs[ci];
+        let due = c.due(start);
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        // staleness is decided on arrival at the frame, before paying the
+        // admission cost: a front-end that has fallen behind sheds cheaply
+        // to catch back up to the schedule. Only scheduled sources can go
+        // stale — a flood source has no schedule to fall behind, so its
+        // `slack` (if any) is ignored rather than shedding every frame
+        // past pool start + slack.
+        let late = now.saturating_duration_since(due);
+        let (id, input) = c.frames.pop_front().expect("filtered non-empty");
+        c.sent += 1;
+        let stale = c.interval.is_some()
+            && c.slack.is_some_and(|slack| late > slack);
+        if stale {
+            c.stale += 1;
+        } else {
+            if let Some(p) = c.prep {
+                busy_wait(p);
+            }
+            if sink(Frame::new(id, input)) {
+                c.delivered += 1;
+            } else {
+                c.backpressure += 1;
+            }
+        }
+    }
+    curs.into_iter().map(Cursor::into_report).collect()
+}
+
+/// Run `producers` threads over `sources` (assigned round-robin),
+/// delivering every non-stale frame to `sink`. `sink` returns whether
+/// the frame was accepted downstream; a rejection is counted against the
+/// frame's source as backpressure. Returns only after every producer has
+/// joined (the graceful-shutdown barrier), with exact per-source
+/// accounting.
+pub fn run_ingest<S>(
+    sources: Vec<Source>,
+    producers: usize,
+    sink: &S,
+) -> IngestReport
+where
+    S: Fn(Frame) -> bool + Sync,
+{
+    let k = producers.max(1).min(sources.len().max(1));
+    let mut owned: Vec<Vec<Cursor>> = (0..k).map(|_| Vec::new()).collect();
+    for (i, src) in sources.into_iter().enumerate() {
+        owned[i % k].push(Cursor::new(i, src));
+    }
+    let start = Instant::now();
+    let mut tagged: Vec<(usize, SourceReport)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = owned
+            .into_iter()
+            .map(|curs| scope.spawn(move || produce(curs, start, sink)))
+            .collect();
+        // the barrier: every producer reports before anyone reads
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("ingest producer panicked"))
+            .collect()
+    });
+    tagged.sort_by_key(|&(i, _)| i);
+    let sources: Vec<SourceReport> =
+        tagged.into_iter().map(|(_, r)| r).collect();
+    // the conservation contract is enforced in release builds too — an
+    // accounting regression must fail loudly, not ship in the serving
+    // path; the check is O(sources) and free next to the joins above
+    for s in &sources {
+        assert_eq!(
+            s.delivered + s.dropped(),
+            s.offered,
+            "ingest source {} leaks frames",
+            s.name
+        );
+    }
+    IngestReport { producers: k, sources }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    fn frames(base: u64, n: usize) -> Vec<(u64, Tensor)> {
+        (0..n as u64)
+            .map(|i| (base + i, Tensor::full(vec![1, 2, 2, 1], 0.5)))
+            .collect()
+    }
+
+    #[test]
+    fn all_frames_delivered_in_per_source_order() {
+        let sources = vec![
+            Source::flood("a", frames(0, 7)),
+            Source::flood("b", frames(100, 4)),
+            Source::flood("c", frames(200, 9)),
+        ];
+        let seen = Mutex::new(Vec::<u64>::new());
+        let report = run_ingest(sources, 2, &|f: Frame| {
+            seen.lock().unwrap().push(f.id);
+            true
+        });
+        assert_eq!(report.producers, 2);
+        assert_eq!(report.offered(), 20);
+        assert_eq!(report.delivered(), 20);
+        assert_eq!(report.dropped(), 0);
+        for (s, (base, n)) in
+            report.sources.iter().zip([(0u64, 7), (100, 4), (200, 9)])
+        {
+            assert_eq!(s.offered, n);
+            assert_eq!(s.delivered, n);
+            // per-source FIFO order survives the merge and the threads
+            let seen = seen.lock().unwrap();
+            let got: Vec<u64> = seen
+                .iter()
+                .copied()
+                .filter(|id| (base..base + 100).contains(id))
+                .collect();
+            assert_eq!(got, (base..base + n as u64).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn rejecting_sink_counts_backpressure_per_source() {
+        let sources = vec![
+            Source::flood("a", frames(0, 5)),
+            Source::flood("b", frames(100, 3)),
+        ];
+        let report = run_ingest(sources, 2, &|_| false);
+        assert_eq!(report.delivered(), 0);
+        assert_eq!(report.dropped_backpressure(), 8);
+        assert_eq!(report.dropped_stale(), 0);
+        for s in &report.sources {
+            assert_eq!(s.delivered + s.dropped(), s.offered);
+        }
+    }
+
+    #[test]
+    fn flaky_sink_conserves_exactly() {
+        // the sink rejects every other frame; conservation stays exact
+        let sources = vec![
+            Source::flood("a", frames(0, 11)),
+            Source::flood("b", frames(100, 6)),
+        ];
+        let flip = AtomicUsize::new(0);
+        let report = run_ingest(sources, 3, &|_| {
+            flip.fetch_add(1, Ordering::Relaxed) % 2 == 0
+        });
+        assert_eq!(report.delivered() + report.dropped(), 17);
+        assert!(report.delivered() > 0);
+        assert!(report.dropped_backpressure() > 0);
+        for s in &report.sources {
+            assert_eq!(s.delivered + s.dropped(), s.offered);
+        }
+    }
+
+    #[test]
+    fn overrun_schedule_sheds_stale_frames() {
+        // a zero-slack schedule the producer is behind from the first
+        // instant: (almost) every frame is shed as stale, and the shed
+        // frames never reach the sink — but they are still accounted
+        let src = Source {
+            name: "hot".into(),
+            frames: frames(0, 16),
+            interval: Some(Duration::from_nanos(1)),
+            slack: Some(Duration::ZERO),
+            prep: None,
+        };
+        let seen = AtomicUsize::new(0);
+        let report = run_ingest(vec![src], 1, &|_| {
+            seen.fetch_add(1, Ordering::Relaxed);
+            true
+        });
+        let s = &report.sources[0];
+        assert_eq!(s.delivered + s.dropped(), 16);
+        // the very first frame can land exactly on its due instant; all
+        // later ones are strictly late on a zero-slack nanosecond grid
+        assert!(s.dropped_stale >= 15, "only {} stale", s.dropped_stale);
+        assert_eq!(s.delivered, seen.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn slack_without_schedule_is_ignored() {
+        // a flood source has no schedule to fall behind: a (misguided)
+        // slack on it must not shed frames that are merely later than
+        // pool start + slack
+        let src = Source {
+            name: "flood-with-slack".into(),
+            frames: frames(0, 50),
+            interval: None,
+            slack: Some(Duration::ZERO),
+            prep: Some(Duration::from_micros(50)),
+        };
+        let report = run_ingest(vec![src], 1, &|_| true);
+        assert_eq!(report.delivered(), 50);
+        assert_eq!(report.dropped_stale(), 0);
+    }
+
+    #[test]
+    fn no_slack_delivers_no_matter_how_late() {
+        // same overrun schedule, but slack = None: lateness never sheds
+        let src = Source {
+            name: "late-ok".into(),
+            frames: frames(0, 10),
+            interval: Some(Duration::from_nanos(1)),
+            slack: None,
+            prep: None,
+        };
+        let report = run_ingest(vec![src], 1, &|_| true);
+        assert_eq!(report.delivered(), 10);
+        assert_eq!(report.dropped(), 0);
+    }
+
+    #[test]
+    fn flood_source_does_not_starve_paced_sibling() {
+        // one producer owns both a large flood source (always due, ~60 ms
+        // of admission work) and a paced source whose frames go stale
+        // 8 ms past their 2 ms schedule. A strict earliest-due merge
+        // would drain the flood first and shed every paced frame; the
+        // rotating pick must interleave them so (almost) none go stale.
+        let flood = Source {
+            name: "bulk".into(),
+            frames: frames(1000, 200),
+            interval: None,
+            slack: None,
+            prep: Some(Duration::from_micros(300)),
+        };
+        let paced = Source {
+            name: "sensor".into(),
+            frames: frames(0, 20),
+            interval: Some(Duration::from_millis(2)),
+            slack: Some(Duration::from_millis(8)),
+            prep: None,
+        };
+        let report = run_ingest(vec![flood, paced], 1, &|_| true);
+        let bulk = &report.sources[0];
+        let sensor = &report.sources[1];
+        assert_eq!(bulk.delivered, 200);
+        assert_eq!(sensor.delivered + sensor.dropped(), 20);
+        // generous bound for scheduling noise; total starvation (the old
+        // earliest-due rule) would shed all 20
+        assert!(
+            sensor.dropped_stale <= 5,
+            "paced source starved: {} of 20 stale",
+            sensor.dropped_stale
+        );
+    }
+
+    #[test]
+    fn producer_count_clamps_to_sources() {
+        let report =
+            run_ingest(vec![Source::flood("only", frames(0, 3))], 8, &|_| true);
+        assert_eq!(report.producers, 1);
+        assert_eq!(report.delivered(), 3);
+    }
+}

@@ -2,22 +2,29 @@
 //! block-by-block on an execution backend with the §2.3 caching
 //! semantics (single frames or cross-frame micro-batches); `server` is
 //! the serving loop (sources → bounded queue → ordered multitask
-//! execution with conditional skipping → metrics); `shard` schedules
-//! frames across a pool of `Send` executors — a shared-injector
-//! work-stealing scheduler with residency-aware dispatch and batching,
-//! plus the round-robin baseline; `pipeline` wires offline preparation
-//! (affinity → graph → order → trained weights) into a ready-to-serve
-//! executor.
+//! execution with conditional skipping → metrics); `ingest` is the
+//! multi-producer front-end (K producer threads pacing/admitting
+//! independent frame sources with exact per-source drop accounting);
+//! `shard` schedules frames across a pool of `Send` executors — a
+//! shared-injector work-stealing scheduler with residency-aware
+//! dispatch and adaptive cross-frame batching, plus the round-robin
+//! baseline; `pipeline` wires offline preparation (affinity → graph →
+//! order → trained weights) into a ready-to-serve executor.
 
 pub mod executor;
+pub mod ingest;
 pub mod pipeline;
 pub mod server;
 pub mod shard;
 
 pub use executor::{BatchRound, BlockExecutor};
+pub use ingest::{run_ingest, IngestReport, Source, SourceReport};
 pub use pipeline::{prepare, Prepared, PrepareConfig};
 pub use server::{
     process_frame, run_executor, serve, Frame, FrameResult, ServePlan,
     ServeReport,
 };
-pub use shard::{serve_sharded, serve_sharded_opts, ShardOpts, ShardReport};
+pub use shard::{
+    serve_sharded, serve_sharded_opts, serve_sharded_sources, BatchPolicy,
+    ShardOpts, ShardReport,
+};

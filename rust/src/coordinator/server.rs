@@ -46,6 +46,14 @@ pub struct Frame {
     pub enqueued: Instant,
 }
 
+impl Frame {
+    /// Stamp a frame at hand-off time: `enqueued` starts the
+    /// queue-wait/latency clocks every serving path reports.
+    pub fn new(id: u64, input: Tensor) -> Frame {
+        Frame { id, input, enqueued: Instant::now() }
+    }
+}
+
 /// Per-frame inference result.
 #[derive(Debug, Clone)]
 pub struct FrameResult {
@@ -192,12 +200,18 @@ pub fn feed_frames(
     pace: Option<std::time::Duration>,
 ) -> usize {
     let mut dropped = 0;
-    for (id, input) in frames.drain(..) {
-        let frame = Frame { id, input, enqueued: Instant::now() };
-        match tx.try_send(frame) {
+    let mut it = frames.drain(..);
+    while let Some((id, input)) = it.next() {
+        match tx.try_send(Frame::new(id, input)) {
             Ok(()) => {}
             Err(TrySendError::Full(_)) => dropped += 1,
-            Err(TrySendError::Disconnected(_)) => break,
+            Err(TrySendError::Disconnected(_)) => {
+                // the receiver hung up mid-feed: the frame in hand AND the
+                // whole undelivered remainder are dropped, not vanished —
+                // `frames + dropped == total` must survive a hangup
+                dropped += 1 + it.len();
+                break;
+            }
         }
         if let Some(p) = pace {
             std::thread::sleep(p);
@@ -336,11 +350,38 @@ mod tests {
 
     #[test]
     fn feed_stops_on_disconnected_receiver() {
-        // a hung-up consumer ends the feed without counting drops
+        // a hung-up consumer ends the feed, and every undelivered frame —
+        // the one in hand plus the remainder — is counted as dropped so
+        // conservation holds: 0 served + 5 dropped == 5 offered
         let (tx, rx) = sync_channel::<Frame>(1);
         drop(rx);
         let dropped = feed_frames(tx, frames(5), None);
-        assert_eq!(dropped, 0);
+        assert_eq!(dropped, 5);
+    }
+
+    #[test]
+    fn feed_counts_remainder_dropped_on_midstream_hangup() {
+        // the consumer takes up to two frames, then hangs up mid-feed. A
+        // rendezvous channel (capacity 0) has no buffer a frame could be
+        // stranded in, so conservation is exact and race-free: every
+        // try_send either hands off to the parked consumer or is counted
+        // dropped (Full before the hangup, Disconnected after).
+        let (tx, rx) = sync_channel::<Frame>(0);
+        let consumer = std::thread::spawn(move || {
+            let a = rx.recv().is_ok() as usize;
+            let b = rx.recv().is_ok() as usize;
+            drop(rx);
+            a + b
+        });
+        // pace the feed so the consumer has time to park in recv
+        let dropped = feed_frames(
+            tx,
+            frames(8),
+            Some(std::time::Duration::from_millis(2)),
+        );
+        let delivered = consumer.join().unwrap();
+        assert!(delivered <= 2);
+        assert_eq!(delivered + dropped, 8);
     }
 
     #[test]

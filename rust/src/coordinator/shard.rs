@@ -50,6 +50,7 @@ use crate::model::Tensor;
 use crate::runtime::Backend;
 
 use super::executor::BlockExecutor;
+use super::ingest::{run_ingest, IngestReport, Source};
 use super::server::{
     build_report, process_frame, Frame, FrameResult, ServePlan, ServeReport,
 };
@@ -64,6 +65,11 @@ pub struct ShardOpts {
     /// Work-stealing only: the round-robin baseline deliberately keeps
     /// PR 3's frame-at-a-time behavior and ignores this.
     pub batch: usize,
+    /// Adaptive batch sizing (work-stealing only): each shard picks its
+    /// next batch in `[1, batch]` from observed injector depth and its
+    /// own recent service time (the [`BatchPolicy`] AIMD rule) instead
+    /// of always draining `batch`.
+    pub adaptive_batch: bool,
     /// Work-stealing scheduler (default) vs the round-robin baseline.
     pub steal: bool,
     /// Bound of each per-shard preferred deque (work-stealing only).
@@ -80,11 +86,90 @@ impl Default for ShardOpts {
         ShardOpts {
             queue_depth: 64,
             batch: 1,
+            adaptive_batch: false,
             steal: true,
             local_depth: 2,
             pace: None,
             handicap: None,
         }
+    }
+}
+
+impl ShardOpts {
+    /// The `(queue_depth, local_depth)` both schedulers actually use:
+    /// depth 0 is clamped to 1 here, in ONE place, so a depth-0 serve
+    /// behaves identically through every entry point (`serve`,
+    /// round-robin, work-stealing, multi-producer ingest) instead of
+    /// each path deciding for itself.
+    pub fn effective_depths(&self) -> (usize, usize) {
+        (self.queue_depth.max(1), self.local_depth.max(1))
+    }
+}
+
+/// Per-shard adaptive batch sizing: AIMD on injector backlog and the
+/// shard's own recent service time. The rule, unit-testable in
+/// isolation:
+///
+/// * backlog still >= the current batch after a pop → the queue is deep,
+///   **additive increase** (batch + 1, capped at `max`) — drain faster
+///   by amortizing more frames per forward;
+/// * backlog empty after a pop → light load, **multiplicative decrease**
+///   (batch / 2, floored at 1) — stop holding frames for latency's sake;
+/// * per-frame service time jumps 1.5x above its EWMA → this shard is
+///   slowing (straggler, noisy neighbor), multiplicative decrease so a
+///   slow shard stops hogging big batches its siblings could serve.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    max: usize,
+    adaptive: bool,
+    cur: usize,
+    ewma_per_frame_s: Option<f64>,
+}
+
+impl BatchPolicy {
+    /// Always `b` — the fixed `--batch B` behavior.
+    pub fn fixed(b: usize) -> BatchPolicy {
+        let b = b.max(1);
+        BatchPolicy { max: b, adaptive: false, cur: b, ewma_per_frame_s: None }
+    }
+
+    /// Adapt within `[1, max]`, starting cautious at 1.
+    pub fn adaptive(max: usize) -> BatchPolicy {
+        BatchPolicy {
+            max: max.max(1),
+            adaptive: true,
+            cur: 1,
+            ewma_per_frame_s: None,
+        }
+    }
+
+    /// The batch size to request from the next pop.
+    pub fn next(&self) -> usize {
+        self.cur
+    }
+
+    /// Feed back one served batch: how many frames it held, the backlog
+    /// (injector + own deque) left right after the pop, and how long the
+    /// batch took to serve.
+    pub fn observe(&mut self, served: usize, backlog: usize, service_s: f64) {
+        if !self.adaptive {
+            return;
+        }
+        let per = service_s / served.max(1) as f64;
+        let slow = self
+            .ewma_per_frame_s
+            .is_some_and(|e| e > 0.0 && per > 1.5 * e);
+        self.ewma_per_frame_s = Some(match self.ewma_per_frame_s {
+            None => per,
+            Some(e) => 0.7 * e + 0.3 * per,
+        });
+        self.cur = if slow || backlog == 0 {
+            (self.cur / 2).max(1)
+        } else if backlog >= self.cur {
+            (self.cur + 1).min(self.max)
+        } else {
+            self.cur
+        };
     }
 }
 
@@ -94,6 +179,10 @@ pub struct ShardReport {
     pub shards: usize,
     /// Frames actually processed by each shard.
     pub frames_per_shard: Vec<usize>,
+    /// Per-shard batch-size histogram: `batch_hist[s][b-1]` = number of
+    /// pops of exactly `b` frames shard `s` served. Round-robin shards
+    /// (frame-at-a-time) report everything in the `b = 1` bucket.
+    pub batch_hist: Vec<Vec<usize>>,
     /// Shards whose executor failed mid-stream (work continued on the
     /// survivors; the poisoned frames are counted as dropped).
     pub shard_errors: Vec<(usize, String)>,
@@ -109,6 +198,34 @@ impl ShardReport {
     pub fn busy_shards(&self) -> usize {
         self.frames_per_shard.iter().filter(|&&c| c > 0).count()
     }
+
+    /// Pool-wide batch histogram: bucket `b-1` counts pops of exactly
+    /// `b` frames summed over every shard.
+    pub fn total_hist(&self) -> Vec<usize> {
+        let width = self.batch_hist.iter().map(|h| h.len()).max().unwrap_or(0);
+        let mut agg = vec![0usize; width];
+        for hist in &self.batch_hist {
+            for (i, &c) in hist.iter().enumerate() {
+                agg[i] += c;
+            }
+        }
+        agg
+    }
+
+    /// Mean frames per pop across the whole pool (from the histograms).
+    pub fn mean_batch(&self) -> f64 {
+        let mut frames = 0usize;
+        let mut pops = 0usize;
+        for (i, &c) in self.total_hist().iter().enumerate() {
+            frames += (i + 1) * c;
+            pops += c;
+        }
+        if pops == 0 {
+            0.0
+        } else {
+            frames as f64 / pops as f64
+        }
+    }
 }
 
 /// What one shard worker hands back when its loop ends.
@@ -118,10 +235,27 @@ struct ShardOutcome {
     tasks_skipped: usize,
     layer_execs: u64,
     layer_skips: u64,
+    /// `batch_hist[b-1]` = pops of exactly `b` frames this shard served.
+    batch_hist: Vec<usize>,
     /// Executor failure that killed the shard, if any.
     error: Option<String>,
     /// Frames consumed but not served because of that failure.
     failed: usize,
+}
+
+impl ShardOutcome {
+    fn new(shard: usize, max_batch: usize) -> ShardOutcome {
+        ShardOutcome {
+            shard,
+            results: Vec::new(),
+            tasks_skipped: 0,
+            layer_execs: 0,
+            layer_skips: 0,
+            batch_hist: vec![0; max_batch.max(1)],
+            error: None,
+            failed: 0,
+        }
+    }
 }
 
 /// Serve `frames` across `n_shards` executors built by `make_executor`
@@ -172,6 +306,43 @@ where
     }
 }
 
+/// Serve a set of independent frame [`Source`]s through the
+/// multi-producer ingest tier (`coordinator::ingest`) in front of the
+/// work-stealing scheduler: `producers` threads pace/admit the sources
+/// and feed the shared injector concurrently with the serving shards.
+/// Returns the shard report plus the per-source ingest accounting;
+/// ingest drops (stale + backpressure) are the aggregate report's
+/// `dropped`, so `frames + dropped == total offered` holds per source
+/// and overall.
+///
+/// The ingest tier fronts the work-stealing scheduler only — the
+/// round-robin baseline keeps its single-producer deal loop.
+pub fn serve_sharded_sources<B, F>(
+    make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    sources: Vec<Source>,
+    producers: usize,
+    opts: &ShardOpts,
+) -> Result<(ShardReport, IngestReport)>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    if !opts.steal {
+        return Err(anyhow!(
+            "multi-producer ingest fronts the work-stealing scheduler; \
+             drop --round-robin to use --producers"
+        ));
+    }
+    let (report, ingest) =
+        serve_work_stealing_core(make_executor, n_shards, plan, opts, |d| {
+            let ingest = run_ingest(sources, producers, &|f| d.offer(f));
+            (ingest.dropped(), Some(ingest))
+        })?;
+    Ok((report, ingest.expect("ingest feeder always reports")))
+}
+
 // --------------------------------------------------------- round-robin
 
 /// The PR-3 baseline: deal frames to per-shard bounded queues in strict
@@ -190,26 +361,19 @@ where
     F: FnMut(usize) -> Result<BlockExecutor<B>>,
 {
     let n = n_shards.max(1);
+    let (queue_depth, _) = opts.effective_depths();
     let pool = ThreadPool::new(n);
     let (res_tx, res_rx) = channel();
     let mut frame_txs = Vec::with_capacity(n);
     for s in 0..n {
-        let (tx, rx) = sync_channel::<Frame>(opts.queue_depth.max(1));
+        let (tx, rx) = sync_channel::<Frame>(queue_depth);
         frame_txs.push(tx);
         let mut ex = make_executor(s)?;
         let plan = plan.clone();
         let res_tx = res_tx.clone();
         let handicap = opts.handicap;
         pool.execute(move || {
-            let mut out = ShardOutcome {
-                shard: s,
-                results: Vec::new(),
-                tasks_skipped: 0,
-                layer_execs: 0,
-                layer_skips: 0,
-                error: None,
-                failed: 0,
-            };
+            let mut out = ShardOutcome::new(s, 1);
             while let Ok(frame) = rx.recv() {
                 if let Some((hs, d)) = handicap {
                     if hs == s {
@@ -220,6 +384,7 @@ where
                     Ok((r, sk)) => {
                         out.results.push(r);
                         out.tasks_skipped += sk;
+                        out.batch_hist[0] += 1; // frame-at-a-time
                     }
                     Err(e) => {
                         out.error = Some(format!("{e:#}"));
@@ -241,8 +406,7 @@ where
     let t0 = Instant::now();
     let mut dropped = 0usize;
     for (i, (id, input)) in frames.into_iter().enumerate() {
-        let frame = Frame { id, input, enqueued: Instant::now() };
-        match frame_txs[i % n].try_send(frame) {
+        match frame_txs[i % n].try_send(Frame::new(id, input)) {
             Ok(()) => {}
             Err(TrySendError::Full(_)) => dropped += 1,
             // a dead shard's queue: the frame is dropped even when live
@@ -340,8 +504,20 @@ impl StealQueue {
     /// Pop up to `max` frames for shard `me`: own deque first, then the
     /// injector, then (only when otherwise idle) steal from the longest
     /// sibling deque. Blocks while empty; `None` once closed and fully
-    /// drained.
-    fn pop_batch(&self, me: usize, max: usize) -> Option<Vec<Frame>> {
+    /// drained. Also returns the backlog this shard still sees (injector
+    /// + own deque) right after the pop — the load signal the adaptive
+    /// [`BatchPolicy`] feeds on.
+    ///
+    /// Waiter-liveness audit: every transition that can make this loop's
+    /// exit condition true notifies — `push` (work arrived), `mark_dead`
+    /// (a sibling's deque spilled into the injector), `close` (drain and
+    /// exit). `close` additionally runs from a drop guard in the
+    /// scheduler ([`CloseOnDrop`]) so a feeder that panics before
+    /// closing cannot strand parked waiters, and the wait below carries
+    /// a timeout as defense in depth: a missed wakeup degrades into a
+    /// periodic recheck instead of a hang.
+    fn pop_batch(&self, me: usize, max: usize) -> Option<(Vec<Frame>, usize)> {
+        let max = max.max(1);
         let mut st = self.st.lock().unwrap();
         loop {
             let mut batch = Vec::new();
@@ -370,12 +546,17 @@ impl StealQueue {
                 }
             }
             if !batch.is_empty() {
-                return Some(batch);
+                let backlog = st.global.len() + st.locals[me].len();
+                return Some((batch, backlog));
             }
             if st.closed {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            let (guard, _timed_out) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap();
+            st = guard;
         }
     }
 
@@ -422,10 +603,51 @@ impl ResidencyBoard {
     }
 }
 
-/// The shared-injector work-stealing scheduler with residency-aware
-/// dispatch and cross-frame micro-batching.
+/// Residency-aware admission into the work-stealing queue, shared by
+/// every feeder (the inline single-producer loop and the multi-producer
+/// ingest tier — `offer` takes `&self`, so K producers call it
+/// concurrently). Returns whether the frame was accepted; a `false` is
+/// a drop the feeder must account.
+pub struct WsDispatch {
+    queue: Arc<StealQueue>,
+    boards: Vec<Arc<ResidencyBoard>>,
+    needed: Vec<Option<usize>>,
+    n: usize,
+    queue_depth: usize,
+    local_depth: usize,
+}
+
+impl WsDispatch {
+    pub fn offer(&self, frame: Frame) -> bool {
+        // residency-aware dispatch: a frame sticks to its tagged shard
+        // only while that shard is warm and has deque room; otherwise it
+        // goes to the injector where any idle shard takes it
+        let preferred = if self.needed.is_empty() {
+            None
+        } else {
+            let p = (frame.id as usize) % self.n;
+            self.boards[p].warm_for(&self.needed).then_some(p)
+        };
+        self.queue
+            .push(frame, preferred, self.queue_depth, self.local_depth)
+    }
+}
+
+/// Closes the steal queue when dropped: workers must always see `closed`
+/// even when the feeder unwinds, or parked shards would wait forever and
+/// the pool's join-on-drop would deadlock (the `pop_batch` audit).
+struct CloseOnDrop<'a>(&'a StealQueue);
+
+impl Drop for CloseOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// The single-producer front-end over the work-stealing core: one inline
+/// loop offering `frames` in order, with optional pacing.
 fn serve_work_stealing<B, F>(
-    mut make_executor: F,
+    make_executor: F,
     n_shards: usize,
     plan: &ServePlan,
     frames: Vec<(u64, Tensor)>,
@@ -434,6 +656,41 @@ fn serve_work_stealing<B, F>(
 where
     B: Backend + Send + 'static,
     F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    let pace = opts.pace;
+    let (report, _) =
+        serve_work_stealing_core(make_executor, n_shards, plan, opts, |d| {
+            let mut dropped = 0usize;
+            for (id, input) in frames {
+                if !d.offer(Frame::new(id, input)) {
+                    dropped += 1;
+                }
+                if let Some(p) = pace {
+                    std::thread::sleep(p);
+                }
+            }
+            (dropped, None)
+        })?;
+    Ok(report)
+}
+
+/// The shared-injector work-stealing scheduler with residency-aware
+/// dispatch and adaptive cross-frame micro-batching. Generic over the
+/// feeder: it spawns the shard workers, hands the feeder a [`WsDispatch`]
+/// to offer frames through, and aggregates once the feeder returns its
+/// drop count (plus the ingest report, when the feeder is the
+/// multi-producer tier).
+fn serve_work_stealing_core<B, F, Feed>(
+    mut make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    opts: &ShardOpts,
+    feed: Feed,
+) -> Result<(ShardReport, Option<IngestReport>)>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+    Feed: FnOnce(&WsDispatch) -> (usize, Option<IngestReport>),
 {
     let n = n_shards.max(1);
     // build executors up front: the dispatcher reads the graph shape for
@@ -465,6 +722,7 @@ where
     let pool = ThreadPool::new(n);
     let (res_tx, res_rx) = channel();
     let batch = opts.batch.max(1);
+    let adaptive = opts.adaptive_batch;
     for (s, mut ex) in executors.into_iter().enumerate() {
         let queue = Arc::clone(&queue);
         let board = Arc::clone(&boards[s]);
@@ -472,16 +730,19 @@ where
         let res_tx = res_tx.clone();
         let handicap = opts.handicap;
         pool.execute(move || {
-            let mut out = ShardOutcome {
-                shard: s,
-                results: Vec::new(),
-                tasks_skipped: 0,
-                layer_execs: 0,
-                layer_skips: 0,
-                error: None,
-                failed: 0,
+            let mut out = ShardOutcome::new(s, batch);
+            let mut policy = if adaptive {
+                BatchPolicy::adaptive(batch)
+            } else {
+                BatchPolicy::fixed(batch)
             };
-            while let Some(popped) = queue.pop_batch(s, batch) {
+            while let Some((popped, backlog)) =
+                queue.pop_batch(s, policy.next())
+            {
+                // the service clock starts before the handicap sleep: a
+                // straggler's slowness must show up in the policy's
+                // service-time signal or it would keep hogging big batches
+                let served_at = Instant::now();
                 if let Some((hs, d)) = handicap {
                     if hs == s {
                         std::thread::sleep(d * popped.len() as u32);
@@ -526,7 +787,15 @@ where
                     Ok(())
                 })();
                 match step {
-                    Ok(()) => board.publish(ex.resident()),
+                    Ok(()) => {
+                        board.publish(ex.resident());
+                        out.batch_hist[m - 1] += 1;
+                        policy.observe(
+                            m,
+                            backlog,
+                            served_at.elapsed().as_secs_f64(),
+                        );
+                    }
                     Err(e) => {
                         // this shard is broken: surface the error, give
                         // its queued frames back, let the others serve
@@ -544,36 +813,29 @@ where
     }
     drop(res_tx);
 
+    let (queue_depth, local_depth) = opts.effective_depths();
+    let dispatch = WsDispatch {
+        queue: Arc::clone(&queue),
+        boards,
+        needed,
+        n,
+        queue_depth,
+        local_depth,
+    };
     let t0 = Instant::now();
-    let mut dropped = 0usize;
-    let qd = opts.queue_depth.max(1);
-    let ld = opts.local_depth.max(1);
-    for (id, input) in frames {
-        // residency-aware dispatch: a frame sticks to its tagged shard
-        // only while that shard is warm and has deque room; otherwise it
-        // goes to the injector where any idle shard takes it
-        let preferred = if needed.is_empty() {
-            None
-        } else {
-            let p = (id as usize) % n;
-            boards[p].warm_for(&needed).then_some(p)
-        };
-        let frame = Frame { id, input, enqueued: Instant::now() };
-        if !queue.push(frame, preferred, qd, ld) {
-            dropped += 1;
-        }
-        if let Some(p) = opts.pace {
-            std::thread::sleep(p);
-        }
-    }
-    queue.close();
+    // the queue must close even if the feeder unwinds (a panicking
+    // producer), or parked workers would never see `closed` and the
+    // pool's join-on-drop would hang — see the pop_batch audit
+    let closer = CloseOnDrop(queue.as_ref());
+    let (dropped, ingest) = feed(&dispatch);
+    drop(closer); // normal path: close now, workers drain and report
 
     let report = collect_outcomes(n, res_rx, dropped, t0);
     // if every worker died early, queued frames were never consumed
     let leftover = queue.drain_remaining();
     report.map(|mut r| {
         r.aggregate.dropped += leftover;
-        r
+        (r, ingest)
     })
 }
 
@@ -586,6 +848,7 @@ fn collect_outcomes(
     t0: Instant,
 ) -> Result<ShardReport> {
     let mut frames_per_shard = vec![0usize; n];
+    let mut batch_hist = vec![Vec::new(); n];
     let mut shard_errors = Vec::new();
     let mut all = Vec::new();
     let mut skipped = 0usize;
@@ -596,6 +859,7 @@ fn collect_outcomes(
             .recv()
             .map_err(|_| anyhow!("a shard worker died before reporting"))?;
         frames_per_shard[out.shard] = out.results.len();
+        batch_hist[out.shard] = out.batch_hist;
         skipped += out.tasks_skipped;
         layer_execs += out.layer_execs;
         layer_skips += out.layer_skips;
@@ -613,6 +877,7 @@ fn collect_outcomes(
     Ok(ShardReport {
         shards: n,
         frames_per_shard,
+        batch_hist,
         shard_errors,
         results: all,
         aggregate,
@@ -755,8 +1020,7 @@ mod tests {
         let mut ex = make_executor(0).unwrap();
         let (tx, rx) = channel();
         for (id, x) in fr.clone() {
-            tx.send(Frame { id, input: x, enqueued: Instant::now() })
-                .unwrap();
+            tx.send(Frame::new(id, x)).unwrap();
         }
         drop(tx);
         let (mut base, _) =
@@ -782,60 +1046,62 @@ mod tests {
         }
     }
 
+    /// A backend that fails every `run_layer` when `fail` is set — the
+    /// injected-fault half of the dead-shard regression tests.
+    struct FailingBackend {
+        inner: ReferenceBackend,
+        fail: bool,
+    }
+    impl Backend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+        fn arch(&self, name: &str) -> Result<ArchSpec> {
+            self.inner.arch(name)
+        }
+        fn arch_names(&self) -> Vec<String> {
+            self.inner.arch_names()
+        }
+        fn run_layer(
+            &self,
+            arch: &ArchSpec,
+            layer: usize,
+            ncls: Option<usize>,
+            x: &Tensor,
+            w: &Tensor,
+            b: &Tensor,
+        ) -> Result<Tensor> {
+            anyhow::ensure!(!self.fail, "injected shard fault");
+            self.inner.run_layer(arch, layer, ncls, x, w, b)
+        }
+        fn train_step(
+            &self,
+            arch: &ArchSpec,
+            ncls: usize,
+            params: &mut Vec<Tensor>,
+            x: &Tensor,
+            y: &[i32],
+            lr: f32,
+        ) -> Result<f32> {
+            self.inner.train_step(arch, ncls, params, x, y, lr)
+        }
+        fn eval_logits(
+            &self,
+            arch: &ArchSpec,
+            ncls: usize,
+            params: &[Tensor],
+            x: &Tensor,
+        ) -> Result<Tensor> {
+            self.inner.eval_logits(arch, ncls, params, x)
+        }
+    }
+
     /// Regression for the round-robin dead-shard pathology: with work
     /// stealing, killing one shard must not strand the frames it would
     /// have been dealt — the survivors absorb them, frame conservation
     /// holds, and at most the poisoned frame itself is lost.
     #[test]
     fn dead_shard_frames_are_absorbed_by_survivors() {
-        struct FailingBackend {
-            inner: ReferenceBackend,
-            fail: bool,
-        }
-        impl Backend for FailingBackend {
-            fn name(&self) -> &'static str {
-                "failing"
-            }
-            fn arch(&self, name: &str) -> Result<ArchSpec> {
-                self.inner.arch(name)
-            }
-            fn arch_names(&self) -> Vec<String> {
-                self.inner.arch_names()
-            }
-            fn run_layer(
-                &self,
-                arch: &ArchSpec,
-                layer: usize,
-                ncls: Option<usize>,
-                x: &Tensor,
-                w: &Tensor,
-                b: &Tensor,
-            ) -> Result<Tensor> {
-                anyhow::ensure!(!self.fail, "injected shard fault");
-                self.inner.run_layer(arch, layer, ncls, x, w, b)
-            }
-            fn train_step(
-                &self,
-                arch: &ArchSpec,
-                ncls: usize,
-                params: &mut Vec<Tensor>,
-                x: &Tensor,
-                y: &[i32],
-                lr: f32,
-            ) -> Result<f32> {
-                self.inner.train_step(arch, ncls, params, x, y, lr)
-            }
-            fn eval_logits(
-                &self,
-                arch: &ArchSpec,
-                ncls: usize,
-                params: &[Tensor],
-                x: &Tensor,
-            ) -> Result<Tensor> {
-                self.inner.eval_logits(arch, ncls, params, x)
-            }
-        }
-
         let make = |shard: usize| -> Result<BlockExecutor<FailingBackend>> {
             let template = make_executor(0)?;
             Ok(BlockExecutor::new(
@@ -886,6 +1152,7 @@ mod tests {
         let skew = |steal: bool| ShardOpts {
             queue_depth: 2,
             batch: if steal { 4 } else { 1 },
+            adaptive_batch: false,
             steal,
             local_depth: 1,
             pace: Some(Duration::from_millis(8)),
@@ -990,5 +1257,295 @@ mod tests {
         // the zero-frame report is well-formed (the build_report guard)
         assert!(report.aggregate.throughput_fps.is_finite());
         assert_eq!(report.aggregate.latency_p99_ms, 0.0);
+    }
+
+    /// The satellite-audit regression, queue level and deterministic: a
+    /// waiter parked in `pop_batch` on an empty queue must be woken by
+    /// `mark_dead` (sibling died, its deque spilled) and must exit on
+    /// `close`. This test hanging = the strand bug.
+    #[test]
+    fn parked_waiter_survives_sibling_death_and_exits_on_close() {
+        let queue = Arc::new(StealQueue::new(2));
+        let q = Arc::clone(&queue);
+        let waiter = std::thread::spawn(move || {
+            let mut popped = 0usize;
+            while let Some((batch, _backlog)) = q.pop_batch(1, 4) {
+                popped += batch.len();
+            }
+            popped
+        });
+        // give the waiter time to park, then kill its sibling — whose
+        // deque holds a frame that must spill to the injector and reach
+        // the parked waiter
+        std::thread::sleep(Duration::from_millis(20));
+        let fr = frames(2);
+        let mut it = fr.into_iter();
+        let (id0, x0) = it.next().unwrap();
+        let (id1, x1) = it.next().unwrap();
+        assert!(queue.push(Frame::new(id0, x0), Some(0), 8, 2));
+        queue.mark_dead(0);
+        // a frame offered after the death goes to the injector (dead
+        // shards take no preferred frames)
+        assert!(queue.push(Frame::new(id1, x1), Some(0), 8, 2));
+        std::thread::sleep(Duration::from_millis(20));
+        queue.close();
+        let popped = waiter.join().expect("parked waiter stranded");
+        assert_eq!(popped, 2, "spilled + injected frames reach the waiter");
+    }
+
+    /// Serve-level variant: one shard is poisoned, the feed is slow
+    /// enough that the healthy shard parks between arrivals. Whichever
+    /// shard pops the poisoned frames, the serve must terminate (no
+    /// stranded waiter after `mark_dead`/`close`) with conservation and
+    /// at most one frame lost. Which shard wins each pop race is
+    /// scheduler-dependent, so only race-free facts are asserted.
+    #[test]
+    fn last_live_shard_death_releases_parked_sibling() {
+        let make = |shard: usize| -> Result<BlockExecutor<FailingBackend>> {
+            let template = make_executor(0)?;
+            Ok(BlockExecutor::new(
+                FailingBackend {
+                    inner: ReferenceBackend::new(),
+                    fail: shard == 0,
+                },
+                Device::msp430(),
+                template.arch.clone(),
+                template.graph.clone(),
+                template.ncls.clone(),
+                template.store.clone(),
+            ))
+        };
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let total = 10;
+        let opts = ShardOpts {
+            queue_depth: 8,
+            pace: Some(Duration::from_millis(2)),
+            ..ShardOpts::default()
+        };
+        let report =
+            serve_sharded_opts(make, 2, &plan, frames(total), &opts).unwrap();
+        assert_eq!(report.aggregate.frames + report.aggregate.dropped, total);
+        assert!(report.aggregate.dropped <= 1);
+        // the poisoned shard can never complete a frame
+        assert_eq!(report.frames_per_shard[0], 0);
+        assert!(report.shard_errors.len() <= 1);
+        if let Some((s, e)) = report.shard_errors.first() {
+            assert_eq!(*s, 0);
+            assert!(e.contains("injected shard fault"));
+        }
+    }
+
+    /// The depth-semantics satellite: a depth-0 serve must behave
+    /// identically through every entry point — clamped to depth 1, never
+    /// a panic or a zero-capacity deadlock — because both schedulers
+    /// share `ShardOpts::effective_depths`.
+    #[test]
+    fn depth_zero_is_clamped_identically_in_both_schedulers() {
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let total = 12;
+        for steal in [false, true] {
+            let opts = ShardOpts {
+                queue_depth: 0,
+                local_depth: 0,
+                steal,
+                ..ShardOpts::default()
+            };
+            let report =
+                serve_sharded_opts(make_executor, 2, &plan, frames(total), &opts)
+                    .unwrap();
+            assert_eq!(
+                report.aggregate.frames + report.aggregate.dropped,
+                total,
+                "steal={steal}"
+            );
+            assert!(report.aggregate.frames > 0, "steal={steal}");
+        }
+    }
+
+    #[test]
+    fn adaptive_batching_matches_fixed_predictions_and_fills_histogram() {
+        let plan = ServePlan {
+            order: vec![0, 1, 2],
+            conditional: vec![(0, 2)],
+        };
+        let fr = frames(21);
+        let fixed = ShardOpts {
+            queue_depth: 64,
+            batch: 4,
+            ..ShardOpts::default()
+        };
+        let adaptive = ShardOpts { adaptive_batch: true, ..fixed.clone() };
+        let a = serve_sharded_opts(make_executor, 2, &plan, fr.clone(), &fixed)
+            .unwrap();
+        let b = serve_sharded_opts(make_executor, 2, &plan, fr, &adaptive)
+            .unwrap();
+        assert_eq!(a.aggregate.dropped, 0);
+        assert_eq!(b.aggregate.dropped, 0);
+        // batch size never changes predictions (batched kernels are
+        // bitwise identical to batch-1), so adaptive == fixed frame-wise
+        assert_eq!(a.results.len(), b.results.len());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.predictions, y.predictions);
+        }
+        // the histogram is complete: every served frame is in some bucket,
+        // every bucket within [1, batch]
+        for report in [&a, &b] {
+            assert_eq!(report.batch_hist.len(), 2);
+            let mut counted = 0usize;
+            for hist in &report.batch_hist {
+                assert_eq!(hist.len(), 4);
+                for (i, &c) in hist.iter().enumerate() {
+                    counted += (i + 1) * c;
+                }
+            }
+            assert_eq!(counted, report.aggregate.frames);
+            let mb = report.mean_batch();
+            assert!((1.0..=4.0).contains(&mb), "mean batch {mb}");
+        }
+    }
+
+    /// Multi-producer ingest in front of the work-stealing scheduler:
+    /// per-source and aggregate conservation, and the same predictions
+    /// the single-producer path computes.
+    #[test]
+    fn multi_source_ingest_serve_conserves_per_source() {
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let all = frames(30);
+        let sources: Vec<Source> = (0..3)
+            .map(|s| {
+                let fr: Vec<(u64, Tensor)> = all
+                    .iter()
+                    .filter(|(id, _)| (*id as usize) % 3 == s)
+                    .cloned()
+                    .collect();
+                Source::flood(&format!("src{s}"), fr)
+            })
+            .collect();
+        let opts = ShardOpts {
+            queue_depth: 64,
+            batch: 4,
+            adaptive_batch: true,
+            ..ShardOpts::default()
+        };
+        let (report, ingest) =
+            serve_sharded_sources(make_executor, 3, &plan, sources, 3, &opts)
+                .unwrap();
+        assert_eq!(ingest.producers, 3);
+        assert_eq!(ingest.offered(), 30);
+        for s in &ingest.sources {
+            assert_eq!(s.offered, 10);
+            assert_eq!(s.delivered + s.dropped(), s.offered);
+        }
+        // deep queue, no schedule: nothing is shed at ingest
+        assert_eq!(ingest.dropped(), 0);
+        assert_eq!(
+            report.aggregate.frames + report.aggregate.dropped,
+            ingest.offered()
+        );
+        assert_eq!(report.aggregate.frames, 30);
+        // every id exactly once, same predictions as the single-producer
+        // work-stealing path over the same frames
+        let ws = serve_sharded_opts(
+            make_executor,
+            3,
+            &plan,
+            all,
+            &ShardOpts { queue_depth: 64, ..ShardOpts::default() },
+        )
+        .unwrap();
+        assert_eq!(report.results.len(), ws.results.len());
+        for (got, want) in report.results.iter().zip(&ws.results) {
+            assert_eq!(got.id, want.id);
+            assert_eq!(got.predictions, want.predictions);
+        }
+    }
+
+    #[test]
+    fn multi_producer_requires_work_stealing() {
+        let plan = ServePlan::unconditional(vec![0]);
+        let opts = ShardOpts { steal: false, ..ShardOpts::default() };
+        let err = serve_sharded_sources(
+            make_executor,
+            2,
+            &plan,
+            vec![Source::flood("a", frames(4))],
+            2,
+            &opts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("work-stealing"));
+    }
+
+    // ---- BatchPolicy in isolation (the adaptive rule is pure state)
+
+    #[test]
+    fn batch_policy_fixed_never_moves() {
+        let mut p = BatchPolicy::fixed(6);
+        for _ in 0..32 {
+            assert_eq!(p.next(), 6);
+            p.observe(6, 0, 1.0); // empty backlog, wild service time
+        }
+        assert_eq!(BatchPolicy::fixed(0).next(), 1); // clamped
+    }
+
+    #[test]
+    fn batch_policy_grows_additively_under_backlog() {
+        let mut p = BatchPolicy::adaptive(8);
+        assert_eq!(p.next(), 1);
+        for step in 0..16 {
+            let before = p.next();
+            p.observe(before, 64, 0.001 * before as f64); // deep backlog
+            assert!(p.next() <= before + 1, "step {step} jumped");
+            assert!(p.next() >= before, "step {step} shrank");
+        }
+        assert_eq!(p.next(), 8); // reached and capped at max
+    }
+
+    #[test]
+    fn batch_policy_collapses_multiplicatively_when_idle() {
+        let mut p = BatchPolicy::adaptive(8);
+        for _ in 0..16 {
+            let b = p.next();
+            p.observe(b, 64, 0.001 * b as f64);
+        }
+        assert_eq!(p.next(), 8);
+        p.observe(8, 0, 0.008); // queue drained
+        assert_eq!(p.next(), 4);
+        p.observe(4, 0, 0.004);
+        assert_eq!(p.next(), 2);
+        p.observe(2, 0, 0.002);
+        p.observe(1, 0, 0.001);
+        assert_eq!(p.next(), 1); // floored, never 0
+    }
+
+    #[test]
+    fn batch_policy_backs_off_on_service_time_spike() {
+        let mut p = BatchPolicy::adaptive(8);
+        // steady 1 ms/frame service under backlog: grows to max
+        for _ in 0..16 {
+            let b = p.next();
+            p.observe(b, 64, 0.001 * b as f64);
+        }
+        assert_eq!(p.next(), 8);
+        // the shard slows 10x (noisy neighbor): even with deep backlog
+        // the policy must halve rather than keep hogging big batches
+        p.observe(8, 64, 0.010 * 8.0);
+        assert_eq!(p.next(), 4);
+    }
+
+    #[test]
+    fn batch_policy_stays_in_bounds_on_arbitrary_feedback() {
+        let mut p = BatchPolicy::adaptive(5);
+        let mut rng = Pcg32::seed(99);
+        for _ in 0..500 {
+            let b = p.next();
+            assert!((1..=5).contains(&b));
+            p.observe(
+                b,
+                rng.below(20),
+                rng.f64() * 0.01,
+            );
+        }
     }
 }

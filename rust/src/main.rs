@@ -5,8 +5,9 @@
 //!   antler order  --nodes N [--precedence a>b,c>d] [--cyclic]
 //!   antler graph  --dataset <name> [--bp 3] [--max-graphs 400]
 //!   antler serve  --deployment <audio|image> [--frames 100]
-//!                 [--conditional] [--shards N] [--batch B] [--steal]
-//!                 [--round-robin] [--steps-ind N] [--steps-re N]
+//!                 [--conditional] [--shards N] [--batch B|auto]
+//!                 [--batch-max M] [--producers K] [--queue-depth D]
+//!                 [--steal] [--round-robin] [--steps-ind N] [--steps-re N]
 //!   antler check  # verify backend + layer round-trip
 //!
 //! Every subcommand accepts `--backend reference|pjrt` (equivalent to
@@ -81,7 +82,10 @@ fn print_usage() {
          \x20 graph           enumerate+select a task graph for a dataset analog\n\
          \x20 serve           run the live serving loop on a deployment stream\n\
          \x20                 (--shards N executors, work-stealing scheduler;\n\
-         \x20                 --batch B drains B frames per forward;\n\
+         \x20                 --batch B drains B frames per forward, --batch auto\n\
+         \x20                 adapts within [1, --batch-max] from load;\n\
+         \x20                 --producers K feeds via K ingest threads;\n\
+         \x20                 --queue-depth D bounds the injector;\n\
          \x20                 --round-robin selects the baseline scheduler)\n\
          \x20 check           verify backend + layer round-trip\n\
          \n\
@@ -159,20 +163,44 @@ fn cmd_graph(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let which = args.get_or("deployment", "audio");
     let shards = args.usize("shards", 1);
-    let batch = args.usize("batch", 1);
+    // `--batch B` drains a fixed B frames per forward; `--batch auto`
+    // lets each shard adapt within [1, --batch-max] (AIMD on injector
+    // depth and its own service time — coordinator::shard::BatchPolicy)
+    let batch_arg = args.get_or("batch", "1");
+    let (batch, adaptive) = if batch_arg == "auto" {
+        (args.usize("batch-max", 8), true)
+    } else {
+        (batch_arg.parse().unwrap_or(1), false)
+    };
+    // `--producers K` splits the deployment stream over K sources fed by
+    // K ingest threads (the multi-producer tier in front of the
+    // work-stealing scheduler)
+    let producers = args.usize("producers", 1);
+    let queue_depth = args.usize("queue-depth", 64);
     // --steal is the (default) work-stealing scheduler; --round-robin
     // opts back into the PR-3 baseline for comparison
     let steal = args.flag("steal") || !args.flag("round-robin");
+    let sharded = shards > 1 || batch > 1 || adaptive || producers > 1;
     // refuse the incompatible combination BEFORE the expensive prepare:
     // sharded/batched serving needs Send executors, and the PJRT engine
     // is Rc-based (!Send)
-    if (shards > 1 || batch > 1)
-        && std::env::var(runtime::BACKEND_ENV).as_deref() == Ok("pjrt")
-    {
+    if sharded && std::env::var(runtime::BACKEND_ENV).as_deref() == Ok("pjrt") {
         return Err(anyhow!(
-            "--shards/--batch require the Send reference backend; the pjrt \
-             engine is single-threaded (drop --backend pjrt, --shards and \
-             --batch)"
+            "--shards/--batch/--producers require the Send reference \
+             backend; the pjrt engine is single-threaded (drop --backend \
+             pjrt, --shards, --batch and --producers)"
+        ));
+    }
+    if producers > 1 && !steal {
+        return Err(anyhow!(
+            "--producers feeds the work-stealing scheduler; drop \
+             --round-robin"
+        ));
+    }
+    if adaptive && !steal {
+        return Err(anyhow!(
+            "--batch auto adapts the work-stealing scheduler's pops; the \
+             round-robin baseline is frame-at-a-time (drop --round-robin)"
         ));
     }
     let (bundle, be) = bench::figures_train::deployment_bundle(which, args)?;
@@ -189,7 +217,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let plan = ServePlan { order: prep.order.clone(), conditional };
 
-    let report = if shards > 1 || batch > 1 {
+    let report = if sharded {
         // sharded/batched serving always runs on the Send reference
         // backend — one executor per shard on the scheduler pool
         println!(
@@ -198,7 +226,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if shards == 1 { "" } else { "s" },
             if steal { "work-stealing" } else { "round-robin" },
             if steal {
-                format!(", batch {batch}")
+                if adaptive {
+                    format!(", batch auto (max {batch})")
+                } else {
+                    format!(", batch {batch}")
+                }
             } else {
                 String::from(", frame-at-a-time")
             },
@@ -220,18 +252,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ))
         };
         let opts = ShardOpts {
-            queue_depth: 64,
+            queue_depth,
             batch,
+            adaptive_batch: adaptive,
             steal,
             ..ShardOpts::default()
         };
-        let sr = serve_sharded_opts(make, shards, &plan, frames, &opts)?;
+        let sr = if producers > 1 {
+            // split the deployment stream round-robin over K sources, one
+            // ingest thread each, feeding the shared injector
+            let mut split: Vec<Vec<(u64, antler::model::Tensor)>> =
+                (0..producers).map(|_| Vec::new()).collect();
+            for (id, x) in frames {
+                split[id as usize % producers].push((id, x));
+            }
+            let sources: Vec<antler::coordinator::Source> = split
+                .into_iter()
+                .enumerate()
+                .map(|(s, fr)| {
+                    antler::coordinator::Source::flood(&format!("src{s}"), fr)
+                })
+                .collect();
+            let (sr, ingest) = antler::coordinator::serve_sharded_sources(
+                make, shards, &plan, sources, producers, &opts,
+            )?;
+            println!("ingest over {} producers:", ingest.producers);
+            for s in &ingest.sources {
+                println!(
+                    "  {}: offered {} delivered {} dropped {} \
+                     ({} stale, {} backpressure)",
+                    s.name,
+                    s.offered,
+                    s.delivered,
+                    s.dropped(),
+                    s.dropped_stale,
+                    s.dropped_backpressure
+                );
+            }
+            sr
+        } else {
+            serve_sharded_opts(make, shards, &plan, frames, &opts)?
+        };
         println!(
             "sharded over {} executors ({} busy): per-shard frames {:?}",
             sr.shards,
             sr.busy_shards(),
             sr.frames_per_shard
         );
+        if steal && (batch > 1 || adaptive) {
+            let agg = sr.total_hist();
+            println!(
+                "batch histogram (pops of size 1..{}): {:?}, mean batch {:.2}",
+                agg.len(),
+                agg,
+                sr.mean_batch()
+            );
+        }
         for (s, e) in &sr.shard_errors {
             println!("shard {s} FAILED mid-stream: {e}");
         }

@@ -4,8 +4,8 @@
 
 use antler::affinity::synthetic_affinity;
 use antler::coordinator::{
-    run_executor, serve_sharded_opts, BlockExecutor, Frame, ServePlan,
-    ShardOpts,
+    run_executor, serve_sharded_opts, serve_sharded_sources, BlockExecutor,
+    Frame, ServePlan, ShardOpts, Source,
 };
 use antler::device::Device;
 use antler::memory::cost_matrix;
@@ -183,12 +183,8 @@ fn prop_sharded_batched_serving_matches_single_executor() {
             let mut ex = make_executor(0).map_err(|e: anyhow::Error| e.to_string())?;
             let (tx, rx) = std::sync::mpsc::channel();
             for (id, x) in frames.clone() {
-                tx.send(Frame {
-                    id,
-                    input: x,
-                    enqueued: std::time::Instant::now(),
-                })
-                .map_err(|_| "feed failed".to_string())?;
+                tx.send(Frame::new(id, x))
+                    .map_err(|_| "feed failed".to_string())?;
             }
             drop(tx);
             let (mut base, _) =
@@ -222,6 +218,177 @@ fn prop_sharded_batched_serving_matches_single_executor() {
                     return Err(format!(
                         "frame {} predictions diverged: sharded {:?} vs \
                          single {:?}",
+                        want.id, got.predictions, want.predictions
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Multi-producer ingest in front of the work-stealing scheduler: for
+/// random source splits, random per-source pacing, K producers and a
+/// handicapped (skewed) shard, per-source conservation
+/// `delivered + dropped == offered` holds exactly, nothing is dropped
+/// when the injector is deep enough, and the served predictions match
+/// the single-producer single-executor loop frame-for-frame — the
+/// ingest tier changes *when* frames arrive, never *what* is computed.
+#[test]
+fn prop_multi_producer_ingest_matches_single_producer() {
+    let archs = builtin_archs();
+    let arch = archs["cnn5"].clone();
+    let device = Device::msp430();
+    let graph = antler::taskgraph::TaskGraph::new(
+        3,
+        vec![1, 3, 4],
+        vec![
+            antler::taskgraph::Partition(vec![0, 0, 0]),
+            antler::taskgraph::Partition(vec![0, 0, 0]),
+            antler::taskgraph::Partition(vec![0, 0, 1]),
+            antler::taskgraph::Partition::singletons(3),
+        ],
+    )
+    .unwrap();
+    prop_check(
+        "multi-producer-ingest",
+        6,
+        |rng| {
+            let n_sources = gen::usize_in(rng, 2, 5); // 2..=4 sources
+            let counts: Vec<usize> =
+                (0..n_sources).map(|_| gen::usize_in(rng, 3, 11)).collect();
+            let pace_us: Vec<u64> =
+                (0..n_sources).map(|_| rng.below(3) as u64 * 400).collect();
+            let k = gen::usize_in(rng, 1, n_sources + 1);
+            let handicap_shard = rng.below(3);
+            let seed = rng.next_u64();
+            (counts, pace_us, k, handicap_shard, seed)
+        },
+        |(counts, pace_us, k, handicap_shard, seed)| {
+            let ncls = vec![2usize; 3];
+            let mut wrng = Pcg32::seed(*seed);
+            let store = GraphWeights::init(&graph, &arch, &ncls, &mut wrng);
+            // unique ids across sources: source s owns s*1000 + i
+            let sources: Vec<Source> = counts
+                .iter()
+                .enumerate()
+                .map(|(s, &c)| {
+                    let frames: Vec<(u64, Tensor)> = (0..c as u64)
+                        .map(|i| {
+                            let data =
+                                (0..256).map(|_| wrng.gauss()).collect();
+                            (
+                                s as u64 * 1000 + i,
+                                Tensor::new(vec![1, 16, 16, 1], data),
+                            )
+                        })
+                        .collect();
+                    let mut src =
+                        Source::flood(&format!("src{s}"), frames);
+                    if pace_us[s] > 0 {
+                        src.interval = Some(
+                            std::time::Duration::from_micros(pace_us[s]),
+                        );
+                    }
+                    src
+                })
+                .collect();
+            let total: usize = counts.iter().sum();
+            let all: Vec<(u64, Tensor)> = sources
+                .iter()
+                .flat_map(|s| s.frames.iter().cloned())
+                .collect();
+            let plan = ServePlan {
+                order: vec![0, 1, 2],
+                conditional: vec![(0, 2)],
+            };
+            let make_executor = |_s: usize| {
+                Ok(BlockExecutor::new(
+                    ReferenceBackend::new(),
+                    device.clone(),
+                    arch.clone(),
+                    graph.clone(),
+                    ncls.clone(),
+                    store.clone(),
+                ))
+            };
+
+            // baseline: one executor, one producer, one frame at a time
+            let mut ex =
+                make_executor(0).map_err(|e: anyhow::Error| e.to_string())?;
+            let (tx, rx) = std::sync::mpsc::channel();
+            for (id, x) in all {
+                tx.send(Frame::new(id, x))
+                    .map_err(|_| "feed failed".to_string())?;
+            }
+            drop(tx);
+            let (mut base, _) =
+                run_executor(&mut ex, &plan, rx).map_err(|e| e.to_string())?;
+            base.sort_by_key(|r| r.id);
+
+            // candidate: K producers, 3 shards (one handicapped), deep
+            // injector so nothing can be dropped, adaptive batching on
+            let opts = ShardOpts {
+                queue_depth: total + 8,
+                batch: 4,
+                adaptive_batch: true,
+                handicap: Some((
+                    *handicap_shard,
+                    std::time::Duration::from_micros(500),
+                )),
+                ..ShardOpts::default()
+            };
+            let (report, ingest) = serve_sharded_sources(
+                make_executor,
+                3,
+                &plan,
+                sources,
+                *k,
+                &opts,
+            )
+            .map_err(|e| e.to_string())?;
+
+            // per-source conservation, exact
+            for (s, sr) in ingest.sources.iter().enumerate() {
+                if sr.offered != counts[s] {
+                    return Err(format!(
+                        "source {s} offered {} != {}",
+                        sr.offered, counts[s]
+                    ));
+                }
+                if sr.delivered + sr.dropped() != sr.offered {
+                    return Err(format!(
+                        "source {s} leaks: {} + {} != {}",
+                        sr.delivered,
+                        sr.dropped(),
+                        sr.offered
+                    ));
+                }
+            }
+            // deep injector + no slack: nothing shed at ingest
+            if ingest.dropped() != 0 {
+                return Err(format!("unexpected drops: {}", ingest.dropped()));
+            }
+            // aggregate conservation
+            if report.aggregate.frames + report.aggregate.dropped != total {
+                return Err(format!(
+                    "aggregate leaks: {} + {} != {total}",
+                    report.aggregate.frames, report.aggregate.dropped
+                ));
+            }
+            // frame-for-frame parity with the single-producer baseline
+            if report.results.len() != base.len() {
+                return Err(format!(
+                    "{} multi-producer results vs {} baseline",
+                    report.results.len(),
+                    base.len()
+                ));
+            }
+            for (got, want) in report.results.iter().zip(&base) {
+                if got.id != want.id || got.predictions != want.predictions {
+                    return Err(format!(
+                        "frame {} diverged under multi-producer ingest: \
+                         {:?} vs {:?}",
                         want.id, got.predictions, want.predictions
                     ));
                 }
