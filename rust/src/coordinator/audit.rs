@@ -1,0 +1,478 @@
+//! Runtime invariant auditor: checked frame-custody ledgers for the
+//! serving path, compiled to zero-sized no-ops in release builds
+//! (`debug_assertions` off).
+//!
+//! Every frame offered to the serving stack must end in exactly one
+//! terminal state — served, dropped at admission, failed with a dead
+//! shard, or drained after total failure — and the conservation
+//! invariant `delivered + dropped == offered` that every report-level
+//! test asserts is only as trustworthy as the counters feeding it.
+//! These ledgers re-derive the same totals from the *transitions*
+//! (enqueue/pop/serve/fail/drain for queue custody,
+//! deliver/stale/backpressure for ingest custody, deliver/drop for the
+//! single-producer feed) and panic at the first transition that could
+//! not have come from a conserving execution. Wired into the steal
+//! queue (`shard::StealQueue`), `server::feed_frames`, and the ingest
+//! cursors (`ingest::produce`), so in debug builds every existing test
+//! and property run doubles as an invariant check.
+//!
+//! The ledgers are plain structs, NOT synchronized: each lives under
+//! the lock (or on the thread) that already guards the counters it
+//! shadows, so they add no lock-ordering surface. The loom lane runs
+//! `--release`, which compiles them out — the model checker explores
+//! the protocol, the auditor polices the accounting; CONCURRENCY.md
+//! describes the split.
+
+/// Custody ledger for the work-stealing queue: frames accepted into the
+/// queue must leave it exactly once — popped by a shard or drained at
+/// shutdown — and every popped frame must be reported back as served or
+/// failed before the run closes.
+#[cfg(debug_assertions)]
+#[derive(Debug, Default)]
+pub struct QueueLedger {
+    enqueued: u64,
+    popped: u64,
+    served: u64,
+    failed: u64,
+    drained: u64,
+}
+
+#[cfg(debug_assertions)]
+impl QueueLedger {
+    fn queued(&self) -> u64 {
+        match self.enqueued.checked_sub(self.popped + self.drained) {
+            Some(q) => q,
+            None => panic!(
+                "custody violation: removed more frames than enqueued \
+                 ({} popped + {} drained > {} enqueued)",
+                self.popped, self.drained, self.enqueued
+            ),
+        }
+    }
+
+    fn in_flight(&self) -> u64 {
+        match self.popped.checked_sub(self.served + self.failed) {
+            Some(f) => f,
+            None => panic!(
+                "custody violation: reported more frames than popped \
+                 ({} served + {} failed > {} popped)",
+                self.served, self.failed, self.popped
+            ),
+        }
+    }
+
+    /// Cross-check the ledger's queued count against the structure's
+    /// actual depth (injector + every deque) — catches a frame lost or
+    /// duplicated by a queue edit even when the counters self-balance.
+    pub fn reconcile(&self, depth_now: usize) {
+        assert_eq!(
+            self.queued(),
+            depth_now as u64,
+            "custody violation: ledger says {} queued, queue holds {}",
+            self.queued(),
+            depth_now
+        );
+    }
+
+    /// One frame accepted into the queue (injector or a deque);
+    /// `depth_now` is the structure's depth right after the insert.
+    pub fn enqueue(&mut self, depth_now: usize) {
+        self.enqueued += 1;
+        self.reconcile(depth_now);
+    }
+
+    /// `n` frames handed to a shard in one pop; `depth_now` right after.
+    pub fn pop(&mut self, n: usize, depth_now: usize) {
+        self.popped += n as u64;
+        self.reconcile(depth_now);
+        self.in_flight(); // popped never exceeds enqueued via queued()
+    }
+
+    /// A shard completed `n` popped frames successfully.
+    pub fn serve(&mut self, n: usize) {
+        self.served += n as u64;
+        self.in_flight();
+    }
+
+    /// A shard consumed `n` popped frames but died before serving them.
+    pub fn fail(&mut self, n: usize) {
+        self.failed += n as u64;
+        self.in_flight();
+    }
+
+    /// `n` frames drained at shutdown because no worker remained.
+    pub fn drain(&mut self, n: usize, depth_now: usize) {
+        self.drained += n as u64;
+        self.reconcile(depth_now);
+    }
+
+    /// End of run: nothing queued, nothing in flight, and the terminal
+    /// states sum back to everything accepted.
+    pub fn close_check(&self) {
+        assert_eq!(self.queued(), 0, "custody violation: frames left queued");
+        assert_eq!(
+            self.in_flight(),
+            0,
+            "custody violation: popped frames never reported served/failed"
+        );
+        assert_eq!(
+            self.served + self.failed + self.drained,
+            self.enqueued,
+            "custody violation: {} served + {} failed + {} drained != {} \
+             enqueued",
+            self.served,
+            self.failed,
+            self.drained,
+            self.enqueued
+        );
+    }
+}
+
+/// Custody ledger for one ingest source: every offered frame becomes
+/// delivered, stale, or backpressure-dropped — and the cursor's own
+/// counters must agree with the transitions at the shutdown barrier.
+#[cfg(debug_assertions)]
+#[derive(Debug)]
+pub struct SourceLedger {
+    offered: usize,
+    delivered: usize,
+    stale: usize,
+    backpressure: usize,
+}
+
+#[cfg(debug_assertions)]
+impl SourceLedger {
+    pub fn new(offered: usize) -> SourceLedger {
+        SourceLedger { offered, delivered: 0, stale: 0, backpressure: 0 }
+    }
+
+    fn taken(&self) -> usize {
+        self.delivered + self.stale + self.backpressure
+    }
+
+    fn take_one(&mut self, what: &str) {
+        assert!(
+            self.taken() < self.offered,
+            "custody violation: source {} a frame beyond its {} offered",
+            what,
+            self.offered
+        );
+    }
+
+    pub fn deliver(&mut self) {
+        self.take_one("delivered");
+        self.delivered += 1;
+    }
+
+    pub fn stale(&mut self) {
+        self.take_one("shed (stale)");
+        self.stale += 1;
+    }
+
+    pub fn backpressure(&mut self) {
+        self.take_one("shed (backpressure)");
+        self.backpressure += 1;
+    }
+
+    /// Barrier check: the cursor's counters must match the transition
+    /// ledger exactly, and every offered frame must be accounted.
+    pub fn reconcile(
+        &self,
+        delivered: usize,
+        stale: usize,
+        backpressure: usize,
+    ) {
+        assert!(
+            (delivered, stale, backpressure)
+                == (self.delivered, self.stale, self.backpressure),
+            "custody violation: cursor counted {delivered}/{stale}/\
+             {backpressure} (delivered/stale/backpressure), ledger saw \
+             {}/{}/{}",
+            self.delivered,
+            self.stale,
+            self.backpressure
+        );
+        assert_eq!(
+            self.taken(),
+            self.offered,
+            "custody violation: source retired {} of {} offered frames",
+            self.taken(),
+            self.offered
+        );
+    }
+}
+
+/// Custody ledger for a single-producer feed (`server::feed_frames` and
+/// the round-robin deal loop): offered == delivered + dropped, with the
+/// drop count cross-checked against what the feeder reports upstream.
+#[cfg(debug_assertions)]
+#[derive(Debug)]
+pub struct FeedLedger {
+    offered: usize,
+    delivered: usize,
+    dropped: usize,
+}
+
+#[cfg(debug_assertions)]
+impl FeedLedger {
+    pub fn new(offered: usize) -> FeedLedger {
+        FeedLedger { offered, delivered: 0, dropped: 0 }
+    }
+
+    pub fn deliver(&mut self) {
+        self.delivered += 1;
+        self.bounded();
+    }
+
+    pub fn drop_n(&mut self, n: usize) {
+        self.dropped += n;
+        self.bounded();
+    }
+
+    fn bounded(&self) {
+        assert!(
+            self.delivered + self.dropped <= self.offered,
+            "custody violation: feed retired {} frames of {} offered",
+            self.delivered + self.dropped,
+            self.offered
+        );
+    }
+
+    /// End of feed: every offered frame retired, and the drop count the
+    /// feeder is about to report upstream matches the transitions.
+    pub fn finish(&self, reported_dropped: usize) {
+        assert_eq!(
+            self.delivered + self.dropped,
+            self.offered,
+            "custody violation: feed retired {} of {} offered frames \
+             (mid-feed hangup remainder lost?)",
+            self.delivered + self.dropped,
+            self.offered
+        );
+        assert_eq!(
+            reported_dropped, self.dropped,
+            "custody violation: feeder reports {} dropped, ledger saw {}",
+            reported_dropped, self.dropped
+        );
+    }
+}
+
+// ------------------------------------------------------------ release
+// Zero-sized, inlined-away stubs: the serving path keeps one unsendable
+// code shape in both profiles, and release builds pay nothing.
+
+#[cfg(not(debug_assertions))]
+#[derive(Debug, Default)]
+pub struct QueueLedger;
+
+#[cfg(not(debug_assertions))]
+impl QueueLedger {
+    #[inline(always)]
+    pub fn reconcile(&self, _depth_now: usize) {}
+    #[inline(always)]
+    pub fn enqueue(&mut self, _depth_now: usize) {}
+    #[inline(always)]
+    pub fn pop(&mut self, _n: usize, _depth_now: usize) {}
+    #[inline(always)]
+    pub fn serve(&mut self, _n: usize) {}
+    #[inline(always)]
+    pub fn fail(&mut self, _n: usize) {}
+    #[inline(always)]
+    pub fn drain(&mut self, _n: usize, _depth_now: usize) {}
+    #[inline(always)]
+    pub fn close_check(&self) {}
+}
+
+#[cfg(not(debug_assertions))]
+#[derive(Debug)]
+pub struct SourceLedger;
+
+#[cfg(not(debug_assertions))]
+impl SourceLedger {
+    #[inline(always)]
+    pub fn new(_offered: usize) -> SourceLedger {
+        SourceLedger
+    }
+    #[inline(always)]
+    pub fn deliver(&mut self) {}
+    #[inline(always)]
+    pub fn stale(&mut self) {}
+    #[inline(always)]
+    pub fn backpressure(&mut self) {}
+    #[inline(always)]
+    pub fn reconcile(&self, _d: usize, _s: usize, _b: usize) {}
+}
+
+#[cfg(not(debug_assertions))]
+#[derive(Debug)]
+pub struct FeedLedger;
+
+#[cfg(not(debug_assertions))]
+impl FeedLedger {
+    #[inline(always)]
+    pub fn new(_offered: usize) -> FeedLedger {
+        FeedLedger
+    }
+    #[inline(always)]
+    pub fn deliver(&mut self) {}
+    #[inline(always)]
+    pub fn drop_n(&mut self, _n: usize) {}
+    #[inline(always)]
+    pub fn finish(&self, _reported_dropped: usize) {}
+}
+
+// The teeth tests: the auditor is only worth its wiring if a corrupted
+// transition actually panics. Debug builds only — release compiles the
+// ledgers (and these tests) away.
+#[cfg(all(test, debug_assertions, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn queue_ledger_accepts_a_conserving_run() {
+        let mut l = QueueLedger::default();
+        l.enqueue(1);
+        l.enqueue(2);
+        l.pop(2, 0);
+        l.serve(2);
+        l.enqueue(1);
+        l.pop(1, 0);
+        l.fail(1);
+        l.drain(0, 0);
+        l.close_check();
+    }
+
+    /// The headline teeth test: a deliberately corrupted transition —
+    /// a shard reporting a frame it never popped — must panic.
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn queue_ledger_panics_on_phantom_serve() {
+        let mut l = QueueLedger::default();
+        l.enqueue(1);
+        l.pop(1, 0);
+        l.serve(1);
+        l.serve(1); // corrupt: served twice, popped once
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn queue_ledger_panics_on_lost_frame_at_close() {
+        let mut l = QueueLedger::default();
+        l.enqueue(1);
+        l.pop(1, 0);
+        // corrupt: the popped frame is never reported served or failed
+        l.close_check();
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn queue_ledger_panics_on_depth_mismatch() {
+        let mut l = QueueLedger::default();
+        // corrupt: the structure says two frames are queued after one
+        // enqueue — a duplicated frame in the deques
+        l.enqueue(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn source_ledger_panics_on_overdrawn_source() {
+        let mut l = SourceLedger::new(1);
+        l.deliver();
+        l.deliver(); // corrupt: delivered more than offered
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn feed_ledger_panics_on_lost_hangup_remainder() {
+        let mut l = FeedLedger::new(5);
+        l.deliver();
+        l.deliver();
+        // corrupt: receiver hung up with 3 frames in hand, feeder counts
+        // only the in-hand frame (the exact PR-5 bug class)
+        l.drop_n(1);
+        l.finish(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn feed_ledger_panics_on_misreported_drop_count() {
+        let mut l = FeedLedger::new(2);
+        l.deliver();
+        l.drop_n(1);
+        l.finish(0); // corrupt: feeder under-reports upstream
+    }
+
+    /// Property: random *valid* custody walks never panic; the same walk
+    /// with one random transition corrupted always does. This is the
+    /// auditor's coverage argument — its teeth are verified over the
+    /// transition space, not assumed from one handpicked case.
+    #[test]
+    fn prop_random_walks_pass_and_random_corruptions_panic() {
+        for seed in 0..200u64 {
+            let mut rng = Pcg32::seed(seed);
+            // build a random conserving schedule: each frame's lifecycle
+            // enqueue -> pop -> (serve | fail), stragglers drained
+            let frames = 1 + rng.below(6);
+            let mut plan: Vec<(u8, usize)> = Vec::new(); // (op, n)
+            let mut queued = 0usize;
+            let mut popped = 0usize;
+            for _ in 0..frames {
+                plan.push((0, 1)); // enqueue
+                queued += 1;
+                if rng.below(2) == 0 && queued > 0 {
+                    let n = 1 + rng.below(queued);
+                    plan.push((1, n)); // pop n
+                    queued -= n;
+                    popped += n;
+                }
+                while popped > 0 {
+                    let n = 1 + rng.below(popped);
+                    plan.push((if rng.below(4) == 0 { 3 } else { 2 }, n));
+                    popped -= n;
+                }
+            }
+            plan.push((4, queued)); // drain the leftovers
+
+            let run = |corrupt_at: Option<usize>| {
+                let mut l = QueueLedger::default();
+                let mut depth = 0usize;
+                for (i, &(op, n)) in plan.iter().enumerate() {
+                    // corruption: lie about the depth by one — the
+                    // signature of a lost or duplicated frame
+                    let fudge = usize::from(corrupt_at == Some(i));
+                    match op {
+                        0 => {
+                            depth += 1;
+                            l.enqueue(depth + fudge);
+                        }
+                        1 => {
+                            depth -= n;
+                            l.pop(n, depth + fudge);
+                        }
+                        2 => l.serve(n + fudge),
+                        3 => l.fail(n + fudge),
+                        _ => {
+                            depth -= n;
+                            l.drain(n, depth + fudge);
+                        }
+                    }
+                }
+                l.close_check();
+            };
+
+            // the valid walk must pass...
+            run(None);
+            // ...and corrupting any single transition must panic
+            let at = rng.below(plan.len());
+            let caught =
+                catch_unwind(AssertUnwindSafe(|| run(Some(at)))).is_err();
+            assert!(
+                caught,
+                "seed {seed}: corruption at step {at} of {:?} went undetected",
+                plan
+            );
+        }
+    }
+}

@@ -9,8 +9,12 @@
 //! shared-injector work-stealing scheduler with residency-aware
 //! dispatch and adaptive cross-frame batching, plus the round-robin
 //! baseline; `pipeline` wires offline preparation (affinity → graph →
-//! order → trained weights) into a ready-to-serve executor.
+//! order → trained weights) into a ready-to-serve executor; `audit` is
+//! the debug-build frame-custody auditor backing the conservation
+//! invariant `delivered + dropped == offered` at every transfer point
+//! (CONCURRENCY.md).
 
+pub mod audit;
 pub mod executor;
 pub mod ingest;
 pub mod pipeline;

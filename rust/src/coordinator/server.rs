@@ -10,16 +10,18 @@
 //! front-end would). For multi-core serving over `Send` backends, see
 //! `coordinator::shard`.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::device::Cost;
 use crate::model::Tensor;
 use crate::runtime::Backend;
+use crate::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use crate::sync::thread;
 use crate::util::stats;
 
+use super::audit::FeedLedger;
 use super::executor::BlockExecutor;
 
 /// Ordering + runtime-dependency plan for the task set.
@@ -200,23 +202,33 @@ pub fn feed_frames(
     pace: Option<std::time::Duration>,
 ) -> usize {
     let mut dropped = 0;
+    // debug-build custody ledger: every offered frame must be counted
+    // delivered or dropped, and `finish` cross-checks the return value —
+    // the mid-feed-hangup remainder bug (PR 5) is the exact class this
+    // catches (see `coordinator::audit`)
+    let mut ledger = FeedLedger::new(frames.len());
     let mut it = frames.drain(..);
     while let Some((id, input)) = it.next() {
         match tx.try_send(Frame::new(id, input)) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => dropped += 1,
+            Ok(()) => ledger.deliver(),
+            Err(TrySendError::Full(_)) => {
+                dropped += 1;
+                ledger.drop_n(1);
+            }
             Err(TrySendError::Disconnected(_)) => {
                 // the receiver hung up mid-feed: the frame in hand AND the
                 // whole undelivered remainder are dropped, not vanished —
                 // `frames + dropped == total` must survive a hangup
                 dropped += 1 + it.len();
+                ledger.drop_n(1 + it.len());
                 break;
             }
         }
         if let Some(p) = pace {
-            std::thread::sleep(p);
+            thread::sleep(p);
         }
     }
+    ledger.finish(dropped);
     dropped
 }
 
@@ -230,13 +242,15 @@ pub fn serve<B: Backend>(
     pace: Option<std::time::Duration>,
 ) -> Result<ServeReport> {
     let (tx, rx) = sync_channel::<Frame>(queue_depth.max(1));
-    let producer = std::thread::spawn(move || feed_frames(tx, frames, pace));
+    let producer = thread::spawn(move || feed_frames(tx, frames, pace));
     let t0 = Instant::now();
     let execs_before = exec.layer_execs;
     let skips_before = exec.layer_skips;
     let (results, skipped) = run_executor(exec, plan, rx)?;
     let wall = t0.elapsed().as_secs_f64();
-    let dropped = producer.join().expect("producer panicked");
+    let dropped = producer
+        .join()
+        .map_err(|_| anyhow!("frame producer panicked mid-serve"))?;
     Ok(build_report(
         &results,
         dropped,
@@ -247,7 +261,7 @@ pub fn serve<B: Backend>(
     ))
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::device::Device;
@@ -367,7 +381,7 @@ mod tests {
         // try_send either hands off to the parked consumer or is counted
         // dropped (Full before the hangup, Disconnected after).
         let (tx, rx) = sync_channel::<Frame>(0);
-        let consumer = std::thread::spawn(move || {
+        let consumer = thread::spawn(move || {
             let a = rx.recv().is_ok() as usize;
             let b = rx.recv().is_ok() as usize;
             drop(rx);

@@ -38,9 +38,6 @@
 //! executor); only cross-frame weight residency is per-shard state.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicIsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, TrySendError};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -48,6 +45,11 @@ use anyhow::{anyhow, Result};
 use crate::exec::pool::ThreadPool;
 use crate::model::Tensor;
 use crate::runtime::Backend;
+use crate::sync::atomic::{AtomicIsize, Ordering};
+use crate::sync::mpsc::{channel, sync_channel, TrySendError};
+use crate::sync::{lock_unpoisoned, thread, wait_unpoisoned, Arc, Condvar, Mutex};
+
+use super::audit::{FeedLedger, QueueLedger};
 
 use super::executor::BlockExecutor;
 use super::ingest::{run_ingest, IngestReport, Source};
@@ -212,6 +214,25 @@ impl ShardReport {
         agg
     }
 
+    /// Render `shard_errors` as a per-shard table for the CLI `serve`
+    /// output, or `None` when every shard stayed healthy. The executor
+    /// failures were always *collected* here; surfacing them is the CLI's
+    /// job and this is its one formatting point (tested below so a dead
+    /// shard's error string provably reaches the operator).
+    pub fn shard_error_table(&self) -> Option<String> {
+        if self.shard_errors.is_empty() {
+            return None;
+        }
+        let mut t = String::from(
+            "shard errors (serving continued on survivors):\n  shard  frames  error\n",
+        );
+        for (s, e) in &self.shard_errors {
+            let served = self.frames_per_shard.get(*s).copied().unwrap_or(0);
+            t.push_str(&format!("  {s:>5}  {served:>6}  {e}\n"));
+        }
+        Some(t)
+    }
+
     /// Mean frames per pop across the whole pool (from the histograms).
     pub fn mean_batch(&self) -> f64 {
         let mut frames = 0usize;
@@ -340,7 +361,9 @@ where
             let ingest = run_ingest(sources, producers, &|f| d.offer(f));
             (ingest.dropped(), Some(ingest))
         })?;
-    Ok((report, ingest.expect("ingest feeder always reports")))
+    let ingest = ingest
+        .ok_or_else(|| anyhow!("ingest feeder returned no report"))?;
+    Ok((report, ingest))
 }
 
 // --------------------------------------------------------- round-robin
@@ -377,7 +400,7 @@ where
             while let Ok(frame) = rx.recv() {
                 if let Some((hs, d)) = handicap {
                     if hs == s {
-                        std::thread::sleep(d);
+                        thread::sleep(d);
                     }
                 }
                 match process_frame(&mut ex, &plan, frame) {
@@ -405,19 +428,28 @@ where
 
     let t0 = Instant::now();
     let mut dropped = 0usize;
+    // debug-build custody ledger for the deal loop (`coordinator::audit`)
+    let mut ledger = FeedLedger::new(frames.len());
     for (i, (id, input)) in frames.into_iter().enumerate() {
         match frame_txs[i % n].try_send(Frame::new(id, input)) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => dropped += 1,
+            Ok(()) => ledger.deliver(),
+            Err(TrySendError::Full(_)) => {
+                dropped += 1;
+                ledger.drop_n(1);
+            }
             // a dead shard's queue: the frame is dropped even when live
             // shards had capacity — the round-robin pathology the
             // work-stealing scheduler exists to fix
-            Err(TrySendError::Disconnected(_)) => dropped += 1,
+            Err(TrySendError::Disconnected(_)) => {
+                dropped += 1;
+                ledger.drop_n(1);
+            }
         }
         if let Some(p) = opts.pace {
-            std::thread::sleep(p);
+            thread::sleep(p);
         }
     }
+    ledger.finish(dropped);
     drop(frame_txs); // closes every queue; shard loops drain and exit
 
     collect_outcomes(n, res_rx, dropped, t0)
@@ -431,6 +463,20 @@ struct StealState {
     locals: Vec<VecDeque<Frame>>,
     dead: Vec<bool>,
     closed: bool,
+    /// Debug-build custody ledger (`coordinator::audit`): every frame
+    /// accepted here must leave exactly once — popped then
+    /// served/failed, or drained at shutdown. Zero-sized in release.
+    audit: QueueLedger,
+}
+
+impl StealState {
+    /// Total frames the structure actually holds (injector + deques) —
+    /// what the custody ledger reconciles against at every transition.
+    /// Debug builds only, like the ledger that is its only caller.
+    #[cfg(debug_assertions)]
+    fn depth(&self) -> usize {
+        self.global.len() + self.locals.iter().map(|l| l.len()).sum::<usize>()
+    }
 }
 
 struct StealQueue {
@@ -446,6 +492,7 @@ impl StealQueue {
                 locals: (0..n).map(|_| VecDeque::new()).collect(),
                 dead: vec![false; n],
                 closed: false,
+                audit: QueueLedger::default(),
             }),
             cv: Condvar::new(),
         }
@@ -463,11 +510,16 @@ impl StealQueue {
         queue_depth: usize,
         local_depth: usize,
     ) -> bool {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.st);
         if let Some(p) = preferred {
             if p < st.locals.len() && !st.dead[p] && st.locals[p].len() < local_depth
             {
                 st.locals[p].push_back(frame);
+                #[cfg(debug_assertions)]
+                {
+                    let d = st.depth();
+                    st.audit.enqueue(d);
+                }
                 drop(st);
                 self.cv.notify_all();
                 return true;
@@ -475,6 +527,11 @@ impl StealQueue {
         }
         if st.global.len() < queue_depth {
             st.global.push_back(frame);
+            #[cfg(debug_assertions)]
+            {
+                let d = st.depth();
+                st.audit.enqueue(d);
+            }
             drop(st);
             self.cv.notify_all();
             return true;
@@ -484,21 +541,40 @@ impl StealQueue {
 
     /// No more frames will be pushed; drain-and-exit.
     fn close(&self) {
-        self.st.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.st).closed = true;
         self.cv.notify_all();
     }
 
     /// Shard `s`'s executor failed: flag it and return its queued frames
     /// to the injector front so the survivors pick them up promptly.
     fn mark_dead(&self, s: usize) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.st);
         st.dead[s] = true;
         let orphans: Vec<Frame> = st.locals[s].drain(..).collect();
         for f in orphans.into_iter().rev() {
             st.global.push_front(f);
         }
+        #[cfg(debug_assertions)]
+        {
+            // the spill moves custody between deques, never in or out
+            let d = st.depth();
+            st.audit.reconcile(d);
+        }
         drop(st);
         self.cv.notify_all();
+    }
+
+    /// A shard finished serving `n` popped frames (custody ledger only;
+    /// free in release builds).
+    fn note_served(&self, _n: usize) {
+        #[cfg(debug_assertions)]
+        lock_unpoisoned(&self.st).audit.serve(_n);
+    }
+
+    /// A shard consumed `n` popped frames but died before serving them.
+    fn note_failed(&self, _n: usize) {
+        #[cfg(debug_assertions)]
+        lock_unpoisoned(&self.st).audit.fail(_n);
     }
 
     /// Pop up to `max` frames for shard `me`: own deque first, then the
@@ -508,17 +584,20 @@ impl StealQueue {
     /// + own deque) right after the pop — the load signal the adaptive
     /// [`BatchPolicy`] feeds on.
     ///
-    /// Waiter-liveness audit: every transition that can make this loop's
-    /// exit condition true notifies — `push` (work arrived), `mark_dead`
-    /// (a sibling's deque spilled into the injector), `close` (drain and
+    /// Waiter-liveness: every transition that can make this loop's exit
+    /// condition true notifies — `push` (work arrived), `mark_dead` (a
+    /// sibling's deque spilled into the injector), `close` (drain and
     /// exit). `close` additionally runs from a drop guard in the
     /// scheduler ([`CloseOnDrop`]) so a feeder that panics before
-    /// closing cannot strand parked waiters, and the wait below carries
-    /// a timeout as defense in depth: a missed wakeup degrades into a
-    /// periodic recheck instead of a hang.
+    /// closing cannot strand parked waiters. The wait below is untimed:
+    /// PR 5 carried a 50 ms `wait_timeout` as defense in depth against a
+    /// lost wakeup, and the loom suite (`loom_tests`, `./ci.sh --loom`)
+    /// now explores every interleaving of push/steal/mark_dead/close
+    /// against a parked waiter — the timeout was proven removable, not
+    /// assumed (CONCURRENCY.md §The condvar-timeout verdict).
     fn pop_batch(&self, me: usize, max: usize) -> Option<(Vec<Frame>, usize)> {
         let max = max.max(1);
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.st);
         loop {
             let mut batch = Vec::new();
             while batch.len() < max {
@@ -546,29 +625,44 @@ impl StealQueue {
                 }
             }
             if !batch.is_empty() {
+                #[cfg(debug_assertions)]
+                {
+                    let d = st.depth();
+                    st.audit.pop(batch.len(), d);
+                }
                 let backlog = st.global.len() + st.locals[me].len();
                 return Some((batch, backlog));
             }
             if st.closed {
                 return None;
             }
-            let (guard, _timed_out) = self
-                .cv
-                .wait_timeout(st, Duration::from_millis(50))
-                .unwrap();
-            st = guard;
+            // loom-verified: loom_steal_queue_wake_and_close,
+            // loom_close_on_drop_releases_parked_worker,
+            // loom_mark_dead_spills_to_parked_sibling,
+            // loom_worker_death_conserves_and_releases_sibling — every
+            // wake source mutates under `st` before notifying, so this
+            // untimed wait cannot miss a wakeup
+            st = wait_unpoisoned(&self.cv, st);
         }
     }
 
     /// Frames nobody will ever pop (every worker exited early). Counted
     /// as dropped so frame conservation holds even in total failure.
+    /// This is also the custody ledger's close: after the drain, nothing
+    /// may remain queued or in flight, and every frame ever accepted
+    /// must be served, failed, or drained — checked in debug builds.
     fn drain_remaining(&self) -> usize {
-        let mut st = self.st.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.st);
         let mut n = st.global.len();
         st.global.clear();
         for l in st.locals.iter_mut() {
             n += l.len();
             l.clear();
+        }
+        #[cfg(debug_assertions)]
+        {
+            st.audit.drain(n, 0);
+            st.audit.close_check();
         }
         n
     }
@@ -666,7 +760,7 @@ where
                     dropped += 1;
                 }
                 if let Some(p) = pace {
-                    std::thread::sleep(p);
+                    thread::sleep(p);
                 }
             }
             (dropped, None)
@@ -745,13 +839,18 @@ where
                 let served_at = Instant::now();
                 if let Some((hs, d)) = handicap {
                     if hs == s {
-                        std::thread::sleep(d * popped.len() as u32);
+                        thread::sleep(d * popped.len() as u32);
                     }
                 }
                 let m = popped.len();
                 let step: Result<()> = (|| {
                     if m == 1 {
-                        let frame = popped.into_iter().next().unwrap();
+                        let Some(frame) = popped.into_iter().next() else {
+                            // pop_batch never returns an empty batch; if
+                            // it ever did, treat it as a served no-op
+                            // rather than panicking the shard
+                            return Ok(());
+                        };
                         let (r, sk) = process_frame(&mut ex, &plan, frame)?;
                         out.results.push(r);
                         out.tasks_skipped += sk;
@@ -788,6 +887,7 @@ where
                 })();
                 match step {
                     Ok(()) => {
+                        queue.note_served(m);
                         board.publish(ex.resident());
                         out.batch_hist[m - 1] += 1;
                         policy.observe(
@@ -799,6 +899,7 @@ where
                     Err(e) => {
                         // this shard is broken: surface the error, give
                         // its queued frames back, let the others serve
+                        queue.note_failed(m);
                         out.error = Some(format!("{e:#}"));
                         out.failed += m;
                         queue.mark_dead(s);
@@ -843,7 +944,7 @@ where
 
 fn collect_outcomes(
     n: usize,
-    res_rx: std::sync::mpsc::Receiver<ShardOutcome>,
+    res_rx: crate::sync::mpsc::Receiver<ShardOutcome>,
     mut dropped: usize,
     t0: Instant,
 ) -> Result<ShardReport> {
@@ -884,7 +985,7 @@ fn collect_outcomes(
     })
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::device::Device;
@@ -1139,6 +1240,56 @@ mod tests {
         }
     }
 
+    /// The CLI-surfacing satellite, made deterministic with a total
+    /// outage on a single shard: the executor's error string must reach
+    /// `shard_errors` AND the rendered `shard_error_table` the `serve`
+    /// command prints — the report was populated but never surfaced
+    /// before this PR.
+    #[test]
+    fn dead_shard_error_string_reaches_report_and_table() {
+        let make = |_s: usize| -> Result<BlockExecutor<FailingBackend>> {
+            let template = make_executor(0)?;
+            Ok(BlockExecutor::new(
+                FailingBackend {
+                    inner: ReferenceBackend::new(),
+                    fail: true, // every shard: the table is guaranteed
+                },
+                Device::msp430(),
+                template.arch.clone(),
+                template.graph.clone(),
+                template.ncls.clone(),
+                template.store.clone(),
+            ))
+        };
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let opts = ShardOpts { queue_depth: 64, ..ShardOpts::default() };
+        let report =
+            serve_sharded_opts(make, 2, &plan, frames(6), &opts).unwrap();
+        assert_eq!(report.shard_errors.len(), 2);
+        for (s, e) in &report.shard_errors {
+            assert!(*s < 2);
+            assert!(
+                e.contains("injected shard fault"),
+                "shard {s} error lost its cause: {e}"
+            );
+        }
+        let table = report
+            .shard_error_table()
+            .expect("errors present, table must render");
+        assert!(table.contains("shard errors"));
+        assert!(table.contains("injected shard fault"));
+        for s in 0..2 {
+            assert!(table.contains(&format!("  {s:>5}  ")), "row for shard {s}");
+        }
+
+        // and the healthy case renders nothing
+        let ok =
+            serve_sharded_opts(make_executor, 2, &plan, frames(6), &opts)
+                .unwrap();
+        assert!(ok.shard_errors.is_empty());
+        assert!(ok.shard_error_table().is_none());
+    }
+
     /// The skewed-workload acceptance gate: one shard paced 10x slower.
     /// Work stealing must drop strictly fewer frames than round-robin at
     /// equal queue depth, because the straggler's share is stolen by the
@@ -1267,17 +1418,18 @@ mod tests {
     fn parked_waiter_survives_sibling_death_and_exits_on_close() {
         let queue = Arc::new(StealQueue::new(2));
         let q = Arc::clone(&queue);
-        let waiter = std::thread::spawn(move || {
+        let waiter = thread::spawn(move || {
             let mut popped = 0usize;
             while let Some((batch, _backlog)) = q.pop_batch(1, 4) {
                 popped += batch.len();
             }
+            q.note_served(popped); // keep the debug custody ledger honest
             popped
         });
         // give the waiter time to park, then kill its sibling — whose
         // deque holds a frame that must spill to the injector and reach
         // the parked waiter
-        std::thread::sleep(Duration::from_millis(20));
+        thread::sleep(Duration::from_millis(20));
         let fr = frames(2);
         let mut it = fr.into_iter();
         let (id0, x0) = it.next().unwrap();
@@ -1287,10 +1439,11 @@ mod tests {
         // a frame offered after the death goes to the injector (dead
         // shards take no preferred frames)
         assert!(queue.push(Frame::new(id1, x1), Some(0), 8, 2));
-        std::thread::sleep(Duration::from_millis(20));
+        thread::sleep(Duration::from_millis(20));
         queue.close();
         let popped = waiter.join().expect("parked waiter stranded");
         assert_eq!(popped, 2, "spilled + injected frames reach the waiter");
+        assert_eq!(queue.drain_remaining(), 0); // ledger close_check runs
     }
 
     /// Serve-level variant: one shard is poisoned, the feed is slow
@@ -1547,5 +1700,163 @@ mod tests {
                 rng.f64() * 0.01,
             );
         }
+    }
+}
+
+/// Exhaustive model checks of the steal queue's wake/close/custody
+/// protocols (`./ci.sh --loom`; `RUSTFLAGS="--cfg loom" cargo test
+/// --release --lib loom_`). These are the schedules stress tests only
+/// sample: loom interleaves every execution (bounded at 3 preemptions)
+/// and a lost wakeup surfaces as a hung model, which is precisely the
+/// evidence that let `pop_batch` drop its 50 ms timeout — see the
+/// `loom-verified:` annotation there and CONCURRENCY.md.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    fn tiny(id: u64) -> Frame {
+        Frame::new(id, Tensor::new(vec![1, 1, 1, 1], vec![0.0]))
+    }
+
+    fn model() -> loom::model::Builder {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(3);
+        b
+    }
+
+    /// Protocol 1 — wake on push racing close: a waiter parked on the
+    /// empty queue must see a frame pushed concurrently with `close`
+    /// under EVERY interleaving (push-then-close, close-then-push,
+    /// park-before-either). Conservation: exactly one frame is popped,
+    /// none drained.
+    #[test]
+    fn loom_steal_queue_wake_and_close() {
+        model().check(|| {
+            let queue = Arc::new(StealQueue::new(1));
+            let q = Arc::clone(&queue);
+            let waiter = thread::spawn(move || {
+                let mut got = 0usize;
+                while let Some((batch, _)) = q.pop_batch(0, 2) {
+                    got += batch.len();
+                    q.note_served(batch.len());
+                }
+                got
+            });
+            assert!(queue.push(tiny(0), None, 4, 1));
+            queue.close();
+            let got = waiter.join().unwrap();
+            assert_eq!(got, 1, "pushed frame lost across close");
+            assert_eq!(queue.drain_remaining(), 0);
+        });
+    }
+
+    /// Protocol 2 — the `CloseOnDrop` guard: the feeder "unwinds" (its
+    /// guard drops without an explicit close) while a worker is parked.
+    /// The drop-path close must release the waiter in every schedule —
+    /// a miss deadlocks the join, which loom reports as a hang.
+    #[test]
+    fn loom_close_on_drop_releases_parked_worker() {
+        model().check(|| {
+            let queue = Arc::new(StealQueue::new(1));
+            let q = Arc::clone(&queue);
+            let waiter = thread::spawn(move || {
+                let mut got = 0usize;
+                while let Some((batch, _)) = q.pop_batch(0, 2) {
+                    got += batch.len();
+                    q.note_served(batch.len());
+                }
+                got
+            });
+            let q2 = Arc::clone(&queue);
+            let feeder = thread::spawn(move || {
+                let closer = CloseOnDrop(q2.as_ref());
+                q2.push(tiny(0), None, 4, 1);
+                // no explicit close(): the guard's Drop is the only
+                // close, exactly the feeder-panic unwind path
+                drop(closer);
+            });
+            feeder.join().unwrap();
+            let got = waiter.join().unwrap();
+            assert_eq!(got, 1);
+            assert_eq!(queue.drain_remaining(), 0);
+        });
+    }
+
+    /// Protocol 3 — dead-shard absorption: shard 0's deque holds a
+    /// frame when shard 0 dies; the spill to the injector must wake and
+    /// reach shard 1 even if shard 1 parked before `mark_dead` ran.
+    #[test]
+    fn loom_mark_dead_spills_to_parked_sibling() {
+        model().check(|| {
+            let queue = Arc::new(StealQueue::new(2));
+            assert!(queue.push(tiny(0), Some(0), 4, 2));
+            let q = Arc::clone(&queue);
+            let sibling = thread::spawn(move || {
+                let mut got = 0usize;
+                // shard 1 never looks at shard 0's deque until it is
+                // otherwise idle — the spill is what hands the frame over
+                while let Some((batch, _)) = q.pop_batch(1, 2) {
+                    got += batch.len();
+                    q.note_served(batch.len());
+                }
+                got
+            });
+            let q2 = Arc::clone(&queue);
+            let killer = thread::spawn(move || {
+                q2.mark_dead(0);
+                q2.close();
+            });
+            killer.join().unwrap();
+            let got = sibling.join().unwrap();
+            assert_eq!(got, 1, "dead shard's frame stranded");
+            assert_eq!(queue.drain_remaining(), 0);
+        });
+    }
+
+    /// Protocol 4 — last-live-shard death with a parked sibling:
+    /// worker 0 pops a frame, fails it, marks itself dead while worker 1
+    /// is parked and the feeder closes concurrently. Custody must
+    /// balance (served + failed + drained == enqueued) and both workers
+    /// must exit in every schedule.
+    #[test]
+    fn loom_worker_death_conserves_and_releases_sibling() {
+        model().check(|| {
+            let queue = Arc::new(StealQueue::new(2));
+            assert!(queue.push(tiny(0), Some(0), 4, 2));
+            let q = Arc::clone(&queue);
+            let dying = thread::spawn(move || {
+                let mut failed = 0usize;
+                // the sibling may steal the frame first; a closed empty
+                // queue then returns None and this worker just exits
+                if let Some((batch, _)) = q.pop_batch(0, 1) {
+                    // executor failure: consumed but never served
+                    failed = batch.len();
+                    q.note_failed(batch.len());
+                    q.mark_dead(0);
+                }
+                failed
+            });
+            let q2 = Arc::clone(&queue);
+            let sibling = thread::spawn(move || {
+                let mut got = 0usize;
+                while let Some((batch, _)) = q2.pop_batch(1, 1) {
+                    got += batch.len();
+                    q2.note_served(batch.len());
+                }
+                got
+            });
+            // close before joining: whichever worker loses the pop race
+            // must still be released (close is drain-then-exit, so the
+            // already-queued frame is never abandoned by closing early)
+            queue.close();
+            let failed = dying.join().unwrap();
+            let got = sibling.join().unwrap();
+            let drained = queue.drain_remaining();
+            assert_eq!(
+                got + failed + drained,
+                1,
+                "custody imbalance: served {got} failed {failed} drained {drained}"
+            );
+        });
     }
 }

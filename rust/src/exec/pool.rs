@@ -2,12 +2,18 @@
 //! condvar. Deliberately simple: the coordinator's workloads are coarse
 //! (one job = one inference or one graph scored), so queue contention is
 //! negligible; see EXPERIMENTS.md §Perf for measurements.
+//!
+//! Concurrency primitives come from the `crate::sync` facade, so the
+//! shutdown protocol (shutdown flag + notify_all + join) is exhaustively
+//! model-checked by `loom_tests` below (`./ci.sh --loom`).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::{
+    lock_unpoisoned, thread, wait_unpoisoned, Arc, Condvar, Mutex,
+};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -19,7 +25,7 @@ struct Shared {
 
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
@@ -33,10 +39,13 @@ impl ThreadPool {
         let workers = (0..n)
             .map(|i| {
                 let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("antler-worker-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn worker")
+                // lint:allow(panic) — OS thread-spawn failure at pool
+                // construction is unrecoverable by design; every caller
+                // would abort anyway
+                thread::spawn_named(format!("antler-worker-{i}"), move || {
+                    worker_loop(sh)
+                })
+                .expect("spawn worker")
             })
             .collect();
         ThreadPool { shared, workers }
@@ -47,7 +56,7 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = lock_unpoisoned(&self.shared.queue);
         q.push_back(Box::new(f));
         drop(q);
         self.shared.cv.notify_one();
@@ -55,7 +64,7 @@ impl ThreadPool {
 
     /// Number of jobs waiting (not including running ones).
     pub fn backlog(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        lock_unpoisoned(&self.shared.queue).len()
     }
 }
 
@@ -72,7 +81,7 @@ impl Drop for ThreadPool {
 fn worker_loop(sh: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = sh.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&sh.queue);
             loop {
                 if let Some(j) = q.pop_front() {
                     break j;
@@ -80,7 +89,10 @@ fn worker_loop(sh: Arc<Shared>) {
                 if sh.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                q = sh.cv.wait(q).unwrap();
+                // loom-verified: loom_pool_shutdown_joins_parked_workers —
+                // execute() and Drop both mutate under this mutex before
+                // notifying, so a parked worker cannot miss either wake
+                q = wait_unpoisoned(&sh.cv, q);
             }
         };
         // contain a panicking job: letting it unwind through here would
@@ -101,7 +113,7 @@ pub fn try_parallel_map<T, R, F>(
     threads: usize,
     items: Vec<T>,
     f: F,
-) -> Vec<std::thread::Result<R>>
+) -> Vec<thread::Result<R>>
 where
     T: Send + 'static,
     R: Send + 'static,
@@ -115,10 +127,10 @@ where
     }
     let f = Arc::new(f);
     let n = items.len();
-    let slots: Arc<Mutex<Vec<Option<std::thread::Result<R>>>>> =
+    let slots: Arc<Mutex<Vec<Option<thread::Result<R>>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
     let pool = ThreadPool::new(threads.min(n));
-    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    let (tx, rx) = crate::sync::mpsc::channel::<()>();
     for (i, item) in items.into_iter().enumerate() {
         let f = Arc::clone(&f);
         let slots = Arc::clone(&slots);
@@ -129,22 +141,31 @@ where
             // panicked item (the old code hung its misleading
             // `expect("worker panicked")` on exactly that)
             let r = catch_unwind(AssertUnwindSafe(|| f(item)));
-            slots.lock().unwrap()[i] = Some(r);
+            lock_unpoisoned(&slots)[i] = Some(r);
             let _ = tx.send(());
         });
     }
     drop(tx);
     for _ in 0..n {
-        rx.recv().expect("parallel_map worker vanished");
+        // a recv error means every worker vanished before signalling —
+        // impossible while worker_loop contains panics, but degrade to
+        // per-slot surfacing below rather than panicking the caller
+        if rx.recv().is_err() {
+            break;
+        }
     }
     // every slot was written before its signal was sent, so after n
     // signals the results are complete. Take them under the lock —
     // Arc::try_unwrap would race with the last worker's Arc clone, which
     // drops only after its send, and panic spuriously.
-    let results = std::mem::take(&mut *slots.lock().unwrap());
+    let results = std::mem::take(&mut *lock_unpoisoned(&slots));
     results
         .into_iter()
-        .map(|o| o.expect("missing result"))
+        .map(|o| match o {
+            Some(r) => r,
+            None => Err(Box::new("pool worker vanished before recording")
+                as Box<dyn std::any::Any + Send>),
+        })
         .collect()
 }
 
@@ -166,16 +187,16 @@ where
         .collect()
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use crate::sync::atomic::AtomicUsize;
 
     #[test]
     fn pool_runs_all_jobs() {
         let pool = ThreadPool::new(4);
         let counter = Arc::new(AtomicUsize::new(0));
-        let (tx, rx) = std::sync::mpsc::channel();
+        let (tx, rx) = crate::sync::mpsc::channel();
         for _ in 0..100 {
             let c = Arc::clone(&counter);
             let tx = tx.clone();
@@ -215,7 +236,7 @@ mod tests {
         // a single worker: the panicking job and the follow-up MUST run
         // on the same thread, proving containment (not a respawn)
         let pool = ThreadPool::new(1);
-        let (tx, rx) = std::sync::mpsc::channel();
+        let (tx, rx) = crate::sync::mpsc::channel();
         pool.execute(|| panic!("contained"));
         pool.execute(move || {
             let _ = tx.send(42);
@@ -270,5 +291,59 @@ mod tests {
         });
         assert!(out[0].is_err());
         assert_eq!(*out[1].as_ref().unwrap(), 1);
+    }
+}
+
+/// Exhaustive model check of the pool shutdown protocol (`./ci.sh
+/// --loom`): a worker parked in `wait_unpoisoned` must see both wake
+/// reasons — a job arriving and shutdown — under EVERY interleaving of
+/// `execute`, the worker's own pop/park, and `Drop`. A lost wakeup here
+/// deadlocks `Drop`'s join, which loom reports as a hung model.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn loom_pool_shutdown_joins_parked_workers() {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(3);
+        b.check(|| {
+            let pool = ThreadPool::new(2);
+            let ran = Arc::new(AtomicUsize::new(0));
+            let r = Arc::clone(&ran);
+            pool.execute(move || {
+                r.fetch_add(1, Ordering::SeqCst);
+            });
+            // Drop races shutdown against workers that may be parked
+            // pre-notify, mid-pop, or still spawning
+            drop(pool);
+            assert_eq!(ran.load(Ordering::SeqCst), 1, "job lost at shutdown");
+        });
+    }
+
+    #[test]
+    fn loom_pool_executes_from_two_submitters() {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(2);
+        b.check(|| {
+            let pool = ThreadPool::new(1);
+            let ran = Arc::new(AtomicUsize::new(0));
+            let (r1, r2) = (Arc::clone(&ran), Arc::clone(&ran));
+            let pool = Arc::new(pool);
+            let p2 = Arc::clone(&pool);
+            let submitter = thread::spawn(move || {
+                p2.execute(move || {
+                    r2.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+            pool.execute(move || {
+                r1.fetch_add(1, Ordering::SeqCst);
+            });
+            submitter.join().unwrap();
+            // dropping the last Arc joins the worker after both jobs
+            drop(pool);
+            assert_eq!(ran.load(Ordering::SeqCst), 2);
+        });
     }
 }

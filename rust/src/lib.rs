@@ -18,6 +18,7 @@ pub mod memory;
 pub mod model;
 pub mod ordering;
 pub mod runtime;
+pub mod sync;
 pub mod taskgraph;
 pub mod tsplib;
 pub mod testkit;

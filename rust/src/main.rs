@@ -308,8 +308,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 sr.mean_batch()
             );
         }
-        for (s, e) in &sr.shard_errors {
-            println!("shard {s} FAILED mid-stream: {e}");
+        if let Some(table) = sr.shard_error_table() {
+            print!("{table}");
         }
         sr.aggregate
     } else {

@@ -158,7 +158,7 @@ impl<B: Backend + ?Sized> Backend for std::rc::Rc<B> {
     forward_backend_impl!();
 }
 
-impl<B: Backend + ?Sized> Backend for std::sync::Arc<B> {
+impl<B: Backend + ?Sized> Backend for crate::sync::Arc<B> {
     forward_backend_impl!();
 }
 
@@ -245,7 +245,7 @@ mod tests {
         assert_eq!(takes_backend(boxed.as_ref()), "reference");
         let rc = std::rc::Rc::new(ReferenceBackend::new());
         assert_eq!(takes_backend(rc), "reference");
-        let arc = std::sync::Arc::new(ReferenceBackend::new());
+        let arc = crate::sync::Arc::new(ReferenceBackend::new());
         assert_eq!(takes_backend(arc), "reference");
     }
 }

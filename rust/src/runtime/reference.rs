@@ -19,7 +19,8 @@
 //! (`coordinator::shard`, `--batch`) builds on that guarantee.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, bail, Result};
 

@@ -1,0 +1,157 @@
+//! Sync facade: the ONE place the crate touches `std::sync` /
+//! `std::thread` primitives. Normal builds re-export std; under
+//! `--cfg loom` (the model-checking lane, `./ci.sh --loom`) the same
+//! names resolve to [`loom`](https://docs.rs/loom) equivalents, so the
+//! exact production protocols — the steal queue's wake/close, the
+//! `CloseOnDrop` guard, dead-shard absorption, the ingest shutdown
+//! barrier, thread-pool shutdown — are *exhaustively* interleaved by
+//! the `loom_*` tests instead of sampled by stress tests.
+//!
+//! The custom lint (`tools/lint.sh`, run by `./ci.sh`) bans raw
+//! `std::sync`/`std::thread` everywhere else in `src/`, so new
+//! concurrency cannot silently bypass the model checker.
+//!
+//! Deliberate scope limits, so the facade stays honest:
+//!
+//! * **`mpsc` is re-exported from std even under loom** (loom has no
+//!   channel model). Channels are used for result *collection* (every
+//!   sender is dropped before the receiver is drained — plain
+//!   join-style hand-off) and for the round-robin baseline's per-shard
+//!   queues; the load-bearing serving protocols (steal queue, ingest
+//!   barrier, pool shutdown) are mutex+condvar+atomics and ARE
+//!   loom-modeled.
+//! * **`thread::scope` is re-exported from std even under loom** (loom
+//!   models only `'static` spawns). The ingest barrier's loom test
+//!   (`ingest::loom_tests`) therefore drives the real `produce()` loop
+//!   from plain loom spawns and re-asserts the barrier's conservation
+//!   contract after joining — same protocol, modeled spawn.
+//! * Under loom, `thread::sleep` becomes `loom::thread::yield_now()`:
+//!   loom has no clock, and every sleep in the serving path is a pacing
+//!   knob, never a correctness mechanism (that is exactly what the loom
+//!   suite proves — see CONCURRENCY.md).
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Atomics: std in normal builds, loom's modeled atomics under
+/// `--cfg loom` (loom explores the orderings, so a `Relaxed` that
+/// needed to be `Acquire` fails the model, not production).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicIsize, AtomicU64, AtomicUsize, Ordering,
+    };
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{
+        AtomicBool, AtomicIsize, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+/// Channels are std in every build — see the module docs for why they
+/// are out of the loom model's scope.
+pub mod mpsc {
+    pub use std::sync::mpsc::*;
+}
+
+/// Threads: std spawn/sleep/scope normally; loom's modeled spawn under
+/// `--cfg loom` (scope and sleep keep std/no-op semantics — module docs).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{
+        scope, sleep, spawn, yield_now, JoinHandle, Result, Scope,
+        ScopedJoinHandle,
+    };
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+    #[cfg(loom)]
+    pub use std::thread::{scope, Result, Scope, ScopedJoinHandle};
+
+    /// loom has no clock: a sleep is modeled as a yield (sleeps in this
+    /// crate pace load, they are never relied on for correctness).
+    #[cfg(loom)]
+    pub fn sleep(_d: std::time::Duration) {
+        loom::thread::yield_now();
+    }
+
+    /// Spawn a named worker thread (loom ignores the name — its
+    /// executions are identified by schedule, not thread name).
+    #[cfg(not(loom))]
+    pub fn spawn_named<F, T>(name: String, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new().name(name).spawn(f)
+    }
+
+    #[cfg(loom)]
+    pub fn spawn_named<F, T>(
+        _name: String,
+        f: F,
+    ) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Ok(spawn(f))
+    }
+}
+
+/// Lock, recovering from poisoning. The serving path's locks guard
+/// plain counters and queues whose invariants are (re-)checked by the
+/// `coordinator::audit` ledgers and the conservation asserts, so a
+/// sibling's panic must not cascade into every thread that shares the
+/// mutex — the pool already contains panicking jobs (`exec::pool`), and
+/// a poisoned-lock unwrap here would undo that containment. This is
+/// also the hot path's single sanctioned alternative to `.unwrap()`
+/// (which `tools/lint.sh` bans there).
+pub fn lock_unpoisoned<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar wait, recovering from poisoning (rationale as
+/// [`lock_unpoisoned`]). Call sites must carry a `loom-verified:`
+/// annotation naming the loom test that proves their wake protocol
+/// lost-wakeup-free — `tools/lint.sh` enforces the annotation, and
+/// CONCURRENCY.md records each verdict.
+pub fn wait_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_unpoisoned_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        // poison the mutex by panicking while holding it
+        let _ = thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn spawn_named_names_the_thread() {
+        let h = thread::spawn_named("antler-test-thread".into(), || {
+            std::thread::current().name().map(str::to_string)
+        })
+        .unwrap();
+        assert_eq!(h.join().unwrap().as_deref(), Some("antler-test-thread"));
+    }
+}
