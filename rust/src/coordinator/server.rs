@@ -19,7 +19,6 @@ use crate::model::Tensor;
 use crate::runtime::Backend;
 use crate::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use crate::sync::thread;
-use std::sync::Mutex as RawMutex; // seeded violation: bypasses the loom facade
 use crate::util::stats;
 
 use super::audit::FeedLedger;
