@@ -47,6 +47,26 @@ cargo build --release
 # reference backend — engine tests cannot skip
 cargo test -q
 
+# the two-tier weight-memory battery, invoked BY NAME so a rename or an
+# accidental #[ignore] can never silently drop the parity gate: the
+# eviction-policy unit suite, the executor/serve/shard parity tests, and
+# the property test that pins tiered serving to the flat baseline at
+# every capacity. cargo exits 0 on a filter that matches nothing, so the
+# gate also demands that at least one test actually ran.
+echo "== weight-tier gate: parity + eviction suites (named) =="
+tier_gate() {
+    local log
+    log=$(cargo test -q "$@" 2>&1) || { echo "$log"; exit 1; }
+    if ! echo "$log" | grep -qE '^test result: ok\. [1-9]'; then
+        echo "$log"
+        echo "weight-tier gate FAILED: no tests matched '$*'"
+        exit 1
+    fi
+}
+tier_gate --lib memory::tier::
+tier_gate --lib tiered_
+tier_gate --test props prop_tiered_serving_matches_flat_baseline
+
 # benches are harness=false binaries that cargo test does not compile;
 # without this they rot silently
 echo "== benches compile: cargo bench --no-run =="

@@ -15,6 +15,7 @@ use antler::coordinator::{
     BlockExecutor, ServePlan, ShardOpts, Source,
 };
 use antler::device::Device;
+use antler::memory::tier::TierConfig;
 use antler::model::Tensor;
 use antler::runtime::{backend_from_env, Backend, ReferenceBackend};
 use antler::taskgraph::{Partition, TaskGraph};
@@ -220,6 +221,7 @@ fn main() {
         local_depth: 1,
         pace: Some(Duration::from_micros(400)),
         handicap: Some((0, Duration::from_millis(4))),
+        tier: None,
     };
     let total = 60;
     let skew_frames: Vec<(u64, Tensor)> = (0..total as u64)
@@ -246,6 +248,62 @@ fn main() {
         "skewed 3-shard serve, {total} frames, straggler 10x: round-robin \
          dropped {} | work-stealing dropped {}",
         rr.aggregate.dropped, ws.aggregate.dropped
+    );
+
+    // ---- two-tier weight memory: cold-start load stall, prefetch on vs
+    // off. The fast tier is capped below the graph's total weight
+    // footprint so every round must move bytes; prefetch overlaps those
+    // loads with the preceding segments' compute while the demand-only
+    // run pays every load as a serialized stall. The gap is reported in
+    // *simulated* device seconds (the cost model, not the host clock),
+    // so the numbers are deterministic run to run. Paced feed = skewed
+    // arrival: batch sizes vary, so the prefetcher sees a live backlog.
+    let footprint = graph.model_bytes(&arch, &ncls);
+    let tier_cap = footprint / 2;
+    let tier_frames: Vec<(u64, Tensor)> = (0..24u64)
+        .map(|i| (i, trunk_frames[(i % 8) as usize].clone()))
+        .collect();
+    let mut tier_stalls = Vec::new();
+    for prefetch in [false, true] {
+        let opts = ShardOpts {
+            queue_depth: 32,
+            batch: 8,
+            pace: Some(Duration::from_micros(200)),
+            tier: Some(TierConfig::for_device(
+                &Device::msp430(),
+                tier_cap,
+                prefetch,
+            )),
+            ..ShardOpts::default()
+        };
+        let sr = serve_sharded_opts(
+            make_shard.clone(),
+            1,
+            &plan,
+            tier_frames.clone(),
+            &opts,
+        )
+        .unwrap();
+        let tc = sr.tier.expect("tier-enabled serve must report counters");
+        println!(
+            "tier cold-start ({} KB fast tier of {} KB footprint), prefetch \
+             {}: stall {:.3} ms, {} hits / {} misses ({} prefetch hits), \
+             {} evictions, {:.1} KB loaded",
+            tier_cap / 1024,
+            footprint / 1024,
+            if prefetch { "on" } else { "off" },
+            tc.stall_s * 1e3,
+            tc.hits,
+            tc.misses,
+            tc.prefetch_hits,
+            tc.evictions,
+            tc.bytes_loaded as f64 / 1024.0
+        );
+        tier_stalls.push(tc.stall_s);
+    }
+    println!(
+        "tier prefetch gain: {:.2}x less simulated load stall than demand-only",
+        tier_stalls[0] / tier_stalls[1].max(1e-12)
     );
 
     // ---- the ingest-bound scenario: 4 fast synthetic sources (one frame

@@ -257,6 +257,116 @@ impl FeedLedger {
     }
 }
 
+/// Custody ledger for the fast weight tier (`memory::tier`): every
+/// slow-tier load issued — prefetch, demand, or stream-through — must
+/// be retired exactly once, as completed (data arrived) or cancelled
+/// (in-flight entry evicted), and insertions minus evictions must
+/// always equal the tier's resident count. The tier calls `reconcile`
+/// after every transition, so a single corrupted step panics at the
+/// step, not at close.
+#[cfg(debug_assertions)]
+#[derive(Debug, Default)]
+pub struct TierLedger {
+    issued: u64,
+    completed: u64,
+    cancelled: u64,
+    inserted: u64,
+    evicted: u64,
+}
+
+#[cfg(debug_assertions)]
+impl TierLedger {
+    pub fn new() -> TierLedger {
+        TierLedger::default()
+    }
+
+    fn in_flight(&self) -> u64 {
+        match self.issued.checked_sub(self.completed + self.cancelled) {
+            Some(f) => f,
+            None => panic!(
+                "custody violation: tier retired more loads than issued \
+                 ({} completed + {} cancelled > {} issued)",
+                self.completed, self.cancelled, self.issued
+            ),
+        }
+    }
+
+    fn resident(&self) -> u64 {
+        match self.inserted.checked_sub(self.evicted) {
+            Some(r) => r,
+            None => panic!(
+                "custody violation: tier evicted more blocks than inserted \
+                 ({} evicted > {} inserted)",
+                self.evicted, self.inserted
+            ),
+        }
+    }
+
+    /// A slow-tier load issued; `cached` means the block got a fast-tier
+    /// entry (prefetch or demand fill) rather than streaming through.
+    pub fn issue(&mut self, cached: bool) {
+        self.issued += 1;
+        if cached {
+            self.inserted += 1;
+        }
+        self.in_flight();
+    }
+
+    /// An issued load's data arrived (settled entry or stream finished).
+    pub fn complete(&mut self) {
+        self.completed += 1;
+        self.in_flight();
+    }
+
+    /// An in-flight entry was evicted before its load completed.
+    pub fn cancel(&mut self) {
+        self.cancelled += 1;
+        self.evicted += 1;
+        self.in_flight();
+        self.resident();
+    }
+
+    /// A settled entry was evicted.
+    pub fn evict(&mut self) {
+        self.evicted += 1;
+        self.resident();
+    }
+
+    /// Cross-check against the tier structure itself: resident entries
+    /// and in-flight (unsettled) entries must match the transitions.
+    pub fn reconcile(&self, n_entries: usize, n_in_flight: usize) {
+        assert_eq!(
+            self.resident(),
+            n_entries as u64,
+            "custody violation: tier ledger says {} blocks resident, \
+             tier holds {}",
+            self.resident(),
+            n_entries
+        );
+        assert_eq!(
+            self.in_flight(),
+            n_in_flight as u64,
+            "custody violation: tier ledger says {} loads in flight, \
+             tier tracks {}",
+            self.in_flight(),
+            n_in_flight
+        );
+    }
+
+    /// End of a shard's run: loads issued == completed + cancelled.
+    pub fn close_check(&self) {
+        assert_eq!(
+            self.issued,
+            self.completed + self.cancelled,
+            "custody violation: {} loads issued != {} completed + {} \
+             cancelled",
+            self.issued,
+            self.completed,
+            self.cancelled
+        );
+    }
+}
+
 // ------------------------------------------------------------ release
 // Zero-sized, inlined-away stubs: the serving path keeps one unsendable
 // code shape in both profiles, and release builds pay nothing.
@@ -319,6 +429,30 @@ impl FeedLedger {
     pub fn drop_n(&mut self, _n: usize) {}
     #[inline(always)]
     pub fn finish(&self, _reported_dropped: usize) {}
+}
+
+#[cfg(not(debug_assertions))]
+#[derive(Debug, Default)]
+pub struct TierLedger;
+
+#[cfg(not(debug_assertions))]
+impl TierLedger {
+    #[inline(always)]
+    pub fn new() -> TierLedger {
+        TierLedger
+    }
+    #[inline(always)]
+    pub fn issue(&mut self, _cached: bool) {}
+    #[inline(always)]
+    pub fn complete(&mut self) {}
+    #[inline(always)]
+    pub fn cancel(&mut self) {}
+    #[inline(always)]
+    pub fn evict(&mut self) {}
+    #[inline(always)]
+    pub fn reconcile(&self, _n_entries: usize, _n_in_flight: usize) {}
+    #[inline(always)]
+    pub fn close_check(&self) {}
 }
 
 // The teeth tests: the auditor is only worth its wiring if a corrupted
@@ -471,6 +605,167 @@ mod tests {
             assert!(
                 caught,
                 "seed {seed}: corruption at step {at} of {:?} went undetected",
+                plan
+            );
+        }
+    }
+
+    #[test]
+    fn tier_ledger_accepts_a_conserving_run() {
+        let mut l = TierLedger::new();
+        l.issue(true); // prefetch in flight
+        l.reconcile(1, 1);
+        l.complete(); // settles
+        l.reconcile(1, 0);
+        l.issue(false); // stream-through
+        l.complete();
+        l.reconcile(1, 0);
+        l.issue(true); // second prefetch...
+        l.cancel(); // ...evicted before its data arrived
+        l.reconcile(1, 0);
+        l.evict(); // the settled block leaves too
+        l.reconcile(0, 0);
+        l.close_check();
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn tier_ledger_panics_on_phantom_complete() {
+        let mut l = TierLedger::new();
+        l.issue(true);
+        l.complete();
+        l.complete(); // corrupt: one load, two arrivals
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn tier_ledger_panics_on_evicting_uninserted_block() {
+        let mut l = TierLedger::new();
+        l.issue(false); // stream: never inserted
+        l.complete();
+        l.evict(); // corrupt: evicting a block the tier never held
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn tier_ledger_panics_on_cancel_without_issue() {
+        let mut l = TierLedger::new();
+        l.cancel(); // corrupt: cancelling a load never issued
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn tier_ledger_panics_on_resident_count_drift() {
+        let mut l = TierLedger::new();
+        l.issue(true);
+        l.complete();
+        // corrupt: the tier structure holds two entries after one insert
+        // — the signature of a duplicated map entry
+        l.reconcile(2, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn tier_ledger_panics_on_unretired_load_at_close() {
+        let mut l = TierLedger::new();
+        l.issue(true); // in flight forever
+        l.close_check();
+    }
+
+    /// Property: random valid tier custody walks (issue/complete/cancel/
+    /// evict with streams mixed in) never panic, and duplicating the
+    /// ledger call of any single step — a transition that did not happen
+    /// in the structure — always panics by the next reconcile. Same
+    /// coverage argument as the queue walk above, over the load/evict/
+    /// cancel transition space.
+    #[test]
+    fn prop_tier_walks_pass_and_random_corruptions_panic() {
+        for seed in 0..200u64 {
+            let mut rng = Pcg32::seed(seed);
+            // ops: 0 = issue cached, 1 = stream (issue + complete),
+            //      2 = complete an in-flight entry, 3 = cancel one,
+            //      4 = evict a settled entry
+            let mut plan: Vec<u8> = Vec::new();
+            let (mut inflight, mut settled) = (0usize, 0usize);
+            for _ in 0..(4 + rng.below(12)) {
+                let mut choices = vec![0u8, 1];
+                if inflight > 0 {
+                    choices.push(2);
+                    choices.push(3);
+                }
+                if settled > 0 {
+                    choices.push(4);
+                }
+                let op = choices[rng.below(choices.len())];
+                match op {
+                    0 => inflight += 1,
+                    2 => {
+                        inflight -= 1;
+                        settled += 1;
+                    }
+                    3 => inflight -= 1,
+                    4 => settled -= 1,
+                    _ => {}
+                }
+                plan.push(op);
+            }
+            // drain in-flight loads so the valid walk can close
+            for _ in 0..inflight {
+                plan.push(if rng.below(2) == 0 { 2 } else { 3 });
+            }
+
+            let run = |corrupt_at: Option<usize>| {
+                let mut l = TierLedger::new();
+                let (mut inflight, mut settled) = (0usize, 0usize);
+                for (i, &op) in plan.iter().enumerate() {
+                    match op {
+                        0 => {
+                            l.issue(true);
+                            inflight += 1;
+                        }
+                        1 => {
+                            l.issue(false);
+                            l.complete();
+                        }
+                        2 => {
+                            l.complete();
+                            inflight -= 1;
+                            settled += 1;
+                        }
+                        3 => {
+                            l.cancel();
+                            inflight -= 1;
+                        }
+                        4 => {
+                            l.evict();
+                            settled -= 1;
+                        }
+                        _ => unreachable!(),
+                    }
+                    if corrupt_at == Some(i) {
+                        // replay the ledger half of the step without the
+                        // structure half: a transition that didn't happen
+                        match op {
+                            0 => l.issue(true),
+                            1 => l.issue(false), // stream that never lands
+                            2 => l.complete(),
+                            3 => l.cancel(),
+                            _ => l.evict(),
+                        }
+                    }
+                    l.reconcile(inflight + settled, inflight);
+                }
+                l.close_check();
+            };
+
+            run(None);
+            let at = rng.below(plan.len());
+            let caught =
+                catch_unwind(AssertUnwindSafe(|| run(Some(at)))).is_err();
+            assert!(
+                caught,
+                "seed {seed}: tier corruption at step {at} of {:?} went \
+                 undetected",
                 plan
             );
         }

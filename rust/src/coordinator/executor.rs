@@ -10,6 +10,7 @@
 use anyhow::{anyhow, ensure, Result};
 
 use crate::device::{Cost, Device};
+use crate::memory::tier::{RoundStep, TierConfig, TierCounters, WeightTier};
 use crate::memory::{ExecSim, SegmentAction};
 use crate::model::{ArchSpec, Tensor};
 use crate::runtime::Backend;
@@ -52,6 +53,14 @@ pub struct BlockExecutor<B: Backend> {
     pub layer_execs: u64,
     /// Layer executions skipped thanks to activation caching.
     pub layer_skips: u64,
+    /// Two-tier weight memory (None = flat residency, the baseline).
+    /// Purely a cost/accounting model: weights always come from
+    /// `store`, so predictions are identical either way.
+    tier: Option<WeightTier>,
+    /// Frames already visible behind the current round (injector
+    /// backlog + dispatch prefetch hints) — feeds the tier's eviction
+    /// stickiness.
+    backlog_hint: usize,
 }
 
 /// ExecSim borrows device/arch/graph; to keep the executor self-contained
@@ -86,6 +95,60 @@ impl<B: Backend> BlockExecutor<B> {
             act: vec![None; nseg],
             layer_execs: 0,
             layer_skips: 0,
+            tier: None,
+            backlog_hint: 0,
+        }
+    }
+
+    /// Enable the two-tier weight memory with the given configuration.
+    /// Replaces any previous tier state (counters reset).
+    pub fn enable_tier(&mut self, cfg: TierConfig) {
+        self.tier = Some(WeightTier::new(cfg));
+    }
+
+    /// Tier statistics so far, `None` when running flat residency.
+    pub fn tier_counters(&self) -> Option<TierCounters> {
+        self.tier.as_ref().map(|t| t.counters)
+    }
+
+    /// Record how many frames are already visible behind the round the
+    /// executor is about to run (injector backlog + prefetch-signal
+    /// hints from dispatch). With visible backlog the tier treats the
+    /// round's blocks as reused next round, making them sticky.
+    pub fn note_backlog(&mut self, n: usize) {
+        self.backlog_hint = n;
+    }
+
+    /// Residency view for the dispatch board: the tier's settled blocks
+    /// when enabled, the flat residency slots otherwise — dispatch
+    /// stickiness works unchanged over either.
+    pub fn resident_snapshot(&self) -> Vec<Option<usize>> {
+        match &self.tier {
+            Some(t) => t.segment_view(self.graph.n_segments()),
+            None => self.sim.resident.clone(),
+        }
+    }
+
+    /// Drain-time custody check: every tier load issued was completed
+    /// or cancelled. Panics in debug builds on violation; no-op flat.
+    pub fn tier_close(&mut self) {
+        if let Some(t) = self.tier.as_mut() {
+            t.close_check();
+        }
+    }
+
+    /// One step of a round's block sequence for (`segment`, `task`):
+    /// block id, byte size, and the task-graph sharer count (the
+    /// affinity signal the eviction scorer keeps sticky).
+    fn round_step(&self, s: usize, task: usize) -> RoundStep {
+        let group = self.graph.group_of(s, task);
+        let sharers = (0..self.graph.n_tasks)
+            .filter(|&t| self.graph.group_of(s, t) == group)
+            .count();
+        RoundStep {
+            block: (s, group),
+            bytes: self.graph.segment_bytes(&self.arch, s, task, &self.ncls),
+            sharers,
         }
     }
 
@@ -129,7 +192,24 @@ impl<B: Backend> BlockExecutor<B> {
         input: &Tensor,
     ) -> Result<(usize, Cost)> {
         assert_eq!(input.shape[0], 1, "serving path is batch-1");
-        let (plan, cost) = self.plan(sample, task);
+        let (plan, flat_cost) = self.plan(sample, task);
+        // flat residency: the plan's cost is the answer. Tiered: the
+        // plan still decides *what executes* (identical predictions),
+        // but load time comes from the tier's stall model instead.
+        let mut cost = flat_cost;
+        if self.tier.is_some() {
+            cost = Cost::default();
+            let seq: Vec<RoundStep> = plan
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| !matches!(a, SegmentAction::CachedActivation))
+                .map(|(s, _)| self.round_step(s, task))
+                .collect();
+            let hint = self.backlog_hint;
+            if let Some(t) = self.tier.as_mut() {
+                t.begin_round(seq, hint);
+            }
+        }
         let mut x: Option<Tensor> = None;
         for (s, action) in plan.iter().enumerate() {
             let group = self.graph.group_of(s, task);
@@ -144,6 +224,28 @@ impl<B: Backend> BlockExecutor<B> {
                     x = Some(cached.2.clone());
                 }
                 SegmentAction::Execute | SegmentAction::LoadAndExecute => {
+                    if self.tier.is_some() {
+                        let st = self.round_step(s, task);
+                        let elems: u64 = self
+                            .graph
+                            .segment_layers(&self.arch, s)
+                            .map(|l| self.arch.layers[l].out_elems() as u64)
+                            .sum();
+                        let ec = self.sim.device.exec_cost(
+                            self.graph.segment_macs(&self.arch, s),
+                            elems,
+                        );
+                        if let Some(tier) = self.tier.as_mut() {
+                            let touch =
+                                tier.touch(st.block, st.bytes, st.sharers);
+                            cost.add(self.sim.device.load_cost_stalled(
+                                touch.charge_bytes,
+                                touch.stall_s,
+                            ));
+                            tier.advance_exec(ec.exec_s);
+                        }
+                        cost.add(ec);
+                    }
                     let mut cur = match x {
                         Some(t) => t,
                         None => input.clone(),
@@ -224,6 +326,22 @@ impl<B: Backend> BlockExecutor<B> {
         let mut preds: Vec<Vec<Option<usize>>> = vec![vec![None; n_tasks]; m];
         let mut costs = vec![Cost::default(); m];
         let mut tasks_skipped = 0usize;
+        if self.tier.is_some() {
+            // the whole round's block sequence is known up front (gated
+            // tasks are speculatively included: an unused prefetch is
+            // settled and balanced by the custody ledger) — issue
+            // pipelined fast-tier loads before the first forward
+            let mut seq = Vec::with_capacity(order.len() * nseg);
+            for &t in order {
+                for s in 0..nseg {
+                    seq.push(self.round_step(s, t));
+                }
+            }
+            let hint = self.backlog_hint;
+            if let Some(tier) = self.tier.as_mut() {
+                tier.begin_round(seq, hint);
+            }
+        }
         for &t in order {
             let active: Vec<usize> = (0..m)
                 .filter(|&i| {
@@ -257,7 +375,29 @@ impl<B: Backend> BlockExecutor<B> {
                     Some(tensor) => tensor,
                     None => gather_rows(&xbatch, ids, &act_ids),
                 };
-                if self.sim.resident[s] != Some(group) {
+                if self.tier.is_some() {
+                    // tier path: every executed segment touches its
+                    // block; the tier decides hit / in-flight / demand
+                    // stall and what load energy is still unattributed
+                    let st = self.round_step(s, t);
+                    if let Some(tier) = self.tier.as_mut() {
+                        let touch = tier.touch(st.block, st.bytes, st.sharers);
+                        if touch.stall_s > 0.0 || touch.charge_bytes > 0 {
+                            let lc = self
+                                .sim
+                                .device
+                                .load_cost_stalled(
+                                    touch.charge_bytes,
+                                    touch.stall_s,
+                                )
+                                .scaled(1.0 / active.len() as f64);
+                            for &i in &active {
+                                costs[i].add(lc);
+                            }
+                        }
+                    }
+                    self.sim.resident[s] = Some(group);
+                } else if self.sim.resident[s] != Some(group) {
                     let bytes =
                         self.graph.segment_bytes(&self.arch, s, t, &self.ncls);
                     let lc = self
@@ -281,6 +421,12 @@ impl<B: Backend> BlockExecutor<B> {
                     .exec_cost(self.graph.segment_macs(&self.arch, s), elems);
                 for &i in &active {
                     costs[i].add(ec);
+                }
+                if let Some(tier) = self.tier.as_mut() {
+                    // the device model executes the segment once per
+                    // active frame serially: that much compute overlaps
+                    // any in-flight prefetches
+                    tier.advance_exec(ec.exec_s * active.len() as f64);
                 }
                 let weights = &self.store.blocks[s][group];
                 let mut wi = 0;
@@ -517,6 +663,100 @@ mod tests {
         // residency persisted: an immediate second batch never loads
         let out2 = batched.run_round_batched(&ids, &inputs, &order, &[]).unwrap();
         assert!(out2.costs.iter().all(|c| c.load_s == 0.0));
+    }
+
+    #[test]
+    fn tiered_batched_predictions_match_flat_at_every_capacity() {
+        let frames = gauss_frames(5, 0xA11CE);
+        let order = [0usize, 1, 2];
+        let conditional = [(0usize, 2usize)];
+        let ids: Vec<u64> = frames.iter().map(|(id, _)| *id).collect();
+        let inputs: Vec<&Tensor> = frames.iter().map(|(_, x)| x).collect();
+        let mut flat = setup(ReferenceBackend::new());
+        let want = flat
+            .run_round_batched(&ids, &inputs, &order, &conditional)
+            .unwrap();
+        for cap in [0usize, 3_000, usize::MAX] {
+            for prefetch in [false, true] {
+                let mut ex = setup(ReferenceBackend::new());
+                ex.enable_tier(crate::memory::tier::TierConfig::for_device(
+                    &Device::msp430(),
+                    cap,
+                    prefetch,
+                ));
+                let got = ex
+                    .run_round_batched(&ids, &inputs, &order, &conditional)
+                    .unwrap();
+                assert_eq!(
+                    got.predictions, want.predictions,
+                    "cap {cap} prefetch {prefetch} changed predictions"
+                );
+                assert_eq!(got.tasks_skipped, want.tasks_skipped);
+                ex.tier_close(); // custody must balance at drain
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_run_task_matches_flat_and_balances() {
+        let frames = gauss_frames(4, 0xD00F);
+        let order = [0usize, 1, 2];
+        let mut flat = setup(ReferenceBackend::new());
+        let mut want = Vec::new();
+        for (id, x) in &frames {
+            for &t in &order {
+                want.push(flat.run_task(*id, t, x).unwrap().0);
+            }
+        }
+        for cap in [0usize, 2_000, usize::MAX] {
+            let mut ex = setup(ReferenceBackend::new());
+            ex.enable_tier(crate::memory::tier::TierConfig::for_device(
+                &Device::msp430(),
+                cap,
+                true,
+            ));
+            let mut got = Vec::new();
+            for (id, x) in &frames {
+                for &t in &order {
+                    got.push(ex.run_task(*id, t, x).unwrap().0);
+                }
+            }
+            assert_eq!(got, want, "cap {cap} changed batch-1 predictions");
+            ex.tier_close();
+        }
+    }
+
+    #[test]
+    fn prefetch_overlap_beats_demand_stall_in_batched_round() {
+        let frames = gauss_frames(4, 0x5EED);
+        let order = [0usize, 1, 2];
+        let ids: Vec<u64> = frames.iter().map(|(id, _)| *id).collect();
+        let inputs: Vec<&Tensor> = frames.iter().map(|(_, x)| x).collect();
+        let run = |prefetch: bool| {
+            let mut ex = setup(ReferenceBackend::new());
+            ex.enable_tier(crate::memory::tier::TierConfig::for_device(
+                &Device::msp430(),
+                usize::MAX,
+                prefetch,
+            ));
+            let out =
+                ex.run_round_batched(&ids, &inputs, &order, &[]).unwrap();
+            let stall: f64 = out.costs.iter().map(|c| c.load_s).sum();
+            let counters = ex.tier_counters().unwrap();
+            ex.tier_close();
+            (stall, counters)
+        };
+        let (stall_off, off) = run(false);
+        let (stall_on, on) = run(true);
+        assert!(
+            stall_on < stall_off,
+            "prefetch stall {stall_on} !< demand stall {stall_off}"
+        );
+        assert!(on.prefetch_hits > 0);
+        assert_eq!(on.misses, 0, "everything fits: prefetch covers all");
+        assert_eq!(off.prefetch_hits, 0);
+        // energy (bytes moved) identical: overlap hides time, not work
+        assert_eq!(on.bytes_loaded, off.bytes_loaded);
     }
 
     /// PJRT variants — kept behind artifact detection.

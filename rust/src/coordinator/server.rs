@@ -398,6 +398,55 @@ mod tests {
         assert_eq!(delivered + dropped, 8);
     }
 
+    /// The two-tier weight memory (`memory::tier`) is a cost overlay on
+    /// the single-executor loop too: at every capacity × prefetch
+    /// setting the served predictions are frame-for-frame the flat
+    /// executor's, only the load-stall/energy accounting moves.
+    #[test]
+    fn tiered_executor_serve_matches_flat_frame_for_frame() {
+        use crate::memory::tier::TierConfig;
+
+        let plan = ServePlan {
+            order: vec![0, 1, 2],
+            conditional: vec![(0, 2)],
+        };
+        let run = |tier: Option<TierConfig>| {
+            let mut ex = executor(ReferenceBackend::new());
+            if let Some(cfg) = tier {
+                ex.enable_tier(cfg);
+            }
+            let (tx, rx) = sync_channel::<Frame>(16);
+            for (id, x) in frames(10) {
+                tx.send(Frame::new(id, x)).unwrap();
+            }
+            drop(tx);
+            let (results, skipped) = run_executor(&mut ex, &plan, rx).unwrap();
+            ex.tier_close(); // custody close-check (panics on imbalance)
+            (results, skipped, ex.tier_counters())
+        };
+        let (base, base_sk, no_tier) = run(None);
+        assert!(no_tier.is_none());
+        for cap in [0usize, 2_000, usize::MAX] {
+            for prefetch in [false, true] {
+                let cfg =
+                    TierConfig::for_device(&Device::msp430(), cap, prefetch);
+                let (got, sk, counters) = run(Some(cfg));
+                assert_eq!(sk, base_sk, "cap={cap} prefetch={prefetch}");
+                assert_eq!(got.len(), base.len());
+                for (g, w) in got.iter().zip(&base) {
+                    assert_eq!(g.id, w.id);
+                    assert_eq!(
+                        g.predictions, w.predictions,
+                        "frame {} diverged at cap={cap} prefetch={prefetch}",
+                        g.id
+                    );
+                }
+                let tc = counters.expect("tier enabled but no counters");
+                assert!(tc.hits + tc.misses > 0);
+            }
+        }
+    }
+
     #[test]
     fn serve_conserves_frames_under_pressure() {
         // a depth-1 queue against a compute-bound executor: whatever is

@@ -43,9 +43,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::exec::pool::ThreadPool;
+use crate::memory::tier::{TierConfig, TierCounters};
 use crate::model::Tensor;
 use crate::runtime::Backend;
-use crate::sync::atomic::{AtomicIsize, Ordering};
+use crate::sync::atomic::{AtomicIsize, AtomicUsize, Ordering};
 use crate::sync::mpsc::{channel, sync_channel, TrySendError};
 use crate::sync::{lock_unpoisoned, thread, wait_unpoisoned, Arc, Condvar, Mutex};
 
@@ -81,6 +82,11 @@ pub struct ShardOpts {
     /// Test/bench knob: (shard, per-frame delay) slowing one shard down
     /// to model a straggler or a core stolen by another tenant.
     pub handicap: Option<(usize, Duration)>,
+    /// Two-tier weight memory (`memory::tier`): every shard executor
+    /// gets its own bounded fast tier with this config; `None` keeps the
+    /// flat whole-block-reload cost model. Predictions are identical
+    /// either way — the tier only changes load-stall/energy accounting.
+    pub tier: Option<TierConfig>,
 }
 
 impl Default for ShardOpts {
@@ -93,6 +99,7 @@ impl Default for ShardOpts {
             local_depth: 2,
             pace: None,
             handicap: None,
+            tier: None,
         }
     }
 }
@@ -193,6 +200,9 @@ pub struct ShardReport {
     /// Pool-wide metrics (frames/drops/latency percentiles/sim cost and
     /// layer counters summed over every shard).
     pub aggregate: ServeReport,
+    /// Two-tier weight-memory counters summed over every shard —
+    /// `Some` iff the serve ran with [`ShardOpts::tier`] enabled.
+    pub tier: Option<TierCounters>,
 }
 
 impl ShardReport {
@@ -262,6 +272,8 @@ struct ShardOutcome {
     error: Option<String>,
     /// Frames consumed but not served because of that failure.
     failed: usize,
+    /// This shard's weight-tier counters (tier-enabled serves only).
+    tier: Option<TierCounters>,
 }
 
 impl ShardOutcome {
@@ -275,6 +287,7 @@ impl ShardOutcome {
             batch_hist: vec![0; max_batch.max(1)],
             error: None,
             failed: 0,
+            tier: None,
         }
     }
 }
@@ -395,7 +408,11 @@ where
         let plan = plan.clone();
         let res_tx = res_tx.clone();
         let handicap = opts.handicap;
+        let tier_cfg = opts.tier;
         pool.execute(move || {
+            if let Some(cfg) = tier_cfg {
+                ex.enable_tier(cfg);
+            }
             let mut out = ShardOutcome::new(s, 1);
             while let Ok(frame) = rx.recv() {
                 if let Some((hs, d)) = handicap {
@@ -419,6 +436,11 @@ where
                     }
                 }
             }
+            // settle in-flight prefetches and run the custody close-check
+            // before the counters are read (debug builds panic here on a
+            // loads-issued != completed + cancelled imbalance)
+            ex.tier_close();
+            out.tier = ex.tier_counters();
             out.layer_execs = ex.layer_execs;
             out.layer_skips = ex.layer_skips;
             let _ = res_tx.send(out);
@@ -697,6 +719,31 @@ impl ResidencyBoard {
     }
 }
 
+/// Per-shard prefetch mailbox: the dispatcher bumps it every time a
+/// frame lands on that shard's preferred deque, and the shard drains it
+/// (`take`) at each pop to size its tier prefetch horizon
+/// (`BlockExecutor::note_backlog`) — arrivals since the last pop are
+/// work the backlog count alone cannot see yet. Relaxed suffices: this
+/// is a monotone counter used as a heuristic hint, and the only
+/// invariant — hints added == hints consumed + hints remaining — holds
+/// for atomic RMWs under any ordering
+/// (`loom_tier_prefetch_signal_conserves_hints`).
+struct PrefetchSignal(AtomicUsize);
+
+impl PrefetchSignal {
+    fn new() -> PrefetchSignal {
+        PrefetchSignal(AtomicUsize::new(0))
+    }
+
+    fn add(&self, n: usize) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn take(&self) -> usize {
+        self.0.swap(0, Ordering::Relaxed)
+    }
+}
+
 /// Residency-aware admission into the work-stealing queue, shared by
 /// every feeder (the inline single-producer loop and the multi-producer
 /// ingest tier — `offer` takes `&self`, so K producers call it
@@ -705,6 +752,7 @@ impl ResidencyBoard {
 pub struct WsDispatch {
     queue: Arc<StealQueue>,
     boards: Vec<Arc<ResidencyBoard>>,
+    signals: Vec<Arc<PrefetchSignal>>,
     needed: Vec<Option<usize>>,
     n: usize,
     queue_depth: usize,
@@ -722,8 +770,22 @@ impl WsDispatch {
             let p = (frame.id as usize) % self.n;
             self.boards[p].warm_for(&self.needed).then_some(p)
         };
-        self.queue
-            .push(frame, preferred, self.queue_depth, self.local_depth)
+        let accepted = self
+            .queue
+            .push(frame, preferred, self.queue_depth, self.local_depth);
+        // a frame aimed at a specific shard is future work that shard's
+        // tier prefetcher can plan for before its next pop sees it in
+        // the backlog count — signal it. Deliberately optimistic: push
+        // may have diverted the frame to the injector (deque full), and
+        // an inflated hint merely widens the prefetch horizon; untagged
+        // injector frames reach every shard through the backlog instead
+
+        if accepted {
+            if let Some(p) = preferred {
+                self.signals[p].add(1);
+            }
+        }
+        accepted
     }
 }
 
@@ -812,6 +874,8 @@ where
     };
     let boards: Vec<Arc<ResidencyBoard>> =
         (0..n).map(|_| Arc::new(ResidencyBoard::new(nseg))).collect();
+    let signals: Vec<Arc<PrefetchSignal>> =
+        (0..n).map(|_| Arc::new(PrefetchSignal::new())).collect();
     let queue = Arc::new(StealQueue::new(n));
     let pool = ThreadPool::new(n);
     let (res_tx, res_rx) = channel();
@@ -820,10 +884,15 @@ where
     for (s, mut ex) in executors.into_iter().enumerate() {
         let queue = Arc::clone(&queue);
         let board = Arc::clone(&boards[s]);
+        let signal = Arc::clone(&signals[s]);
         let plan = plan.clone();
         let res_tx = res_tx.clone();
         let handicap = opts.handicap;
+        let tier_cfg = opts.tier;
         pool.execute(move || {
+            if let Some(cfg) = tier_cfg {
+                ex.enable_tier(cfg);
+            }
             let mut out = ShardOutcome::new(s, batch);
             let mut policy = if adaptive {
                 BatchPolicy::adaptive(batch)
@@ -833,6 +902,11 @@ where
             while let Some((popped, backlog)) =
                 queue.pop_batch(s, policy.next())
             {
+                // drain the prefetch mailbox and fold it into the tier's
+                // lookahead: backlog counts what is queued *now*, the
+                // hint adds deque arrivals aimed here since the last pop
+                let hint = signal.take();
+                ex.note_backlog(backlog + hint);
                 // the service clock starts before the handicap sleep: a
                 // straggler's slowness must show up in the policy's
                 // service-time signal or it would keep hogging big batches
@@ -888,7 +962,7 @@ where
                 match step {
                     Ok(()) => {
                         queue.note_served(m);
-                        board.publish(ex.resident());
+                        board.publish(&ex.resident_snapshot());
                         out.batch_hist[m - 1] += 1;
                         policy.observe(
                             m,
@@ -907,6 +981,10 @@ where
                     }
                 }
             }
+            // settle in-flight prefetches and close the custody ledger
+            // (debug builds panic on issued != completed + cancelled)
+            ex.tier_close();
+            out.tier = ex.tier_counters();
             out.layer_execs = ex.layer_execs;
             out.layer_skips = ex.layer_skips;
             let _ = res_tx.send(out);
@@ -918,6 +996,7 @@ where
     let dispatch = WsDispatch {
         queue: Arc::clone(&queue),
         boards,
+        signals,
         needed,
         n,
         queue_depth,
@@ -955,6 +1034,7 @@ fn collect_outcomes(
     let mut skipped = 0usize;
     let mut layer_execs = 0u64;
     let mut layer_skips = 0u64;
+    let mut tier: Option<TierCounters> = None;
     for _ in 0..n {
         let out = res_rx
             .recv()
@@ -965,6 +1045,9 @@ fn collect_outcomes(
         layer_execs += out.layer_execs;
         layer_skips += out.layer_skips;
         dropped += out.failed;
+        if let Some(tc) = out.tier {
+            tier.get_or_insert_with(TierCounters::default).merge(&tc);
+        }
         if let Some(e) = out.error {
             shard_errors.push((out.shard, e));
         }
@@ -982,6 +1065,7 @@ fn collect_outcomes(
         shard_errors,
         results: all,
         aggregate,
+        tier,
     })
 }
 
@@ -1147,6 +1231,71 @@ mod tests {
         }
     }
 
+    /// Tiered serving is a cost-model overlay, never a scheduler: at
+    /// every fast-tier capacity — streaming-only 0, a bound tighter than
+    /// the weight footprint, and unbounded — and with prefetch on or
+    /// off, the sharded batched serve must produce frame-for-frame the
+    /// predictions of the flat (tier-less) serve, and the report must
+    /// carry the pool-wide tier counters.
+    #[test]
+    fn tiered_sharded_serve_matches_flat_and_reports_counters() {
+        let plan = ServePlan {
+            order: vec![0, 1, 2],
+            conditional: vec![(0, 2)],
+        };
+        let fr = frames(15);
+        let flat_opts = ShardOpts {
+            queue_depth: 64,
+            batch: 3,
+            ..ShardOpts::default()
+        };
+        let flat =
+            serve_sharded_opts(make_executor, 2, &plan, fr.clone(), &flat_opts)
+                .unwrap();
+        assert_eq!(flat.aggregate.dropped, 0);
+        assert!(flat.tier.is_none(), "flat serve must not report a tier");
+        for cap in [0usize, 3_000, usize::MAX] {
+            for prefetch in [false, true] {
+                let opts = ShardOpts {
+                    tier: Some(TierConfig::for_device(
+                        &Device::msp430(),
+                        cap,
+                        prefetch,
+                    )),
+                    ..flat_opts.clone()
+                };
+                let report =
+                    serve_sharded_opts(make_executor, 2, &plan, fr.clone(), &opts)
+                        .unwrap();
+                assert_eq!(report.aggregate.dropped, 0);
+                assert_eq!(report.results.len(), flat.results.len());
+                for (got, want) in report.results.iter().zip(&flat.results) {
+                    assert_eq!(got.id, want.id);
+                    assert_eq!(
+                        got.predictions, want.predictions,
+                        "frame {} diverged under tier cap={cap} prefetch={prefetch}",
+                        got.id
+                    );
+                }
+                let tc = report.tier.expect("tier counters missing");
+                assert!(
+                    tc.hits + tc.misses > 0,
+                    "no tier traffic at cap={cap} prefetch={prefetch}"
+                );
+                if cap == 0 {
+                    // capacity 0 degenerates to streaming: nothing can
+                    // ever become resident, so nothing can ever hit
+                    assert_eq!(tc.hits, 0);
+                    assert_eq!(tc.prefetch_hits, 0);
+                }
+                if cap == usize::MAX {
+                    // an unbounded tier never needs to evict
+                    assert_eq!(tc.evictions, tc.prefetch_cancelled);
+                }
+            }
+        }
+    }
+
     /// A backend that fails every `run_layer` when `fail` is set — the
     /// injected-fault half of the dead-shard regression tests.
     struct FailingBackend {
@@ -1308,6 +1457,7 @@ mod tests {
             local_depth: 1,
             pace: Some(Duration::from_millis(8)),
             handicap: Some((0, Duration::from_millis(40))),
+            tier: None,
         };
         let rr = serve_sharded_opts(
             make_executor,
@@ -1857,6 +2007,35 @@ mod loom_tests {
                 1,
                 "custody imbalance: served {got} failed {failed} drained {drained}"
             );
+        });
+    }
+
+    /// Protocol 5 — the tier prefetch mailbox (`PrefetchSignal`): two
+    /// dispatcher threads bump a shard's signal while the shard drains
+    /// it with `take` (the pop-time swap). Hints must be conserved under
+    /// every interleaving — added == consumed + remaining — even though
+    /// every access is Relaxed: atomic RMWs never lose increments, which
+    /// is exactly why the mailbox needs no stronger ordering (it carries
+    /// a heuristic count, not a happens-before edge; see CONCURRENCY.md
+    /// §Two-tier weight memory).
+    #[test]
+    fn loom_tier_prefetch_signal_conserves_hints() {
+        model().check(|| {
+            let sig = Arc::new(PrefetchSignal::new());
+            let producers: Vec<_> = (0..2)
+                .map(|_| {
+                    let s = Arc::clone(&sig);
+                    thread::spawn(move || s.add(1))
+                })
+                .collect();
+            // the shard's pop-time drain races both producers
+            let mut consumed = sig.take();
+            for p in producers {
+                p.join().unwrap();
+            }
+            // post-join drain picks up whatever the racing take missed
+            consumed += sig.take();
+            assert_eq!(consumed, 2, "prefetch hints lost or duplicated");
         });
     }
 }

@@ -168,6 +168,18 @@ impl Device {
             ..Default::default()
         }
     }
+
+    /// Cost of a load whose transfer (partially) overlapped compute:
+    /// the energy for every byte moved is still paid, but only the
+    /// *visible* stall counts as load time. `stall_s == load_time(bytes)`
+    /// recovers `load_cost`; `stall_s == 0` is a fully hidden prefetch.
+    pub fn load_cost_stalled(&self, bytes: usize, stall_s: f64) -> Cost {
+        Cost {
+            load_s: stall_s,
+            load_j: self.load_energy(bytes),
+            ..Default::default()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -218,6 +230,21 @@ mod tests {
         c.add(d.load_cost(4096));
         assert!(c.time() > 0.0 && c.energy() > 0.0);
         assert!((c.time() - (c.exec_s + c.load_s)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn stalled_load_pays_full_energy_partial_time() {
+        let d = Device::msp430();
+        let bytes = 8192;
+        let full = d.load_cost(bytes);
+        let hidden = d.load_cost_stalled(bytes, 0.0);
+        let partial = d.load_cost_stalled(bytes, full.load_s / 2.0);
+        assert_eq!(hidden.load_j, full.load_j);
+        assert_eq!(hidden.load_s, 0.0);
+        assert_eq!(partial.load_j, full.load_j);
+        assert!((partial.load_s - full.load_s / 2.0).abs() < 1e-15);
+        // stall == load_time recovers the flat model exactly
+        assert_eq!(d.load_cost_stalled(bytes, full.load_s), full);
     }
 
     #[test]

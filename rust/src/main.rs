@@ -8,6 +8,7 @@
 //!                 [--conditional] [--shards N] [--batch B|auto]
 //!                 [--batch-max M] [--producers K] [--queue-depth D]
 //!                 [--steal] [--round-robin] [--steps-ind N] [--steps-re N]
+//!                 [--fast-tier-bytes N|max] [--prefetch on|off]
 //!   antler check  # verify backend + layer round-trip
 //!
 //! Every subcommand accepts `--backend reference|pjrt` (equivalent to
@@ -86,7 +87,10 @@ fn print_usage() {
          \x20                 adapts within [1, --batch-max] from load;\n\
          \x20                 --producers K feeds via K ingest threads;\n\
          \x20                 --queue-depth D bounds the injector;\n\
-         \x20                 --round-robin selects the baseline scheduler)\n\
+         \x20                 --round-robin selects the baseline scheduler;\n\
+         \x20                 --fast-tier-bytes N caps the two-tier weight\n\
+         \x20                 memory per executor ('max' = unbounded) and\n\
+         \x20                 --prefetch on|off toggles its pipelined loads)\n\
          \x20 check           verify backend + layer round-trip\n\
          \n\
          global: --backend reference|pjrt (or ANTLER_BACKEND)"
@@ -217,7 +221,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let plan = ServePlan { order: prep.order.clone(), conditional };
 
-    let report = if sharded {
+    // `--fast-tier-bytes N` turns on the two-tier weight memory
+    // (`memory::tier`): each executor gets a bounded fast tier priced
+    // from the deployment device's external-read bandwidth; `--prefetch
+    // off` keeps the tier but disables its pipelined lookahead loads
+    let tier = match args.get("fast-tier-bytes") {
+        Some(v) => {
+            let bytes = if v == "max" {
+                usize::MAX
+            } else {
+                v.parse().map_err(|_| {
+                    anyhow!("--fast-tier-bytes wants a byte count or 'max'")
+                })?
+            };
+            let prefetch = match args.get_or("prefetch", "on") {
+                "on" => true,
+                "off" => false,
+                other => {
+                    return Err(anyhow!("--prefetch on|off, got {other:?}"))
+                }
+            };
+            Some(antler::memory::tier::TierConfig::for_device(
+                &bundle.device,
+                bytes,
+                prefetch,
+            ))
+        }
+        None => None,
+    };
+
+    let (report, tier_counters) = if sharded {
         // sharded/batched serving always runs on the Send reference
         // backend — one executor per shard on the scheduler pool
         println!(
@@ -256,6 +289,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             batch,
             adaptive_batch: adaptive,
             steal,
+            tier,
             ..ShardOpts::default()
         };
         let sr = if producers > 1 {
@@ -311,7 +345,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(table) = sr.shard_error_table() {
             print!("{table}");
         }
-        sr.aggregate
+        (sr.aggregate, sr.tier)
     } else {
         let mut ex = BlockExecutor::new(
             be.as_ref(),
@@ -321,13 +355,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             prep.ncls.clone(),
             prep.store.clone(),
         );
+        if let Some(cfg) = tier {
+            ex.enable_tier(cfg);
+        }
         let warmed = ex.warmup()?;
         println!(
             "serving {which} on {}: {n} tasks, order {:?}, {warmed} executables warm",
             be.name(),
             prep.order
         );
-        serve(&mut ex, &plan, frames, 64, None)?
+        let r = serve(&mut ex, &plan, frames, 64, None)?;
+        ex.tier_close();
+        (r, ex.tier_counters())
     };
     println!(
         "frames={} dropped={} wall={:.2}s throughput={:.1} fps",
@@ -352,6 +391,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             / (report.layer_execs + report.layer_skips).max(1) as f64
             * 100.0
     );
+    if let Some(tc) = tier_counters {
+        println!(
+            "weight tier: {} hits / {} misses ({} prefetch hits), \
+             {} evictions, {} load stall, {:.1} KB loaded",
+            tc.hits,
+            tc.misses,
+            tc.prefetch_hits,
+            tc.evictions,
+            bench::fmt_time(tc.stall_s),
+            tc.bytes_loaded as f64 / 1024.0
+        );
+    }
     let _ = pipeline::deployment_order(prep, &bundle.device, vec![], vec![])?;
     Ok(())
 }

@@ -15,6 +15,8 @@ use crate::device::{Cost, Device};
 use crate::model::ArchSpec;
 use crate::taskgraph::TaskGraph;
 
+pub mod tier;
+
 /// Runtime residency/cache state for one device+graph instance.
 #[derive(Debug, Clone)]
 pub struct ExecSim<'a> {

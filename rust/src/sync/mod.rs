@@ -4,8 +4,9 @@
 //! names resolve to [`loom`](https://docs.rs/loom) equivalents, so the
 //! exact production protocols — the steal queue's wake/close, the
 //! `CloseOnDrop` guard, dead-shard absorption, the ingest shutdown
-//! barrier, thread-pool shutdown — are *exhaustively* interleaved by
-//! the `loom_*` tests instead of sampled by stress tests.
+//! barrier, thread-pool shutdown, the tier's prefetch-hint mailbox —
+//! are *exhaustively* interleaved by the `loom_*` tests instead of
+//! sampled by stress tests.
 //!
 //! The custom lint (`tools/lint.sh`, run by `./ci.sh`) bans raw
 //! `std::sync`/`std::thread` everywhere else in `src/`, so new

@@ -227,6 +227,151 @@ fn prop_sharded_batched_serving_matches_single_executor() {
     );
 }
 
+/// The two-tier weight memory is provably a cost overlay: for any
+/// random task graph, execution order, conditional gates and frame set,
+/// the tier-enabled sharded serve — at a capacity of zero (pure
+/// streaming), a random bound tighter than the weight footprint, and
+/// unbounded, with prefetch on or off and under both eviction policies —
+/// produces frame-for-frame identical `predictions` to the flat
+/// (tier-less) serve. The tier decides *when bytes move*, never *what
+/// executes*.
+#[test]
+fn prop_tiered_serving_matches_flat_baseline() {
+    use antler::memory::tier::{EvictPolicy, TierConfig};
+
+    let archs = builtin_archs();
+    let arch = archs["cnn5"].clone();
+    let device = Device::msp430();
+    prop_check(
+        "tiered-serving-parity",
+        5,
+        |rng| {
+            let n = gen::usize_in(rng, 3, 6); // 3..=5 tasks
+            let aff = synthetic_affinity(n, 3, rng);
+            let graphs = enumerate::clustered(&aff, &[1, 3, 4], 30);
+            let g = graphs[rng.below(graphs.len())].clone();
+            let order = gen::permutation(rng, n);
+            let mut cond = Vec::new();
+            for j in 1..n {
+                if rng.chance(0.5) {
+                    let i = rng.below(j);
+                    cond.push((order[i], order[j]));
+                }
+            }
+            let n_frames = gen::usize_in(rng, 4, 10);
+            let shards = gen::usize_in(rng, 1, 4); // 1..=3 shards
+            let tight_cap = gen::usize_in(rng, 500, 8_000);
+            let seed = rng.next_u64();
+            (g, order, cond, n_frames, shards, tight_cap, seed)
+        },
+        |(g, order, cond, n_frames, shards, tight_cap, seed)| {
+            let ncls = vec![2usize; g.n_tasks];
+            let mut wrng = Pcg32::seed(*seed);
+            let store = GraphWeights::init(g, &arch, &ncls, &mut wrng);
+            let frames: Vec<(u64, Tensor)> = (0..*n_frames as u64)
+                .map(|i| {
+                    let data = (0..256).map(|_| wrng.gauss()).collect();
+                    (i, Tensor::new(vec![1, 16, 16, 1], data))
+                })
+                .collect();
+            let plan = ServePlan {
+                order: order.clone(),
+                conditional: cond.clone(),
+            };
+            let make_executor = |_s: usize| {
+                Ok(BlockExecutor::new(
+                    ReferenceBackend::new(),
+                    device.clone(),
+                    arch.clone(),
+                    g.clone(),
+                    ncls.clone(),
+                    store.clone(),
+                ))
+            };
+            let flat_opts = ShardOpts {
+                queue_depth: frames.len() + 1,
+                batch: 3,
+                ..ShardOpts::default()
+            };
+            let flat = serve_sharded_opts(
+                make_executor,
+                *shards,
+                &plan,
+                frames.clone(),
+                &flat_opts,
+            )
+            .map_err(|e| e.to_string())?;
+            if flat.aggregate.dropped != 0 {
+                return Err(format!("flat drops: {}", flat.aggregate.dropped));
+            }
+            for cap in [0usize, *tight_cap, usize::MAX] {
+                for prefetch in [false, true] {
+                    for policy in [EvictPolicy::Affinity, EvictPolicy::Lru] {
+                        let mut cfg = TierConfig::for_device(
+                            &device, cap, prefetch,
+                        );
+                        cfg.policy = policy;
+                        let opts = ShardOpts {
+                            tier: Some(cfg),
+                            ..flat_opts.clone()
+                        };
+                        let report = serve_sharded_opts(
+                            make_executor,
+                            *shards,
+                            &plan,
+                            frames.clone(),
+                            &opts,
+                        )
+                        .map_err(|e| e.to_string())?;
+                        if report.aggregate.dropped != 0 {
+                            return Err(format!(
+                                "tier cap={cap} dropped {}",
+                                report.aggregate.dropped
+                            ));
+                        }
+                        if report.results.len() != flat.results.len() {
+                            return Err(format!(
+                                "{} tiered results vs {} flat (cap={cap})",
+                                report.results.len(),
+                                flat.results.len()
+                            ));
+                        }
+                        for (got, want) in
+                            report.results.iter().zip(&flat.results)
+                        {
+                            if got.id != want.id
+                                || got.predictions != want.predictions
+                            {
+                                return Err(format!(
+                                    "frame {} diverged at cap={cap} \
+                                     prefetch={prefetch} policy={policy:?}: \
+                                     {:?} vs flat {:?}",
+                                    want.id, got.predictions, want.predictions
+                                ));
+                            }
+                        }
+                        let tc = report
+                            .tier
+                            .ok_or("tier enabled but counters missing")?;
+                        if tc.hits + tc.misses == 0 {
+                            return Err(format!(
+                                "no tier traffic at cap={cap}"
+                            ));
+                        }
+                        if cap == 0 && tc.hits != 0 {
+                            return Err(format!(
+                                "capacity-0 tier reported {} hits",
+                                tc.hits
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Multi-producer ingest in front of the work-stealing scheduler: for
 /// random source splits, random per-source pacing, K producers and a
 /// handicapped (skewed) shard, per-source conservation

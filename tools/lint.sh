@@ -47,6 +47,7 @@ hot_files=(
     "$SRC/coordinator/ingest.rs"
     "$SRC/coordinator/server.rs"
     "$SRC/exec/pool.rs"
+    "$SRC/memory/tier.rs"
 )
 for f in "${hot_files[@]}"; do
     [[ -f "$f" ]] || continue

@@ -1,0 +1,545 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check of the two-tier weight-memory cost model.
+
+A line-for-line Python port of `rust/src/memory/tier.rs` (WeightTier +
+the TierLedger custody transitions from `coordinator/audit.rs`), used
+for two things on machines without a Rust toolchain:
+
+  1. re-derive every arithmetic expectation asserted by the unit suite
+     in `memory/tier.rs` (miss counts, stall seconds, byte totals), so
+     the constants baked into those tests are independently checked;
+  2. produce the deterministic cold-start stall numbers reported in
+     BENCH_7.json: the `runtime_hotpath.rs` tier scenario (cnn5 /
+     graph5 / msp430, fast tier = half the weight footprint, 24 frames
+     in batch-8 rounds) run through the same cost arithmetic.
+
+The port mirrors the Rust structure closely on purpose — BTreeMap
+iteration becomes sorted-dict iteration so victim selection breaks ties
+identically. Drift between this file and tier.rs is a bug in exactly
+one of them; `cargo test --lib memory::tier::` is the ground truth once
+a toolchain is present.
+
+Run: python3 tools/verify_tier_model.py
+"""
+
+import json
+import sys
+
+# ------------------------------------------------------------- ledger
+
+
+class TierLedger:
+    """Custody transitions from coordinator/audit.rs::TierLedger."""
+
+    def __init__(self):
+        self.issued = 0
+        self.completed = 0
+        self.cancelled = 0
+        self.inserted = 0
+        self.evicted = 0
+
+    def in_flight(self):
+        f = self.issued - (self.completed + self.cancelled)
+        assert f >= 0, "custody violation: retired more loads than issued"
+        return f
+
+    def resident(self):
+        r = self.inserted - self.evicted
+        assert r >= 0, "custody violation: evicted more than inserted"
+        return r
+
+    def issue(self, cached):
+        self.issued += 1
+        if cached:
+            self.inserted += 1
+        self.in_flight()
+
+    def complete(self):
+        self.completed += 1
+        self.in_flight()
+
+    def cancel(self):
+        self.cancelled += 1
+        self.evicted += 1
+        self.in_flight()
+        self.resident()
+
+    def evict(self):
+        self.evicted += 1
+        self.resident()
+
+    def reconcile(self, n_entries, n_in_flight):
+        assert self.resident() == n_entries, (
+            f"custody violation: ledger {self.resident()} resident, "
+            f"tier holds {n_entries}"
+        )
+        assert self.in_flight() == n_in_flight, (
+            f"custody violation: ledger {self.in_flight()} in flight, "
+            f"tier tracks {n_in_flight}"
+        )
+
+    def close_check(self):
+        assert self.issued == self.completed + self.cancelled, (
+            f"custody violation: {self.issued} issued != "
+            f"{self.completed} completed + {self.cancelled} cancelled"
+        )
+
+
+# --------------------------------------------------------------- tier
+
+AFFINITY = "affinity"
+LRU = "lru"
+
+
+class Entry:
+    __slots__ = (
+        "bytes", "ready_at", "last_touch", "prefetched", "settled",
+        "charged", "sharers",
+    )
+
+    def __init__(self, bytes_, ready_at, last_touch, prefetched, settled,
+                 charged, sharers):
+        self.bytes = bytes_
+        self.ready_at = ready_at
+        self.last_touch = last_touch
+        self.prefetched = prefetched
+        self.settled = settled
+        self.charged = charged
+        self.sharers = sharers
+
+
+class Counters:
+    FIELDS = (
+        "hits", "misses", "prefetch_hits", "evictions", "prefetch_issued",
+        "prefetch_cancelled", "stall_s", "bytes_loaded",
+    )
+
+    def __init__(self):
+        for f in self.FIELDS:
+            setattr(self, f, 0.0 if f == "stall_s" else 0)
+
+    def as_dict(self):
+        return {f: getattr(self, f) for f in self.FIELDS}
+
+
+class WeightTier:
+    """Port of memory/tier.rs::WeightTier. seq steps are
+    (block, bytes, sharers) with block = (segment, group)."""
+
+    def __init__(self, fast_bytes, prefetch, policy, read_bps):
+        self.fast_bytes = fast_bytes
+        self.prefetch = prefetch
+        self.policy = policy
+        self.read_bps = read_bps
+        self.resident = {}  # block -> Entry; iterate sorted() = BTreeMap
+        self.used = 0
+        self.tick = 0
+        self.now = 0.0
+        self.dma_free = 0.0
+        self.seq = []
+        self.cursor = 0
+        self.backlog_hint = 0
+        self.c = Counters()
+        self.ledger = TierLedger()
+
+    def begin_round(self, seq, backlog_hint):
+        self.seq = list(seq)
+        self.cursor = 0
+        self.backlog_hint = backlog_hint
+        if self.prefetch:
+            self.prefetch_round()
+        self.reconcile()
+
+    def upcoming_uses(self, b):
+        ahead = sum(
+            1 for s in self.seq[min(self.cursor, len(self.seq)):]
+            if s[0] == b
+        )
+        nxt = (
+            sum(1 for s in self.seq if s[0] == b)
+            if self.backlog_hint > 0 else 0
+        )
+        return ahead + nxt
+
+    def victim(self, require_unneeded):
+        best = None
+        for b in sorted(self.resident):
+            e = self.resident[b]
+            upcoming = self.upcoming_uses(b)
+            if require_unneeded and upcoming > 0:
+                continue
+            if self.policy == AFFINITY:
+                key = (upcoming, e.sharers, e.last_touch)
+            else:
+                key = (0, 0, e.last_touch)
+            if best is None or (key, b) < best:
+                best = (key, b)
+        return best[1] if best else None
+
+    def evict(self, b):
+        e = self.resident.pop(b, None)
+        if e is None:
+            return
+        self.used -= e.bytes
+        self.c.evictions += 1
+        if e.settled:
+            self.ledger.evict()
+        else:
+            self.ledger.cancel()
+            if e.prefetched:
+                self.c.prefetch_cancelled += 1
+
+    def make_room(self, bytes_, require_unneeded):
+        if bytes_ > self.fast_bytes:
+            return False
+        while self.used + bytes_ > self.fast_bytes:
+            v = self.victim(require_unneeded)
+            if v is None:
+                return False
+            self.evict(v)
+        return True
+
+    def prefetch_round(self):
+        seen = []
+        for (block, bytes_, sharers) in list(self.seq):
+            if block in seen or block in self.resident:
+                continue
+            seen.append(block)
+            if not self.make_room(bytes_, True):
+                continue
+            start = self.now if self.now > self.dma_free else self.dma_free
+            ready = start + bytes_ / self.read_bps
+            self.dma_free = ready
+            self.ledger.issue(True)
+            self.c.prefetch_issued += 1
+            self.c.bytes_loaded += bytes_
+            self.resident[block] = Entry(
+                bytes_, ready, 0, True, False, False, sharers
+            )
+            self.used += bytes_
+
+    def advance_exec(self, secs):
+        self.now += secs
+        for e in self.resident.values():
+            if not e.settled and e.ready_at <= self.now:
+                e.settled = True
+                self.ledger.complete()
+
+    def touch(self, block, bytes_, sharers):
+        self.tick += 1
+        tail = self.seq[min(self.cursor, len(self.seq)):]
+        for off, s in enumerate(tail):
+            if s[0] == block:
+                self.cursor = self.cursor + off + 1
+                break
+        stall = 0.0
+        charge = 0
+        e = self.resident.get(block)
+        if e is not None:
+            if e.ready_at > self.now:
+                stall = e.ready_at - self.now
+                self.now = e.ready_at
+            if not e.settled:
+                e.settled = True
+                self.ledger.complete()
+            if e.prefetched and e.last_touch == 0:
+                self.c.prefetch_hits += 1
+            if not e.charged:
+                charge = e.bytes
+                e.charged = True
+            e.last_touch = self.tick
+            self.c.hits += 1
+            self.c.stall_s += stall
+            self.reconcile()
+            return stall, charge
+        self.c.misses += 1
+        start = self.now if self.now > self.dma_free else self.dma_free
+        done = start + bytes_ / self.read_bps
+        stall = done - self.now
+        self.now = done
+        self.dma_free = done
+        charge = bytes_
+        self.c.stall_s += stall
+        self.c.bytes_loaded += bytes_
+        cached = self.make_room(bytes_, False)
+        self.ledger.issue(cached)
+        self.ledger.complete()
+        if cached:
+            self.resident[block] = Entry(
+                bytes_, done, self.tick, False, True, True, sharers
+            )
+            self.used += bytes_
+        self.reconcile()
+        return stall, charge
+
+    def segment_view(self, nseg):
+        view = [None] * nseg
+        for (s, g) in sorted(self.resident):
+            e = self.resident[(s, g)]
+            if not e.settled or s >= nseg:
+                continue
+            if view[s] is not None and view[s][0] >= e.last_touch:
+                continue
+            view[s] = (e.last_touch, g)
+        return [None if v is None else v[1] for v in view]
+
+    def reconcile(self):
+        in_flight = sum(1 for e in self.resident.values() if not e.settled)
+        self.ledger.reconcile(len(self.resident), in_flight)
+
+    def close_check(self):
+        if self.dma_free > self.now:
+            self.advance_exec(self.dma_free - self.now)
+        self.reconcile()
+        self.ledger.close_check()
+
+
+# ------------------------------------------- unit-suite re-derivation
+
+BPS = 1_000_000.0  # the unit suite's 1 MB/s: 1 byte = 1 us
+
+CHECKS = []
+
+
+def check(name):
+    def deco(fn):
+        CHECKS.append((name, fn))
+        return fn
+    return deco
+
+
+def step(seg, grp, bytes_, sharers):
+    return ((seg, grp), bytes_, sharers)
+
+
+def run_seq(t, seq, backlog, exec_s):
+    before = t.c.misses
+    t.begin_round(seq, backlog)
+    for (block, bytes_, sharers) in seq:
+        t.touch(block, bytes_, sharers)
+        t.advance_exec(exec_s)
+    return t.c.misses - before
+
+
+@check("affinity_beats_lru_on_load_count")
+def _():
+    a, b, c = step(0, 0, 1, 3), step(1, 0, 1, 1), step(2, 0, 1, 1)
+    seq = [a, b, c, a]
+    aff = WeightTier(2, False, AFFINITY, BPS)
+    aff_misses = run_seq(aff, seq, 0, 0.0)
+    lru = WeightTier(2, False, LRU, BPS)
+    lru_misses = run_seq(lru, seq, 0, 0.0)
+    assert aff_misses == 3, aff_misses
+    assert lru_misses == 4, lru_misses
+    assert aff.c.stall_s < lru.c.stall_s
+    aff.close_check()
+    lru.close_check()
+
+
+@check("sharers_tiebreak_keeps_shared_block")
+def _():
+    t = WeightTier(2, False, AFFINITY, BPS)
+    run_seq(t, [step(0, 0, 1, 4), step(1, 0, 1, 1), step(2, 0, 1, 1)], 0, 0.0)
+    assert t.segment_view(3)[0] is not None
+    assert t.segment_view(3)[1] is None
+    t.close_check()
+
+
+@check("capacity_zero_streams_everything")
+def _():
+    t = WeightTier(0, True, AFFINITY, BPS)
+    seq = [step(0, 0, 10, 1), step(1, 0, 10, 1), step(0, 0, 10, 1)]
+    misses = run_seq(t, seq, 1, 0.0)
+    assert misses == 3 and t.c.hits == 0 and t.used == 0
+    assert t.c.prefetch_issued == 0
+    assert abs(t.c.stall_s - 30e-6) < 1e-12, t.c.stall_s
+    t.close_check()
+
+
+@check("thrash_terminates_and_balances")
+def _():
+    a, b = step(0, 0, 1, 1), step(0, 1, 1, 1)
+    t = WeightTier(1, True, AFFINITY, BPS)
+    run_seq(t, [a, b] * 50, 1, 0.0)
+    assert t.c.hits + t.c.misses == 100
+    assert t.c.evictions <= t.c.misses + t.c.prefetch_issued
+    assert t.used <= 1
+    t.close_check()
+
+
+@check("prefetch_hides_stall_behind_compute")
+def _():
+    seq = [step(0, 0, 100, 1), step(1, 0, 100, 1), step(2, 0, 100, 1)]
+    exec_s = 200e-6
+    off = WeightTier(2**63, False, AFFINITY, BPS)
+    run_seq(off, seq, 0, exec_s)
+    on = WeightTier(2**63, True, AFFINITY, BPS)
+    run_seq(on, seq, 0, exec_s)
+    assert abs(off.c.stall_s - 300e-6) < 1e-12, off.c.stall_s
+    assert abs(on.c.stall_s - 100e-6) < 1e-12, on.c.stall_s
+    assert on.c.prefetch_hits == 3 and on.c.misses == 0
+    off.close_check()
+    on.close_check()
+
+
+@check("unbounded_second_round_all_hits")
+def _():
+    seq = [step(0, 0, 10, 2), step(1, 0, 20, 1), step(2, 0, 30, 1)]
+    t = WeightTier(2**63, False, AFFINITY, BPS)
+    first = run_seq(t, seq, 0, 1e-3)
+    stall_after_first = t.c.stall_s
+    second = run_seq(t, seq, 0, 1e-3)
+    assert first == 3 and second == 0
+    assert t.c.stall_s == stall_after_first
+    assert t.c.bytes_loaded == 60
+    t.close_check()
+
+
+@check("backlog_hint_makes_round_blocks_sticky")
+def _():
+    a, b = step(0, 0, 1, 2), step(1, 0, 1, 2)
+    t = WeightTier(2, False, AFFINITY, BPS)
+    run_seq(t, [a, b], 3, 0.0)
+    misses = run_seq(t, [a, b], 0, 0.0)
+    assert misses == 0, misses
+    t.close_check()
+
+
+@check("segment_view_tracks_settled_recency")
+def _():
+    t = WeightTier(2**63, True, AFFINITY, BPS)
+    g0, g1 = step(0, 0, 100, 1), step(0, 1, 100, 1)
+    t.begin_round([g0, g1], 0)
+    assert t.segment_view(1) == [None]
+    t.touch(g0[0], g0[1], g0[2])
+    assert t.segment_view(1) == [0]
+    t.touch(g1[0], g1[1], g1[2])
+    assert t.segment_view(1) == [1]
+    t.close_check()
+
+
+@check("untouched_prefetch_balances_at_close")
+def _():
+    t = WeightTier(2**63, True, AFFINITY, BPS)
+    t.begin_round([step(0, 0, 10, 1), step(1, 0, 10, 1)], 0)
+    t.touch((0, 0), 10, 1)
+    t.close_check()
+    assert t.c.prefetch_issued == 2 and t.c.prefetch_hits == 1
+
+
+# -------------------------------------- bench cold-start derivation
+#
+# The runtime_hotpath.rs tier scenario: cnn5 split at bounds [1,3,4]
+# into 4 segments, graph5's partitions, msp430 rates, fast tier = half
+# the weight footprint, 24 frames served in batch-8 rounds through the
+# batched executor (run_round_batched): shared-trunk segments execute
+# once per round per group (the batch-activation cache absorbs the
+# rest), each executed segment touches its block then advances the
+# clock by the batch's serial exec time.
+
+MSP430_BPS = 4.0e6
+MSP430_FREQ = 16e6
+CYC_MAC, CYC_ELEM = 4.0, 2.0
+
+# cnn5 per-layer (params, macs, out_elems); logits at ncls=2
+CNN5 = [
+    (3 * 3 * 1 * 8 + 8, 18_432, 8 * 8 * 8),
+    (3 * 3 * 8 * 16 + 16, 73_728, 4 * 4 * 16),
+    (256 * 64 + 64, 16_384, 64),
+    (64 * 32 + 32, 2_048, 32),
+    (32 * 2 + 2, 64, 2),
+]
+BOUNDS = [1, 3, 4]
+# graph5 partitions: group_of[segment][task]
+GROUPS = [
+    [0, 0, 0, 0, 0],
+    [0, 0, 0, 1, 1],
+    [0, 1, 1, 2, 2],
+    [0, 1, 2, 3, 4],
+]
+
+
+def segments():
+    edges = [0] + BOUNDS + [len(CNN5)]
+    out = []
+    for s in range(len(edges) - 1):
+        layers = CNN5[edges[s]:edges[s + 1]]
+        bytes_ = sum(p for (p, _, _) in layers) * 4
+        macs = sum(m for (_, m, _) in layers)
+        elems = sum(e for (_, _, e) in layers)
+        exec_s = (macs * CYC_MAC + elems * CYC_ELEM) / MSP430_FREQ
+        out.append((bytes_, exec_s))
+    return out
+
+
+def bench_cold_start():
+    segs = segments()
+    nseg, ntasks = len(segs), 5
+    footprint = sum(
+        segs[s][0] * len(set(GROUPS[s])) for s in range(nseg)
+    )
+    cap = footprint // 2
+    sharers = [
+        [GROUPS[s].count(GROUPS[s][t]) for t in range(ntasks)]
+        for s in range(nseg)
+    ]
+    n_frames, batch = 24, 8
+    results = {}
+    for prefetch in (False, True):
+        t = WeightTier(cap, prefetch, AFFINITY, MSP430_BPS)
+        remaining = n_frames
+        while remaining > 0:
+            m = min(batch, remaining)
+            remaining -= m
+            seq = [
+                ((s, GROUPS[s][task]), segs[s][0], sharers[s][task])
+                for task in range(ntasks)
+                for s in range(nseg)
+            ]
+            t.begin_round(seq, remaining)
+            bact = [None] * nseg  # batch-activation cache: group per seg
+            for task in range(ntasks):
+                for s in range(nseg):
+                    g = GROUPS[s][task]
+                    if bact[s] == g:
+                        continue  # activation reused: no touch, no exec
+                    t.touch((s, g), segs[s][0], sharers[s][task])
+                    t.advance_exec(segs[s][1] * m)
+                    bact[s] = g
+        t.close_check()
+        results["prefetch_on" if prefetch else "prefetch_off"] = t.c.as_dict()
+    return {
+        "footprint_bytes": footprint,
+        "fast_tier_bytes": cap,
+        "frames": n_frames,
+        "batch": batch,
+        **results,
+    }
+
+
+def main():
+    failed = 0
+    for name, fn in CHECKS:
+        try:
+            fn()
+            print(f"  ok  {name}")
+        except AssertionError as e:
+            failed += 1
+            print(f"FAIL  {name}: {e}")
+    if failed:
+        print(f"{failed} of {len(CHECKS)} tier-model checks FAILED")
+        return 1
+    print(f"all {len(CHECKS)} tier-model checks pass")
+    bench = bench_cold_start()
+    off = bench["prefetch_off"]
+    on = bench["prefetch_on"]
+    assert on["stall_s"] < off["stall_s"], (
+        "prefetch must reduce visible stall below demand-only"
+    )
+    bench["stall_gain"] = off["stall_s"] / max(on["stall_s"], 1e-12)
+    print(json.dumps(bench, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
