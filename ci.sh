@@ -67,6 +67,17 @@ tier_gate --lib memory::tier::
 tier_gate --lib tiered_
 tier_gate --test props prop_tiered_serving_matches_flat_baseline
 
+# the network-QoS battery, same by-name rule: wire-format + admission
+# unit suites, the listener integration tests, the 64-connection
+# shedding acceptance test, and the shedding-order property test. A
+# rename or an accidental #[ignore] fails the gate rather than
+# silently dropping coverage.
+echo "== network-QoS gate: wire/listener/shedding suites (named) =="
+tier_gate --lib coordinator::wire::
+tier_gate --lib coordinator::net::
+tier_gate --test net_qos qos_
+tier_gate --test props prop_qos_shedding_never_drops_realtime_before_best_effort
+
 # benches are harness=false binaries that cargo test does not compile;
 # without this they rot silently
 echo "== benches compile: cargo bench --no-run =="

@@ -323,11 +323,10 @@ fn main() {
     let mk_sources = || -> Vec<Source> {
         (0..4)
             .map(|s| Source {
-                name: format!("sensor{s}"),
-                frames: src_frames(s),
                 interval: Some(Duration::from_micros(500)),
                 slack: Some(Duration::from_millis(2)),
                 prep: Some(Duration::from_micros(400)),
+                ..Source::flood(&format!("sensor{s}"), src_frames(s))
             })
             .collect()
     };

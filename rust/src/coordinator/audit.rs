@@ -257,6 +257,103 @@ impl FeedLedger {
     }
 }
 
+/// Custody ledger for one network connection (`coordinator::net`):
+/// unlike a [`SourceLedger`], the offered total is not known up front —
+/// frames are offered as they decode off the socket — so `offer` grows
+/// the total and every retirement must stay within it. Each offered
+/// frame becomes exactly one of delivered / stale / backpressure /
+/// truncated (the fourth bucket is the mid-frame-hangup remainder and
+/// the malformed-record case — bytes that never became a well-formed
+/// frame still get counted, mirroring the PR-5 `feed_frames` fix at the
+/// socket edge). `close` reconciles the connection's own counters
+/// against the transitions when the connection ends.
+#[cfg(debug_assertions)]
+#[derive(Debug, Default)]
+pub struct ConnLedger {
+    offered: usize,
+    delivered: usize,
+    stale: usize,
+    backpressure: usize,
+    truncated: usize,
+}
+
+#[cfg(debug_assertions)]
+impl ConnLedger {
+    pub fn new() -> ConnLedger {
+        ConnLedger::default()
+    }
+
+    fn taken(&self) -> usize {
+        self.delivered + self.stale + self.backpressure + self.truncated
+    }
+
+    /// A frame surfaced at this connection: decoded off the wire, or a
+    /// partial/malformed record about to be counted truncated.
+    pub fn offer(&mut self) {
+        self.offered += 1;
+    }
+
+    fn take_one(&mut self, what: &str) {
+        assert!(
+            self.taken() < self.offered,
+            "custody violation: connection {} a frame beyond its {} offered",
+            what,
+            self.offered
+        );
+    }
+
+    pub fn deliver(&mut self) {
+        self.take_one("delivered");
+        self.delivered += 1;
+    }
+
+    pub fn stale(&mut self) {
+        self.take_one("shed (stale)");
+        self.stale += 1;
+    }
+
+    pub fn backpressure(&mut self) {
+        self.take_one("shed (backpressure)");
+        self.backpressure += 1;
+    }
+
+    pub fn truncate(&mut self) {
+        self.take_one("truncated");
+        self.truncated += 1;
+    }
+
+    /// Connection close: the connection's counters must match the
+    /// transitions exactly and every offered frame must be retired —
+    /// `delivered + stale + backpressure + truncated == offered`.
+    pub fn close(
+        &self,
+        delivered: usize,
+        stale: usize,
+        backpressure: usize,
+        truncated: usize,
+    ) {
+        assert!(
+            (delivered, stale, backpressure, truncated)
+                == (self.delivered, self.stale, self.backpressure, self.truncated),
+            "custody violation: connection counted {delivered}/{stale}/\
+             {backpressure}/{truncated} (delivered/stale/backpressure/\
+             truncated), ledger saw {}/{}/{}/{}",
+            self.delivered,
+            self.stale,
+            self.backpressure,
+            self.truncated
+        );
+        assert_eq!(
+            self.taken(),
+            self.offered,
+            "custody violation: connection retired {} of {} offered frames \
+             (hangup remainder lost?)",
+            self.taken(),
+            self.offered
+        );
+    }
+}
+
 /// Custody ledger for the fast weight tier (`memory::tier`): every
 /// slow-tier load issued — prefetch, demand, or stream-through — must
 /// be retired exactly once, as completed (data arrived) or cancelled
@@ -429,6 +526,30 @@ impl FeedLedger {
     pub fn drop_n(&mut self, _n: usize) {}
     #[inline(always)]
     pub fn finish(&self, _reported_dropped: usize) {}
+}
+
+#[cfg(not(debug_assertions))]
+#[derive(Debug, Default)]
+pub struct ConnLedger;
+
+#[cfg(not(debug_assertions))]
+impl ConnLedger {
+    #[inline(always)]
+    pub fn new() -> ConnLedger {
+        ConnLedger
+    }
+    #[inline(always)]
+    pub fn offer(&mut self) {}
+    #[inline(always)]
+    pub fn deliver(&mut self) {}
+    #[inline(always)]
+    pub fn stale(&mut self) {}
+    #[inline(always)]
+    pub fn backpressure(&mut self) {}
+    #[inline(always)]
+    pub fn truncate(&mut self) {}
+    #[inline(always)]
+    pub fn close(&self, _d: usize, _s: usize, _b: usize, _t: usize) {}
 }
 
 #[cfg(not(debug_assertions))]
@@ -608,6 +729,51 @@ mod tests {
                 plan
             );
         }
+    }
+
+    #[test]
+    fn conn_ledger_accepts_a_conserving_connection() {
+        let mut l = ConnLedger::new();
+        l.offer();
+        l.deliver();
+        l.offer();
+        l.backpressure();
+        l.offer();
+        l.stale();
+        l.offer();
+        l.truncate(); // the hangup remainder
+        l.close(1, 1, 1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn conn_ledger_panics_on_retire_without_offer() {
+        let mut l = ConnLedger::new();
+        l.offer();
+        l.deliver();
+        l.deliver(); // corrupt: retired a frame the wire never produced
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn conn_ledger_panics_on_lost_hangup_remainder_at_close() {
+        let mut l = ConnLedger::new();
+        l.offer();
+        l.deliver();
+        l.offer(); // a partial record was on the wire at hangup...
+        // ...but nobody counted it truncated (the PR-5 bug class at the
+        // socket edge)
+        l.close(1, 0, 0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn conn_ledger_panics_on_counter_ledger_disagreement() {
+        let mut l = ConnLedger::new();
+        l.offer();
+        l.backpressure();
+        // corrupt: the connection reports the drop in the wrong bucket
+        l.close(0, 1, 0, 0);
     }
 
     #[test]

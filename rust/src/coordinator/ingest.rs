@@ -31,6 +31,7 @@ use crate::sync::thread;
 
 use super::audit::SourceLedger;
 use super::server::Frame;
+use super::wire::QosClass;
 
 /// One frame source behind the ingest tier.
 #[derive(Debug)]
@@ -52,6 +53,13 @@ pub struct Source {
     /// producer thread before hand-off. This is what makes a fast source
     /// "faster than one producer thread".
     pub prep: Option<Duration>,
+    /// Admission class stamped on every frame this source offers
+    /// (`coordinator::wire`). Defaults to [`QosClass::Realtime`] — the
+    /// class the shedding rule always admits — so in-process synthetic
+    /// sources behave exactly as before the network front-end existed;
+    /// class-aware sinks (`WsDispatch::offer_classed`) shed lower
+    /// classes first under backpressure.
+    pub qos: QosClass,
 }
 
 impl Source {
@@ -63,6 +71,7 @@ impl Source {
             interval: None,
             slack: None,
             prep: None,
+            qos: QosClass::Realtime,
         }
     }
 
@@ -74,6 +83,39 @@ impl Source {
     ) -> Source {
         Source { interval: Some(interval), ..Source::flood(name, frames) }
     }
+
+    /// Same source, different admission class.
+    pub fn with_qos(self, qos: QosClass) -> Source {
+        Source { qos, ..self }
+    }
+}
+
+/// Split a flat frame list into `k` flood [`Source`]s by *position*
+/// round-robin — the ONE assignment path between a CLI frame list and
+/// the producer pool. `run_ingest` then assigns source `i` to producer
+/// `i % k` with the same positional rule, so the two layers can never
+/// disagree. `k` is clamped to the frame count and empty splits are
+/// dropped, so clamping (or `k > frames`) can never produce a source no
+/// producer owns: previously `main.rs` split by frame *id* modulo the
+/// unclamped producer count, a second assignment rule that could strand
+/// a source when the two disagreed.
+pub fn split_round_robin(
+    frames: Vec<(u64, Tensor)>,
+    k: usize,
+    prefix: &str,
+) -> Vec<Source> {
+    let k = k.max(1).min(frames.len().max(1));
+    let mut splits: Vec<Vec<(u64, Tensor)>> =
+        (0..k).map(|_| Vec::new()).collect();
+    for (i, f) in frames.into_iter().enumerate() {
+        splits[i % k].push(f);
+    }
+    splits
+        .into_iter()
+        .enumerate()
+        .filter(|(_, fs)| !fs.is_empty())
+        .map(|(i, fs)| Source::flood(&format!("{prefix}{i}"), fs))
+        .collect()
 }
 
 /// Per-source accounting after the pool drains.
@@ -137,6 +179,7 @@ struct Cursor {
     interval: Option<Duration>,
     slack: Option<Duration>,
     prep: Option<Duration>,
+    qos: QosClass,
     frames: VecDeque<(u64, Tensor)>,
     offered: usize,
     sent: usize,
@@ -158,6 +201,7 @@ impl Cursor {
             interval: src.interval,
             slack: src.slack,
             prep: src.prep,
+            qos: src.qos,
             frames: src.frames.into(),
             offered,
             sent: 0,
@@ -193,11 +237,27 @@ impl Cursor {
     }
 }
 
-/// Burn `d` of CPU on this thread — the synthetic decode/copy cost.
-/// Busy-wait, not sleep: admission work occupies the producer, which is
-/// exactly what makes a single producer fall behind several schedules.
+/// Occupy this thread for `d` — the synthetic decode/copy cost that
+/// makes a single producer fall behind several schedules.
+///
+/// Short costs spin: at the sub-millisecond scale the paced-source
+/// timing tests (and real sensor pacing) live at, an OS sleep's wakeup
+/// jitter would swamp the cost being modeled. Longer costs used to spin
+/// too — pinning a core at 100% doing nothing for multi-millisecond
+/// `prep` values — so above [`SPIN_TAIL`] the wait now sleeps to within
+/// `SPIN_TAIL` of the target and spins only the tail: the producer is
+/// still occupied (unavailable to its other sources) for the full `d`,
+/// with spin-accurate completion, without burning the core for the bulk
+/// of a long wait.
+const SPIN_TAIL: Duration = Duration::from_micros(500);
+
 fn busy_wait(d: Duration) {
     let t = Instant::now();
+    if d > SPIN_TAIL {
+        // under loom this sleep is a yield (no clock there); the spin
+        // tail below still runs the full duration on real builds
+        thread::sleep(d - SPIN_TAIL);
+    }
     while t.elapsed() < d {
         std::hint::spin_loop();
     }
@@ -272,7 +332,17 @@ where
             if let Some(p) = c.prep {
                 busy_wait(p);
             }
-            if sink(Frame::new(id, input)) {
+            // propagate the staleness budget downstream as an absolute
+            // deadline (`due + slack` — the instant this frame would
+            // have been shed here): plain sinks ignore it, class-aware
+            // sinks (`offer_classed`) shed at it instead of queueing a
+            // frame the contract already condemned. Flood sources carry
+            // no schedule and therefore no deadline.
+            let deadline = match (c.interval, c.slack) {
+                (Some(_), Some(slack)) => Some(due + slack),
+                _ => None,
+            };
+            if sink(Frame::with_qos(id, input, c.qos, deadline)) {
                 c.delivered += 1;
                 c.audit.deliver();
             } else {
@@ -421,11 +491,9 @@ mod tests {
         // instant: (almost) every frame is shed as stale, and the shed
         // frames never reach the sink — but they are still accounted
         let src = Source {
-            name: "hot".into(),
-            frames: frames(0, 16),
             interval: Some(Duration::from_nanos(1)),
             slack: Some(Duration::ZERO),
-            prep: None,
+            ..Source::flood("hot", frames(0, 16))
         };
         let seen = AtomicUsize::new(0);
         let report = run_ingest(vec![src], 1, &|_| {
@@ -446,11 +514,9 @@ mod tests {
         // slack on it must not shed frames that are merely later than
         // pool start + slack
         let src = Source {
-            name: "flood-with-slack".into(),
-            frames: frames(0, 50),
-            interval: None,
             slack: Some(Duration::ZERO),
             prep: Some(Duration::from_micros(50)),
+            ..Source::flood("flood-with-slack", frames(0, 50))
         };
         let report = run_ingest(vec![src], 1, &|_| true);
         assert_eq!(report.delivered(), 50);
@@ -461,11 +527,8 @@ mod tests {
     fn no_slack_delivers_no_matter_how_late() {
         // same overrun schedule, but slack = None: lateness never sheds
         let src = Source {
-            name: "late-ok".into(),
-            frames: frames(0, 10),
             interval: Some(Duration::from_nanos(1)),
-            slack: None,
-            prep: None,
+            ..Source::flood("late-ok", frames(0, 10))
         };
         let report = run_ingest(vec![src], 1, &|_| true);
         assert_eq!(report.delivered(), 10);
@@ -480,18 +543,13 @@ mod tests {
         // would drain the flood first and shed every paced frame; the
         // rotating pick must interleave them so (almost) none go stale.
         let flood = Source {
-            name: "bulk".into(),
-            frames: frames(1000, 200),
-            interval: None,
-            slack: None,
             prep: Some(Duration::from_micros(300)),
+            ..Source::flood("bulk", frames(1000, 200))
         };
         let paced = Source {
-            name: "sensor".into(),
-            frames: frames(0, 20),
             interval: Some(Duration::from_millis(2)),
             slack: Some(Duration::from_millis(8)),
-            prep: None,
+            ..Source::flood("sensor", frames(0, 20))
         };
         let report = run_ingest(vec![flood, paced], 1, &|_| true);
         let bulk = &report.sources[0];
@@ -513,6 +571,91 @@ mod tests {
             run_ingest(vec![Source::flood("only", frames(0, 3))], 8, &|_| true);
         assert_eq!(report.producers, 1);
         assert_eq!(report.delivered(), 3);
+    }
+
+    #[test]
+    fn busy_wait_hybrid_occupies_full_duration() {
+        // below the spin tail: pure spin, exact as ever. Above it: the
+        // sleep+spin hybrid must still run the FULL duration (the
+        // producer stays occupied), never return early, and not overrun
+        // wildly — the paced timing tests above depend on that.
+        for d in [Duration::from_micros(200), Duration::from_millis(3)] {
+            let t = Instant::now();
+            busy_wait(d);
+            let took = t.elapsed();
+            assert!(took >= d, "busy_wait returned early: {took:?} < {d:?}");
+            assert!(
+                took < d + Duration::from_millis(40),
+                "busy_wait overran: {took:?} for {d:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_round_robin_is_positional_and_strands_nothing() {
+        // position-based deal: frame ids play no role in assignment
+        // (ids here are deliberately NOT 0..n, the old id-modulo rule
+        // would scatter them differently)
+        let fs: Vec<(u64, Tensor)> = [7u64, 7, 9, 1000, 3, 5]
+            .iter()
+            .map(|&id| (id, Tensor::full(vec![1, 1, 1, 1], 0.0)))
+            .collect();
+        let srcs = split_round_robin(fs.clone(), 2, "cli");
+        assert_eq!(srcs.len(), 2);
+        assert_eq!(
+            srcs[0].frames.iter().map(|f| f.0).collect::<Vec<_>>(),
+            vec![7, 9, 3]
+        );
+        assert_eq!(
+            srcs[1].frames.iter().map(|f| f.0).collect::<Vec<_>>(),
+            vec![7, 1000, 5]
+        );
+        // k beyond the frame count clamps — no empty source is ever
+        // produced for a producer to be stranded with (or without)
+        let srcs = split_round_robin(fs.clone(), 64, "cli");
+        assert_eq!(srcs.len(), 6);
+        assert!(srcs.iter().all(|s| s.frames.len() == 1));
+        // and the whole pipeline conserves: every frame lands exactly once
+        let total: usize = srcs.iter().map(|s| s.frames.len()).sum();
+        assert_eq!(total, 6);
+        assert!(split_round_robin(Vec::new(), 4, "cli").is_empty());
+    }
+
+    #[test]
+    fn scheduled_slack_propagates_as_frame_deadline() {
+        // a paced source with slack stamps each delivered frame with the
+        // absolute instant it would have been shed at ingest (due +
+        // slack); flood sources carry no deadline, and every in-process
+        // source defaults to the always-admitted realtime class
+        let paced = Source {
+            interval: Some(Duration::from_micros(100)),
+            slack: Some(Duration::from_millis(50)),
+            ..Source::flood("paced", frames(0, 3))
+        };
+        let seen = Mutex::new(Vec::<(Option<Instant>, QosClass)>::new());
+        let t0 = Instant::now();
+        run_ingest(vec![paced], 1, &|f: Frame| {
+            lock_unpoisoned(&seen).push((f.deadline, f.qos));
+            true
+        });
+        let seen = lock_unpoisoned(&seen);
+        assert_eq!(seen.len(), 3);
+        for (i, (deadline, qos)) in seen.iter().enumerate() {
+            assert_eq!(*qos, QosClass::Realtime);
+            let d = deadline.unwrap_or_else(|| {
+                panic!("paced frame {i} lost its deadline")
+            });
+            // due_i + slack is ≥ pool start + slack; generous upper bound
+            assert!(d >= t0 + Duration::from_millis(50));
+            assert!(d <= t0 + Duration::from_secs(5));
+        }
+        let flood = Source::flood("flood", frames(0, 2));
+        let bare = Mutex::new(Vec::<Option<Instant>>::new());
+        run_ingest(vec![flood], 1, &|f: Frame| {
+            lock_unpoisoned(&bare).push(f.deadline);
+            true
+        });
+        assert!(lock_unpoisoned(&bare).iter().all(Option::is_none));
     }
 }
 

@@ -17,12 +17,15 @@
 pub mod audit;
 pub mod executor;
 pub mod ingest;
+pub mod net;
 pub mod pipeline;
 pub mod server;
 pub mod shard;
+pub mod wire;
 
 pub use executor::{BatchRound, BlockExecutor};
 pub use ingest::{run_ingest, IngestReport, Source, SourceReport};
+pub use net::{serve_net, ConnReport, NetOpts, NetReport};
 pub use pipeline::{prepare, Prepared, PrepareConfig};
 pub use server::{
     process_frame, run_executor, serve, Frame, FrameResult, ServePlan,
@@ -32,3 +35,4 @@ pub use shard::{
     serve_sharded, serve_sharded_opts, serve_sharded_sources, BatchPolicy,
     ShardOpts, ShardReport,
 };
+pub use wire::QosClass;

@@ -1,0 +1,881 @@
+//! Framed TCP serving front-end: many concurrent client connections,
+//! multiplexed onto K producer threads, feeding the work-stealing
+//! scheduler through class-aware admission (`coordinator::wire`).
+//!
+//! Layout mirrors the ingest tier it sits beside: an acceptor deals
+//! connections to K producers by *position* round-robin (connection `i`
+//! to producer `i % k` — the same rule `run_ingest` uses for sources,
+//! so there is exactly one assignment convention in the crate); each
+//! producer rotates fairly over its live connections, reading a bounded
+//! chunk per visit so a firehose client cannot starve its siblings
+//! (the ingest tier's fairness rule, applied to sockets); every decoded
+//! record passes [`WsDispatch::offer_classed`], which sheds batch and
+//! best-effort traffic before realtime under backpressure and sheds
+//! deadline-expired frames as stale before they occupy a queue slot.
+//!
+//! Accounting is per connection and exact, with a fourth drop bucket
+//! the in-process tier never needed: `delivered + dropped_stale +
+//! dropped_backpressure + dropped_truncated == offered`. *Truncated*
+//! counts bytes that never became a well-formed frame — a mid-record
+//! client hangup (the remainder is one offered, truncated frame: the
+//! PR-5 `feed_frames` rule at the socket edge) or a malformed record
+//! (counted, then the connection is closed). The contract is reconciled
+//! by a debug-build [`ConnLedger`] at every connection close and
+//! re-asserted in release builds after the shutdown barrier.
+//!
+//! Shutdown protocol (CONCURRENCY.md §Listener shutdown): the acceptor
+//! stops at `max_conns` (or when no client arrives within
+//! `accept_grace`), drops the producer channels — disconnection IS the
+//! signal, there is no shared flag — each producer finishes draining
+//! its live connections and returns its reports, and the
+//! `thread::scope` joins are the barrier; a producer panic re-raises on
+//! the caller rather than vanishing into a bogus report.
+
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::Tensor;
+use crate::runtime::Backend;
+use crate::sync::mpsc;
+use crate::sync::thread;
+
+use super::audit::ConnLedger;
+use super::executor::BlockExecutor;
+use super::server::{Frame, ServePlan};
+use super::shard::{
+    serve_work_stealing_core, Admission, ShardOpts, ShardReport, WsDispatch,
+};
+use super::wire::{decode_frame, QosClass, WireFrame};
+
+/// Bytes read from one connection per fair-rotation visit. Bounded so a
+/// connection with megabytes buffered cannot monopolize its producer.
+const READ_CHUNK: usize = 16 * 1024;
+/// Producer nap when a full rotation made no progress (pacing only —
+/// never a correctness mechanism; a yield under loom).
+const POLL_IDLE: Duration = Duration::from_micros(200);
+/// Acceptor nap between nonblocking accept attempts.
+const ACCEPT_POLL: Duration = Duration::from_micros(500);
+
+/// Front-end knobs for [`serve_net`].
+#[derive(Debug, Clone)]
+pub struct NetOpts {
+    /// Producer threads multiplexing the connections (≥ 1).
+    pub producers: usize,
+    /// The serve accepts exactly this many connections, then stops
+    /// accepting and drains — the run's natural end. 0 serves nobody.
+    pub max_conns: usize,
+    /// Per-class admission on/off. Off bypasses BOTH the class shedding
+    /// rule and client-deadline staleness (every frame is offered
+    /// plainly, dropped only by a hard-full injector) — the measured
+    /// baseline the QoS experiments compare against.
+    pub qos: bool,
+    /// Stop accepting early when no client has connected for this long
+    /// (so a run whose clients died does not wait forever).
+    pub accept_grace: Duration,
+}
+
+impl Default for NetOpts {
+    fn default() -> NetOpts {
+        NetOpts {
+            producers: 1,
+            max_conns: 1,
+            qos: true,
+            accept_grace: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Per-connection accounting, the `SourceReport` of the network edge.
+#[derive(Debug, Clone)]
+pub struct ConnReport {
+    /// Accept-order index (connection `conn` went to producer
+    /// `conn % producers`).
+    pub conn: usize,
+    /// Tenant id from the connection's first decoded record (0 when no
+    /// record ever decoded).
+    pub tenant: u32,
+    pub offered: usize,
+    pub delivered: usize,
+    /// Shed because the client deadline passed before admission.
+    pub dropped_stale: usize,
+    /// Shed by the class rule or a hard-full injector.
+    pub dropped_backpressure: usize,
+    /// Bytes that never became a well-formed frame: the mid-record
+    /// hangup remainder, or a malformed record (connection then closed).
+    pub dropped_truncated: usize,
+}
+
+impl ConnReport {
+    pub fn dropped(&self) -> usize {
+        self.dropped_stale + self.dropped_backpressure + self.dropped_truncated
+    }
+
+    fn empty(conn: usize) -> ConnReport {
+        ConnReport {
+            conn,
+            tenant: 0,
+            offered: 0,
+            delivered: 0,
+            dropped_stale: 0,
+            dropped_backpressure: 0,
+            dropped_truncated: 0,
+        }
+    }
+}
+
+/// Per-class accounting across every connection. Truncated frames carry
+/// no class (the class byte never fully arrived or was garbage), so the
+/// class rows cover decoded records only:
+/// `Σ classes.offered + truncated == Σ conns.offered`.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub qos: QosClass,
+    pub offered: usize,
+    pub delivered: usize,
+    pub dropped_stale: usize,
+    pub dropped_backpressure: usize,
+}
+
+impl ClassReport {
+    pub fn dropped(&self) -> usize {
+        self.dropped_stale + self.dropped_backpressure
+    }
+}
+
+/// Aggregate result of one network serve.
+#[derive(Debug, Clone)]
+pub struct NetReport {
+    /// Producer threads actually used.
+    pub producers: usize,
+    /// Per-connection accounting, in accept order.
+    pub conns: Vec<ConnReport>,
+    /// Per-class accounting, in shedding-priority order
+    /// ([`QosClass::ALL`]).
+    pub classes: Vec<ClassReport>,
+}
+
+impl NetReport {
+    pub fn offered(&self) -> usize {
+        self.conns.iter().map(|c| c.offered).sum()
+    }
+
+    pub fn delivered(&self) -> usize {
+        self.conns.iter().map(|c| c.delivered).sum()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.conns.iter().map(|c| c.dropped()).sum()
+    }
+
+    pub fn dropped_truncated(&self) -> usize {
+        self.conns.iter().map(|c| c.dropped_truncated).sum()
+    }
+
+    pub fn class(&self, qos: QosClass) -> &ClassReport {
+        &self.classes[qos as usize]
+    }
+
+    /// The per-class table `serve --listen` prints (same shape as the
+    /// shard error table and the per-source ingest table).
+    pub fn class_table(&self) -> String {
+        let mut t = String::from(
+            "per-class admission (network front-end):\n  class        \
+             offered  delivered  stale  backpressure\n",
+        );
+        for c in &self.classes {
+            t.push_str(&format!(
+                "  {:<11}  {:>7}  {:>9}  {:>5}  {:>12}\n",
+                c.qos.name(),
+                c.offered,
+                c.delivered,
+                c.dropped_stale,
+                c.dropped_backpressure
+            ));
+        }
+        let trunc = self.dropped_truncated();
+        if trunc > 0 {
+            t.push_str(&format!(
+                "  ({trunc} truncated/malformed record(s) carry no class)\n"
+            ));
+        }
+        t
+    }
+}
+
+/// Per-class tallies one producer accumulates (merged at the barrier).
+#[derive(Debug, Clone, Copy, Default)]
+struct ClassTally {
+    offered: usize,
+    delivered: usize,
+    stale: usize,
+    backpressure: usize,
+}
+
+/// One live client connection on a producer thread.
+struct Conn {
+    idx: usize,
+    stream: TcpStream,
+    /// Bytes read but not yet decoded (at most one partial record after
+    /// each pump).
+    buf: Vec<u8>,
+    /// Arrival stamp of the oldest buffered byte: client deadlines are
+    /// measured from the first byte of the record's read burst, stamped
+    /// when `buf` goes empty → nonempty. Conservative for frames that
+    /// share one burst (they inherit the earliest stamp), which can only
+    /// shed a deadline frame early, never admit it late.
+    read_at: Instant,
+    tenant: Option<u32>,
+    offered: usize,
+    delivered: usize,
+    stale: usize,
+    backpressure: usize,
+    truncated: usize,
+    eof: bool,
+    /// Debug-build custody ledger: every offered frame retired exactly
+    /// once, reconciled at close (`coordinator::audit`).
+    audit: ConnLedger,
+}
+
+impl Conn {
+    fn new(idx: usize, stream: TcpStream) -> io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        Ok(Conn {
+            idx,
+            stream,
+            buf: Vec::new(),
+            read_at: Instant::now(),
+            tenant: None,
+            offered: 0,
+            delivered: 0,
+            stale: 0,
+            backpressure: 0,
+            truncated: 0,
+            eof: false,
+            audit: ConnLedger::new(),
+        })
+    }
+
+    /// Admit one decoded record through the dispatcher and book the
+    /// outcome in the connection, the ledger, and the class tally.
+    fn admit(
+        &mut self,
+        wf: WireFrame,
+        d: &WsDispatch,
+        qos_on: bool,
+        tally: &mut [ClassTally; 3],
+    ) {
+        let cls = wf.qos;
+        self.offered += 1;
+        self.audit.offer();
+        if self.tenant.is_none() {
+            self.tenant = Some(wf.tenant);
+        }
+        let t = &mut tally[cls as usize];
+        t.offered += 1;
+        // the client deadline is relative to arrival — the network twin
+        // of the ingest tier's `due + slack`
+        let deadline = (wf.deadline_us > 0)
+            .then(|| self.read_at + Duration::from_micros(wf.deadline_us as u64));
+        let frame =
+            Frame::with_qos(wf.id, Tensor::new(wf.shape, wf.data), cls, deadline);
+        let adm = if qos_on {
+            d.offer_classed(frame)
+        } else if d.offer(frame) {
+            Admission::Delivered
+        } else {
+            Admission::Backpressure
+        };
+        match adm {
+            Admission::Delivered => {
+                self.delivered += 1;
+                self.audit.deliver();
+                t.delivered += 1;
+            }
+            Admission::Stale => {
+                self.stale += 1;
+                self.audit.stale();
+                t.stale += 1;
+            }
+            Admission::Backpressure => {
+                self.backpressure += 1;
+                self.audit.backpressure();
+                t.backpressure += 1;
+            }
+        }
+    }
+
+    /// One fair-rotation visit: read at most [`READ_CHUNK`] bytes, then
+    /// decode and admit every complete record buffered. Returns whether
+    /// the visit made progress (bytes read, records admitted, or state
+    /// advanced) — a full no-progress rotation is what lets the
+    /// producer nap.
+    fn pump(
+        &mut self,
+        d: &WsDispatch,
+        qos_on: bool,
+        tally: &mut [ClassTally; 3],
+    ) -> bool {
+        let mut progress = false;
+        if !self.eof {
+            let mut scratch = [0u8; READ_CHUNK];
+            match self.stream.read(&mut scratch) {
+                Ok(0) => {
+                    self.eof = true;
+                    progress = true;
+                }
+                Ok(n) => {
+                    if self.buf.is_empty() {
+                        self.read_at = Instant::now();
+                    }
+                    self.buf.extend_from_slice(&scratch[..n]);
+                    progress = true;
+                }
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // abrupt reset: same custody rule as a clean EOF —
+                    // whatever is buffered either decodes below or is
+                    // counted truncated at finish
+                    self.eof = true;
+                    progress = true;
+                }
+            }
+        }
+        loop {
+            match decode_frame(&self.buf) {
+                Ok(Some((wf, used))) => {
+                    self.buf.drain(..used);
+                    self.admit(wf, d, qos_on, tally);
+                    progress = true;
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    // a record no conforming client produces: count it
+                    // (conservation includes garbage), drop the rest of
+                    // the stream, close the connection
+                    self.offered += 1;
+                    self.audit.offer();
+                    self.truncated += 1;
+                    self.audit.truncate();
+                    self.buf.clear();
+                    self.eof = true;
+                    progress = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Closed and fully decoded: on EOF `pump` has already drained every
+    /// complete record, so only an unfinishable partial can remain (it
+    /// is counted at [`Conn::finish`]).
+    fn done(&self) -> bool {
+        self.eof
+    }
+
+    /// Connection close: count the mid-record remainder, reconcile the
+    /// custody ledger, and emit the report.
+    fn finish(mut self) -> ConnReport {
+        if !self.buf.is_empty() {
+            // mid-frame hangup: the client started a record it never
+            // finished — one offered, truncated frame, so
+            // delivered + drops == offered survives the hangup
+            self.offered += 1;
+            self.audit.offer();
+            self.truncated += 1;
+            self.audit.truncate();
+            self.buf.clear();
+        }
+        self.audit.close(
+            self.delivered,
+            self.stale,
+            self.backpressure,
+            self.truncated,
+        );
+        ConnReport {
+            conn: self.idx,
+            tenant: self.tenant.unwrap_or(0),
+            offered: self.offered,
+            delivered: self.delivered,
+            dropped_stale: self.stale,
+            dropped_backpressure: self.backpressure,
+            dropped_truncated: self.truncated,
+        }
+    }
+}
+
+/// What one producer hands back at the barrier.
+struct ProducerOut {
+    conns: Vec<ConnReport>,
+    tally: [ClassTally; 3],
+}
+
+/// One producer thread's loop: accept handed-off connections, rotate
+/// fairly over the live ones, exit when the acceptor has hung up the
+/// channel AND every owned connection has drained.
+fn net_produce(
+    rx: mpsc::Receiver<(usize, TcpStream)>,
+    d: &WsDispatch,
+    qos_on: bool,
+) -> ProducerOut {
+    let mut live: Vec<Conn> = Vec::new();
+    let mut done: Vec<ConnReport> = Vec::new();
+    let mut tally = [ClassTally::default(); 3];
+    let mut accepting = true;
+    loop {
+        if accepting {
+            // idle producers park in recv (no spinning before the first
+            // connection); busy ones drain opportunistically
+            if live.is_empty() {
+                match rx.recv() {
+                    Ok((idx, stream)) => match Conn::new(idx, stream) {
+                        Ok(c) => live.push(c),
+                        // a connection dead before its first read still
+                        // gets a (zero) report — conns in == reports out
+                        Err(_) => done.push(ConnReport::empty(idx)),
+                    },
+                    Err(_) => accepting = false,
+                }
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok((idx, stream)) => match Conn::new(idx, stream) {
+                        Ok(c) => live.push(c),
+                        Err(_) => done.push(ConnReport::empty(idx)),
+                    },
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        accepting = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if live.is_empty() {
+            if accepting {
+                continue; // park in recv above
+            }
+            break; // channel closed, every connection drained
+        }
+        let mut progress = false;
+        let mut i = 0;
+        while i < live.len() {
+            progress |= live[i].pump(d, qos_on, &mut tally);
+            if live[i].done() {
+                done.push(live.swap_remove(i).finish());
+            } else {
+                i += 1;
+            }
+        }
+        if !progress {
+            thread::sleep(POLL_IDLE); // pacing only, never correctness
+        }
+    }
+    ProducerOut { conns: done, tally }
+}
+
+/// Accept up to `net.max_conns` connections, deal them to K producers,
+/// and run the multiplex until every connection drains. Called on the
+/// feeder thread inside the work-stealing core.
+fn run_listener(
+    listener: &TcpListener,
+    d: &WsDispatch,
+    net: &NetOpts,
+) -> NetReport {
+    let k = net.producers.max(1);
+    let outs: Vec<ProducerOut> = thread::scope(|scope| {
+        let mut txs = Vec::with_capacity(k);
+        let mut handles = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (tx, rx) = mpsc::channel::<(usize, TcpStream)>();
+            txs.push(tx);
+            let qos_on = net.qos;
+            handles.push(scope.spawn(move || net_produce(rx, d, qos_on)));
+        }
+        // the acceptor runs inline: connection i to producer i % k — the
+        // same positional round-robin rule run_ingest uses for sources
+        let mut accepted = 0usize;
+        let mut last = Instant::now();
+        while accepted < net.max_conns {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    // a send can only fail if the producer died, and a
+                    // producer only dies by panicking — the scope join
+                    // below re-raises that; stop feeding it meanwhile
+                    if txs[accepted % k].send((accepted, stream)).is_err() {
+                        break;
+                    }
+                    accepted += 1;
+                    last = Instant::now();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if last.elapsed() > net.accept_grace {
+                        break; // nobody is coming; drain and report
+                    }
+                    thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break, // listener broke; serve what arrived
+            }
+        }
+        // dropping the senders IS the shutdown signal (no shared flag):
+        // each producer drains its live connections, sees Disconnected,
+        // and returns its reports; these joins are the barrier
+        drop(txs);
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(out) => out,
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
+    });
+
+    let mut conns: Vec<ConnReport> = Vec::new();
+    let mut merged = [ClassTally::default(); 3];
+    for out in outs {
+        conns.extend(out.conns);
+        for (m, t) in merged.iter_mut().zip(out.tally) {
+            m.offered += t.offered;
+            m.delivered += t.delivered;
+            m.stale += t.stale;
+            m.backpressure += t.backpressure;
+        }
+    }
+    conns.sort_by_key(|c| c.conn);
+    // the conservation contract is enforced in release builds too, per
+    // connection, exactly as run_ingest enforces it per source
+    for c in &conns {
+        assert_eq!(
+            c.delivered + c.dropped(),
+            c.offered,
+            "connection {} leaks frames",
+            c.conn
+        );
+    }
+    let classes: Vec<ClassReport> = QosClass::ALL
+        .into_iter()
+        .map(|q| {
+            let t = merged[q as usize];
+            ClassReport {
+                qos: q,
+                offered: t.offered,
+                delivered: t.delivered,
+                dropped_stale: t.stale,
+                dropped_backpressure: t.backpressure,
+            }
+        })
+        .collect();
+    NetReport { producers: k, conns, classes }
+}
+
+/// Serve frames arriving over `listener` through the work-stealing
+/// scheduler: the network twin of `serve_sharded_sources`. Returns the
+/// shard report plus per-connection / per-class accounting; network
+/// drops (stale + backpressure + truncated) are the aggregate report's
+/// `dropped`, so `frames + dropped == total offered` holds across the
+/// socket boundary.
+pub fn serve_net<B, F>(
+    make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    listener: TcpListener,
+    net: &NetOpts,
+    opts: &ShardOpts,
+) -> Result<(ShardReport, NetReport)>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    if !opts.steal {
+        return Err(anyhow!(
+            "the network front-end fronts the work-stealing scheduler; \
+             drop --round-robin to use --listen"
+        ));
+    }
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| anyhow!("cannot make listener nonblocking: {e}"))?;
+    let mut slot: Option<NetReport> = None;
+    let (report, _) =
+        serve_work_stealing_core(make_executor, n_shards, plan, opts, |d| {
+            let nr = run_listener(&listener, d, net);
+            let dropped = nr.dropped();
+            slot = Some(nr);
+            (dropped, None)
+        })?;
+    let nr =
+        slot.ok_or_else(|| anyhow!("network feeder returned no report"))?;
+    Ok((report, nr))
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::coordinator::wire::encode_frame;
+    use crate::device::Device;
+    use crate::runtime::ReferenceBackend;
+    use crate::taskgraph::{Partition, TaskGraph};
+    use crate::trainer::GraphWeights;
+    use crate::util::rng::Pcg32;
+    use std::io::Write;
+    use std::net::TcpStream as ClientStream;
+
+    fn make_executor(_s: usize) -> Result<BlockExecutor<ReferenceBackend>> {
+        let backend = ReferenceBackend::new();
+        let arch = backend.arch("cnn5")?;
+        let graph = TaskGraph::new(
+            3,
+            vec![1, 3, 4],
+            vec![
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 0]),
+                Partition(vec![0, 0, 1]),
+                Partition::singletons(3),
+            ],
+        )?;
+        let ncls = vec![2, 2, 2];
+        let mut rng = Pcg32::seed(7);
+        let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+        Ok(BlockExecutor::new(
+            backend,
+            Device::msp430(),
+            arch,
+            graph,
+            ncls,
+            store,
+        ))
+    }
+
+    /// A well-formed wire record the test executor accepts (its graph
+    /// takes 1×16×16×1 inputs).
+    fn record(id: u64, tenant: u32, qos: QosClass, deadline_us: u32) -> Vec<u8> {
+        let mut rng = Pcg32::seed(id ^ 0x5eed);
+        encode_frame(&WireFrame {
+            id,
+            tenant,
+            qos,
+            deadline_us,
+            shape: vec![1, 16, 16, 1],
+            data: (0..256).map(|_| rng.gauss() as f32).collect(),
+        })
+    }
+
+    fn net_opts(conns: usize, producers: usize) -> NetOpts {
+        NetOpts {
+            producers,
+            max_conns: conns,
+            qos: true,
+            accept_grace: Duration::from_secs(5),
+        }
+    }
+
+    #[test]
+    fn loopback_frames_are_served_and_conserved() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let clients: Vec<_> = (0..3u32)
+            .map(|t| {
+                thread::spawn(move || {
+                    let mut s = ClientStream::connect(addr).unwrap();
+                    for i in 0..4u64 {
+                        let rec = record(
+                            u64::from(t) * 100 + i,
+                            t,
+                            QosClass::Realtime,
+                            0,
+                        );
+                        s.write_all(&rec).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let (sr, nr) = serve_net(
+            make_executor,
+            2,
+            &plan,
+            listener,
+            &net_opts(3, 2),
+            &ShardOpts::default(),
+        )
+        .unwrap();
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(nr.conns.len(), 3);
+        assert_eq!(nr.offered(), 12);
+        for c in &nr.conns {
+            assert_eq!(
+                c.delivered + c.dropped(),
+                c.offered,
+                "conn {} leaks",
+                c.conn
+            );
+            assert_eq!(c.offered, 4);
+            assert_eq!(c.dropped_truncated, 0);
+        }
+        // tenants map 1:1 onto connections (accept order is arbitrary)
+        let mut tenants: Vec<u32> = nr.conns.iter().map(|c| c.tenant).collect();
+        tenants.sort_unstable();
+        assert_eq!(tenants, vec![0, 1, 2]);
+        // the serve side saw exactly the delivered frames
+        assert_eq!(sr.aggregate.frames + sr.aggregate.dropped, 12);
+        assert_eq!(sr.aggregate.frames, nr.delivered());
+        assert_eq!(nr.class(QosClass::Realtime).offered, 12);
+        assert!(nr.class_table().contains("realtime"));
+    }
+
+    #[test]
+    fn mid_record_hangup_counts_the_remainder_truncated() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            s.write_all(&record(1, 9, QosClass::Realtime, 0)).unwrap();
+            s.write_all(&record(2, 9, QosClass::BestEffort, 0)).unwrap();
+            // start a third record and hang up mid-frame
+            let partial = record(3, 9, QosClass::Realtime, 0);
+            s.write_all(&partial[..partial.len() / 2]).unwrap();
+            // dropping the stream closes the socket abruptly
+        });
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let (_, nr) = serve_net(
+            make_executor,
+            1,
+            &plan,
+            listener,
+            &net_opts(1, 1),
+            &ShardOpts::default(),
+        )
+        .unwrap();
+        client.join().unwrap();
+        let c = &nr.conns[0];
+        assert_eq!(c.tenant, 9);
+        // the two whole records plus the unfinished one are all offered;
+        // the remainder is truncated, not vanished
+        assert_eq!(c.offered, 3);
+        assert_eq!(c.dropped_truncated, 1);
+        assert_eq!(c.delivered + c.dropped(), c.offered);
+        assert_eq!(nr.dropped_truncated(), 1);
+        // class rows cover decoded records only; truncated has no class
+        let class_offered: usize =
+            nr.classes.iter().map(|cl| cl.offered).sum();
+        assert_eq!(class_offered + nr.dropped_truncated(), nr.offered());
+    }
+
+    #[test]
+    fn malformed_record_is_counted_and_closes_the_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            s.write_all(&record(1, 4, QosClass::Batch, 0)).unwrap();
+            // corrupt the class byte of an otherwise valid record
+            let mut bad = record(2, 4, QosClass::Batch, 0);
+            bad[16] = 7;
+            s.write_all(&bad).unwrap();
+            // a valid record after the garbage must NOT be admitted —
+            // framing is unrecoverable after a malformed record
+            s.write_all(&record(3, 4, QosClass::Batch, 0)).unwrap();
+        });
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let (_, nr) = serve_net(
+            make_executor,
+            1,
+            &plan,
+            listener,
+            &net_opts(1, 1),
+            &ShardOpts::default(),
+        )
+        .unwrap();
+        client.join().unwrap();
+        let c = &nr.conns[0];
+        assert_eq!(c.offered, 2, "one good record + the malformed one");
+        assert_eq!(c.dropped_truncated, 1);
+        assert_eq!(c.delivered + c.dropped(), c.offered);
+    }
+
+    #[test]
+    fn expired_client_deadline_sheds_stale_before_the_queue() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            // a ~1 MiB record with a 1 µs deadline: the multi-chunk
+            // transfer alone takes far longer than the budget, so it is
+            // stale on arrival in any schedule
+            let mut rng = Pcg32::seed(3);
+            let big = encode_frame(&WireFrame {
+                id: 1,
+                tenant: 2,
+                qos: QosClass::Realtime,
+                deadline_us: 1,
+                shape: vec![1, 512, 512, 1],
+                data: (0..512 * 512).map(|_| rng.gauss() as f32).collect(),
+            });
+            s.write_all(&big).unwrap();
+            // a small no-deadline record on the same connection still
+            // gets through — staleness is per frame, not per connection
+            s.write_all(&record(2, 2, QosClass::Realtime, 0)).unwrap();
+        });
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let (_, nr) = serve_net(
+            make_executor,
+            1,
+            &plan,
+            listener,
+            &net_opts(1, 1),
+            &ShardOpts::default(),
+        )
+        .unwrap();
+        client.join().unwrap();
+        let c = &nr.conns[0];
+        assert_eq!(c.offered, 2);
+        assert_eq!(c.dropped_stale, 1, "expired deadline must shed");
+        assert_eq!(c.delivered, 1);
+        assert_eq!(nr.class(QosClass::Realtime).dropped_stale, 1);
+    }
+
+    #[test]
+    fn zero_conns_serves_nobody_and_reports_cleanly() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let (sr, nr) = serve_net(
+            make_executor,
+            1,
+            &plan,
+            listener,
+            &net_opts(0, 1),
+            &ShardOpts::default(),
+        )
+        .unwrap();
+        assert!(nr.conns.is_empty());
+        assert_eq!(nr.offered(), 0);
+        assert_eq!(sr.aggregate.frames, 0);
+    }
+
+    #[test]
+    fn round_robin_baseline_is_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let opts = ShardOpts { steal: false, ..ShardOpts::default() };
+        let err = serve_net(
+            make_executor,
+            1,
+            &plan,
+            listener,
+            &net_opts(1, 1),
+            &opts,
+        )
+        .err()
+        .map(|e| e.to_string())
+        .unwrap_or_default();
+        assert!(err.contains("--listen"), "unexpected error: {err}");
+    }
+}

@@ -23,6 +23,7 @@ use crate::util::stats;
 
 use super::audit::FeedLedger;
 use super::executor::BlockExecutor;
+use super::wire::QosClass;
 
 /// Ordering + runtime-dependency plan for the task set.
 #[derive(Debug, Clone)]
@@ -46,13 +47,44 @@ pub struct Frame {
     pub id: u64,
     pub input: Tensor, // batch-1
     pub enqueued: Instant,
+    /// Admission class (network front-end; `coordinator::wire`).
+    /// In-process sources are [`QosClass::Realtime`], which the class
+    /// rule always admits — so every pre-existing path is unchanged.
+    pub qos: QosClass,
+    /// Absolute client deadline, the network-edge twin of the ingest
+    /// tier's staleness `slack`: a frame admitted after this instant is
+    /// shed as `dropped_stale` before any downstream cost. `None` =
+    /// no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl Frame {
     /// Stamp a frame at hand-off time: `enqueued` starts the
     /// queue-wait/latency clocks every serving path reports.
     pub fn new(id: u64, input: Tensor) -> Frame {
-        Frame { id, input, enqueued: Instant::now() }
+        Frame {
+            id,
+            input,
+            enqueued: Instant::now(),
+            qos: QosClass::Realtime,
+            deadline: None,
+        }
+    }
+
+    /// A classed frame from the network front-end.
+    pub fn with_qos(
+        id: u64,
+        input: Tensor,
+        qos: QosClass,
+        deadline: Option<Instant>,
+    ) -> Frame {
+        Frame { id, input, enqueued: Instant::now(), qos, deadline }
+    }
+
+    /// Has the client deadline passed as of `now`? (`false` when the
+    /// frame carries none.)
+    pub fn past_deadline(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now > d)
     }
 }
 

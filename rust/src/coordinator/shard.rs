@@ -668,6 +668,18 @@ impl StealQueue {
         }
     }
 
+    /// Total frames currently queued (injector + every live deque) — the
+    /// backlog the network front-end's per-class admission rule reads.
+    /// Always compiled (unlike the debug-only ledger reconciliation
+    /// helpers): release-build QoS shedding depends on it. The value is
+    /// advisory by nature — the lock is released before the caller acts
+    /// on it — which only ever sheds a little early or late; the hard
+    /// capacity bound stays with `push` itself.
+    fn queued(&self) -> usize {
+        let st = lock_unpoisoned(&self.st);
+        st.global.len() + st.locals.iter().map(|l| l.len()).sum::<usize>()
+    }
+
     /// Frames nobody will ever pop (every worker exited early). Counted
     /// as dropped so frame conservation holds even in total failure.
     /// This is also the custody ledger's close: after the drain, nothing
@@ -787,6 +799,60 @@ impl WsDispatch {
         }
         accepted
     }
+
+    /// Scheduler backlog right now (injector + live deques): what the
+    /// per-class admission rule ([`QosClass::admit_at`]) compares against
+    /// [`WsDispatch::capacity`].
+    pub fn backlog(&self) -> usize {
+        self.queue.queued()
+    }
+
+    /// The bounded injector's capacity — the denominator of the class
+    /// admission thresholds.
+    pub fn capacity(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Class- and deadline-aware admission for the network front-end.
+    /// Shedding order under backpressure is fixed by
+    /// [`QosClass::admit_at`]: batch is refused first, then best-effort,
+    /// and realtime only when the injector itself is hard-full — so
+    /// realtime can never be shed at a backlog where best-effort is
+    /// admitted. A frame whose client deadline already passed is shed as
+    /// stale *before* the class check: it would only be dropped
+    /// downstream after occupying a queue slot.
+    ///
+    /// The backlog read and the push are not atomic together (two lock
+    /// acquisitions); the race only shifts a borderline admission by one
+    /// frame against a moving queue — the hard bound is `push`'s own
+    /// capacity check, and the conservation contract is indifferent to
+    /// *which* bucket a shed frame lands in, only that it lands in one.
+    pub fn offer_classed(&self, frame: Frame) -> Admission {
+        if frame.past_deadline(Instant::now()) {
+            return Admission::Stale;
+        }
+        if !frame.qos.admit_at(self.backlog(), self.capacity()) {
+            return Admission::Backpressure;
+        }
+        if self.offer(frame) {
+            Admission::Delivered
+        } else {
+            Admission::Backpressure
+        }
+    }
+}
+
+/// Outcome of one [`WsDispatch::offer_classed`] admission attempt — the
+/// three buckets of the per-connection conservation contract
+/// (`delivered + dropped_stale + dropped_backpressure (+ truncated)
+/// == offered`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Delivered,
+    /// Client deadline passed before admission.
+    Stale,
+    /// Shed by the class rule, or the injector was hard-full.
+    Backpressure,
 }
 
 /// Closes the steal queue when dropped: workers must always see `closed`
@@ -836,7 +902,7 @@ where
 /// to offer frames through, and aggregates once the feeder returns its
 /// drop count (plus the ingest report, when the feeder is the
 /// multi-producer tier).
-fn serve_work_stealing_core<B, F, Feed>(
+pub(crate) fn serve_work_stealing_core<B, F, Feed>(
     mut make_executor: F,
     n_shards: usize,
     plan: &ServePlan,

@@ -1,0 +1,447 @@
+//! Wire format for the framed TCP serving front-end
+//! (`coordinator::net`): length-prefixed records carrying
+//! `{frame id, tenant id, QoS class, client deadline, tensor}` — and the
+//! pure per-class admission rule the listener applies against the
+//! scheduler's bounded injector.
+//!
+//! Record layout (all integers little-endian):
+//!
+//! ```text
+//! u32  len         bytes that follow this field (exactly)
+//! u64  id          frame id (client-chosen; per-source FIFO order)
+//! u32  tenant      tenant / source id for per-tenant accounting
+//! u8   qos         0 = realtime, 1 = best-effort, 2 = batch
+//! u32  deadline_us client deadline in µs from the frame's arrival at
+//!                  the server; 0 = none. Plays exactly the role of the
+//!                  ingest tier's staleness `slack`: a frame admitted
+//!                  more than `deadline_us` after its first byte arrived
+//!                  is shed as stale, before any downstream cost.
+//! u8   ndims       tensor rank, 1..=MAX_DIMS
+//! u32 × ndims      dims (each nonzero; product ≤ MAX_ELEMS)
+//! f32 × prod(dims) payload
+//! ```
+//!
+//! Decoding is incremental: [`decode_frame`] returns `Ok(None)` while
+//! the buffer holds only part of a record (read more), and a hard
+//! [`WireError`] for a record no well-behaved client produces — the
+//! connection is then closed and the offending frame is *counted*, not
+//! leaked (the conservation contract extends to garbage input).
+
+use crate::model::Tensor;
+
+/// Admission class carried by every wire frame. The declaration order is
+/// the shedding order, most protected first: under backpressure the
+/// listener sheds [`QosClass::Batch`] traffic before
+/// [`QosClass::BestEffort`] and both before [`QosClass::Realtime`] —
+/// see [`QosClass::admit_at`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QosClass {
+    /// Admitted whenever the injector has any room at all.
+    Realtime = 0,
+    /// Refused above 3/4 injector occupancy.
+    BestEffort = 1,
+    /// Refused above 1/2 injector occupancy.
+    Batch = 2,
+}
+
+impl QosClass {
+    /// All classes, in shedding-priority order (most protected first) —
+    /// the canonical iteration order for per-class report tables.
+    pub const ALL: [QosClass; 3] =
+        [QosClass::Realtime, QosClass::BestEffort, QosClass::Batch];
+
+    pub fn from_u8(v: u8) -> Option<QosClass> {
+        match v {
+            0 => Some(QosClass::Realtime),
+            1 => Some(QosClass::BestEffort),
+            2 => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI / config spelling.
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "realtime" | "rt" => Some(QosClass::Realtime),
+            "best-effort" | "be" => Some(QosClass::BestEffort),
+            "batch" => Some(QosClass::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Realtime => "realtime",
+            QosClass::BestEffort => "best-effort",
+            QosClass::Batch => "batch",
+        }
+    }
+
+    /// The per-class admission rule: may a frame of this class enter the
+    /// scheduler when `backlog` frames are already queued against a
+    /// bounded injector of `capacity`? Realtime uses the whole queue
+    /// (only a hard-full injector can drop it); best-effort yields the
+    /// top quarter of the queue to realtime; batch yields the top half.
+    /// Integer arithmetic, no rounding surprises:
+    ///
+    /// * realtime: always true (the push itself enforces `capacity`);
+    /// * best-effort: `backlog * 4 < capacity * 3` (below 3/4 full);
+    /// * batch: `backlog * 2 < capacity` (below 1/2 full).
+    ///
+    /// The rule is monotone in both directions — a class is never
+    /// admitted at a deeper backlog than a more-protected class, and
+    /// admission never resumes as backlog grows — which is exactly the
+    /// "never drop realtime before best-effort" ordering the property
+    /// test replays (`prop_qos_shedding_never_drops_realtime_before_best_effort`).
+    pub fn admit_at(self, backlog: usize, capacity: usize) -> bool {
+        match self {
+            QosClass::Realtime => true,
+            QosClass::BestEffort => backlog * 4 < capacity * 3,
+            QosClass::Batch => backlog * 2 < capacity,
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One decoded wire record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireFrame {
+    pub id: u64,
+    pub tenant: u32,
+    pub qos: QosClass,
+    /// Client deadline in µs from arrival; 0 = none.
+    pub deadline_us: u32,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WireFrame {
+    pub fn into_tensor(self) -> Tensor {
+        Tensor::new(self.shape, self.data)
+    }
+}
+
+/// A record no conforming client produces (bad class byte, absurd
+/// shape, inconsistent length). Fatal for the connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire error: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Max tensor rank a record may declare.
+pub const MAX_DIMS: usize = 8;
+/// Max payload elements a record may declare (4 MiB of f32) — the
+/// allocation bound that keeps a hostile length field from OOMing the
+/// producer before validation.
+pub const MAX_ELEMS: usize = 1 << 20;
+
+/// Fixed header bytes after the length prefix: id(8) + tenant(4) +
+/// qos(1) + deadline(4) + ndims(1).
+const FIXED: usize = 18;
+/// Upper bound of `len` for any valid record.
+const MAX_LEN: usize = FIXED + 4 * MAX_DIMS + 4 * MAX_ELEMS;
+
+/// Encode one record (the client side; tests and `examples/` use it).
+pub fn encode_frame(f: &WireFrame) -> Vec<u8> {
+    let numel: usize = f.shape.iter().product();
+    debug_assert_eq!(numel, f.data.len(), "shape/data mismatch");
+    let len = FIXED + 4 * f.shape.len() + 4 * f.data.len();
+    let mut out = Vec::with_capacity(4 + len);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.extend_from_slice(&f.id.to_le_bytes());
+    out.extend_from_slice(&f.tenant.to_le_bytes());
+    out.push(f.qos as u8);
+    out.extend_from_slice(&f.deadline_us.to_le_bytes());
+    out.push(f.shape.len() as u8);
+    for &d in &f.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for &v in &f.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn rd_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn rd_u64(b: &[u8], at: usize) -> u64 {
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(raw)
+}
+
+/// Try to decode one record from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete record; the caller
+///   drains `consumed` bytes and admits the frame.
+/// * `Ok(None)` — the buffer ends inside the record; read more. If the
+///   connection closes here instead, the partial record is the
+///   "mid-frame hangup remainder" the caller must count as dropped.
+/// * `Err(_)` — malformed; close the connection and count the record.
+pub fn decode_frame(
+    buf: &[u8],
+) -> Result<Option<(WireFrame, usize)>, WireError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = rd_u32(buf, 0) as usize;
+    if !(FIXED + 4..=MAX_LEN).contains(&len) {
+        return Err(WireError(format!(
+            "record length {len} outside [{}, {MAX_LEN}]",
+            FIXED + 4
+        )));
+    }
+    // validate the class byte and the declared shape as soon as their
+    // bytes exist — a hostile header is rejected before its (possibly
+    // huge) payload is ever awaited
+    if buf.len() >= 4 + FIXED {
+        let qos_byte = buf[4 + 12];
+        if QosClass::from_u8(qos_byte).is_none() {
+            return Err(WireError(format!("unknown QoS class {qos_byte}")));
+        }
+        let ndims = buf[4 + 17] as usize;
+        if !(1..=MAX_DIMS).contains(&ndims) {
+            return Err(WireError(format!(
+                "rank {ndims} outside [1, {MAX_DIMS}]"
+            )));
+        }
+        // a lying header whose `len` ends inside its own dims list would
+        // otherwise reach the unchecked reads below when the buffer ends
+        // exactly at `4 + len` (the dims validation just after is guarded
+        // on the dims bytes existing). Requiring `len` to cover the rank
+        // plus one element makes that validation unskippable before a
+        // full decode.
+        if len < FIXED + 4 * ndims + 4 {
+            return Err(WireError(format!(
+                "length {len} too small for rank {ndims}"
+            )));
+        }
+        if buf.len() >= 4 + FIXED + 4 * ndims {
+            let mut numel = 1usize;
+            for i in 0..ndims {
+                let d = rd_u32(buf, 4 + FIXED + 4 * i) as usize;
+                if d == 0 {
+                    return Err(WireError("zero dim".into()));
+                }
+                numel = numel.saturating_mul(d);
+            }
+            if numel > MAX_ELEMS {
+                return Err(WireError(format!(
+                    "payload {numel} elements exceeds {MAX_ELEMS}"
+                )));
+            }
+            if len != FIXED + 4 * ndims + 4 * numel {
+                return Err(WireError(format!(
+                    "length {len} disagrees with rank {ndims} × {numel} \
+                     elements"
+                )));
+            }
+        }
+    }
+    if buf.len() < 4 + len {
+        return Ok(None); // incomplete: need more bytes
+    }
+    let id = rd_u64(buf, 4);
+    let tenant = rd_u32(buf, 12);
+    let qos = match QosClass::from_u8(buf[16]) {
+        Some(q) => q,
+        None => return Err(WireError(format!("unknown QoS class {}", buf[16]))),
+    };
+    let deadline_us = rd_u32(buf, 17);
+    let ndims = buf[21] as usize;
+    let mut shape = Vec::with_capacity(ndims);
+    let mut numel = 1usize;
+    for i in 0..ndims {
+        let d = rd_u32(buf, 22 + 4 * i) as usize;
+        shape.push(d);
+        numel = numel.saturating_mul(d);
+    }
+    let base = 22 + 4 * ndims;
+    let mut data = Vec::with_capacity(numel);
+    for i in 0..numel {
+        let at = base + 4 * i;
+        data.push(f32::from_le_bytes([
+            buf[at],
+            buf[at + 1],
+            buf[at + 2],
+            buf[at + 3],
+        ]));
+    }
+    Ok(Some((WireFrame { id, tenant, qos, deadline_us, shape, data }, 4 + len)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(id: u64, qos: QosClass) -> WireFrame {
+        WireFrame {
+            id,
+            tenant: 7,
+            qos,
+            deadline_us: 250,
+            shape: vec![1, 2, 2, 1],
+            data: vec![0.5, -1.25, 3.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        for qos in QosClass::ALL {
+            let f = frame(42, qos);
+            let bytes = encode_frame(&f);
+            let (got, used) = decode_frame(&bytes).unwrap().unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(got, f);
+        }
+    }
+
+    #[test]
+    fn decodes_back_to_back_records() {
+        let a = frame(1, QosClass::Realtime);
+        let b = frame(2, QosClass::Batch);
+        let mut bytes = encode_frame(&a);
+        bytes.extend(encode_frame(&b));
+        let (got_a, used) = decode_frame(&bytes).unwrap().unwrap();
+        assert_eq!(got_a, a);
+        let (got_b, used_b) = decode_frame(&bytes[used..]).unwrap().unwrap();
+        assert_eq!(got_b, b);
+        assert_eq!(used + used_b, bytes.len());
+    }
+
+    #[test]
+    fn incomplete_record_wants_more_at_every_prefix() {
+        let bytes = encode_frame(&frame(9, QosClass::BestEffort));
+        for cut in 0..bytes.len() {
+            assert_eq!(
+                decode_frame(&bytes[..cut]).unwrap(),
+                None,
+                "prefix of {cut} bytes should be incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_class_rank_dims_and_length() {
+        let good = encode_frame(&frame(1, QosClass::Realtime));
+        // class byte 3 is undefined
+        let mut bad = good.clone();
+        bad[16] = 3;
+        assert!(decode_frame(&bad).is_err());
+        // rank 0 and rank > MAX_DIMS
+        let mut bad = good.clone();
+        bad[21] = 0;
+        assert!(decode_frame(&bad).is_err());
+        let mut bad = good.clone();
+        bad[21] = MAX_DIMS as u8 + 1;
+        assert!(decode_frame(&bad).is_err());
+        // zero dim
+        let mut bad = good.clone();
+        bad[22..26].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+        // length prefix disagreeing with the shape
+        let mut bad = good.clone();
+        let wrong = (FIXED + 4 * 4 + 4 * 5) as u32; // claims 5 elements
+        bad[0..4].copy_from_slice(&wrong.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+        // absurd length rejected before the payload is awaited
+        let mut bad = good[..8].to_vec();
+        bad[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn lying_length_ending_inside_the_dims_list_is_rejected() {
+        // len = 22 passes the range check but cannot cover the 8 dims
+        // the rank byte declares; with the buffer ending exactly at
+        // 4 + len, the dims reads would run off the end of the record.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&22u32.to_le_bytes()); // len = FIXED + 4
+        bad.extend_from_slice(&1u64.to_le_bytes()); // id
+        bad.extend_from_slice(&0u32.to_le_bytes()); // tenant
+        bad.push(0); // qos realtime
+        bad.extend_from_slice(&0u32.to_le_bytes()); // deadline
+        bad.push(8); // rank 8: needs 32 dim bytes, len leaves 4
+        bad.extend_from_slice(&[0xAA; 4]); // buffer ends at 4 + len
+        assert_eq!(bad.len(), 26);
+        assert!(decode_frame(&bad).is_err());
+        // and every prefix is still a clean "incomplete" or the same error
+        for cut in 0..bad.len() {
+            let _ = decode_frame(&bad[..cut]);
+        }
+    }
+
+    #[test]
+    fn hostile_shape_rejected_before_payload_arrives() {
+        // a header declaring MAX_ELEMS+ elements is rejected from the
+        // header bytes alone — no multi-megabyte buffering first
+        let f = WireFrame {
+            id: 1,
+            tenant: 0,
+            qos: QosClass::Realtime,
+            deadline_us: 0,
+            shape: vec![2048, 2048], // 4M elements > MAX_ELEMS
+            data: vec![],
+        };
+        let mut bytes = encode_frame(&f);
+        // fix up the length field to what the shape implies so only the
+        // element bound can object
+        let len = (FIXED + 4 * 2 + 4 * 2048 * 2048) as u32;
+        bytes[0..4].copy_from_slice(&len.to_le_bytes());
+        let header_only = &bytes[..4 + FIXED + 8];
+        assert!(decode_frame(header_only).is_err());
+    }
+
+    #[test]
+    fn admit_rule_is_monotone_and_ordered() {
+        let cap = 64;
+        for backlog in 0..=cap {
+            let rt = QosClass::Realtime.admit_at(backlog, cap);
+            let be = QosClass::BestEffort.admit_at(backlog, cap);
+            let ba = QosClass::Batch.admit_at(backlog, cap);
+            // shedding order: batch first, realtime last
+            assert!(rt || !be, "best-effort admitted where realtime shed");
+            assert!(be || !ba, "batch admitted where best-effort shed");
+            assert!(rt, "realtime never refused by the class rule");
+        }
+        // thresholds land exactly at 1/2 and 3/4
+        assert!(QosClass::Batch.admit_at(31, 64));
+        assert!(!QosClass::Batch.admit_at(32, 64));
+        assert!(QosClass::BestEffort.admit_at(47, 64));
+        assert!(!QosClass::BestEffort.admit_at(48, 64));
+        // monotone in backlog: admission never resumes as the queue grows
+        for cls in [QosClass::BestEffort, QosClass::Batch] {
+            let mut admitted = true;
+            for backlog in 0..=64 {
+                let now = cls.admit_at(backlog, 64);
+                assert!(admitted || !now, "{cls} re-admitted at {backlog}");
+                admitted = now;
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(QosClass::parse("realtime"), Some(QosClass::Realtime));
+        assert_eq!(QosClass::parse("best-effort"), Some(QosClass::BestEffort));
+        assert_eq!(QosClass::parse("batch"), Some(QosClass::Batch));
+        assert_eq!(QosClass::parse("bulk"), None);
+        for q in QosClass::ALL {
+            assert_eq!(QosClass::parse(q.name()), Some(q));
+            assert_eq!(QosClass::from_u8(q as u8), Some(q));
+        }
+    }
+}

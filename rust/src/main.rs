@@ -9,6 +9,7 @@
 //!                 [--batch-max M] [--producers K] [--queue-depth D]
 //!                 [--steal] [--round-robin] [--steps-ind N] [--steps-re N]
 //!                 [--fast-tier-bytes N|max] [--prefetch on|off]
+//!                 [--listen ADDR] [--conns N] [--qos on|off]
 //!   antler check  # verify backend + layer round-trip
 //!
 //! Every subcommand accepts `--backend reference|pjrt` (equivalent to
@@ -20,7 +21,8 @@ use anyhow::{anyhow, Result};
 
 use antler::bench;
 use antler::coordinator::{
-    pipeline, serve, serve_sharded_opts, BlockExecutor, ServePlan, ShardOpts,
+    pipeline, serve, serve_net, serve_sharded_opts, BlockExecutor, NetOpts,
+    ServePlan, ShardOpts,
 };
 use antler::data;
 use antler::device::Device;
@@ -28,7 +30,7 @@ use antler::ordering::{solve_held_karp, OrderingProblem};
 use antler::runtime::{self, Backend, ReferenceBackend};
 use antler::taskgraph::select::select_tradeoff;
 use antler::testkit::gen;
-use antler::util::cli::Args;
+use antler::util::cli::{self, Args};
 use antler::util::rng::Pcg32;
 
 fn main() {
@@ -90,7 +92,11 @@ fn print_usage() {
          \x20                 --round-robin selects the baseline scheduler;\n\
          \x20                 --fast-tier-bytes N caps the two-tier weight\n\
          \x20                 memory per executor ('max' = unbounded) and\n\
-         \x20                 --prefetch on|off toggles its pipelined loads)\n\
+         \x20                 --prefetch on|off toggles its pipelined loads;\n\
+         \x20                 --listen ADDR serves length-prefixed frames\n\
+         \x20                 with tenant/QoS/deadline headers over TCP,\n\
+         \x20                 --conns N caps accepted connections and\n\
+         \x20                 --qos on|off toggles class-aware admission)\n\
          \x20 check           verify backend + layer round-trip\n\
          \n\
          global: --backend reference|pjrt (or ANTLER_BACKEND)"
@@ -109,13 +115,9 @@ fn cmd_order(args: &Args) -> Result<()> {
         p = p.cyclic();
     }
     if let Some(spec) = args.get("precedence") {
-        let prec: Vec<(usize, usize)> = spec
-            .split(',')
-            .filter_map(|pair| {
-                let (a, b) = pair.split_once('>')?;
-                Some((a.parse().ok()?, b.parse().ok()?))
-            })
-            .collect();
+        // strict: a malformed pair is an error, not a silently dropped
+        // constraint
+        let prec = cli::parse_precedence(spec).map_err(|e| anyhow!(e))?;
         p = p.with_precedence(prec);
     }
     let s = solve_held_karp(&p).ok_or_else(|| anyhow!("infeasible instance"))?;
@@ -166,25 +168,36 @@ fn cmd_graph(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let which = args.get_or("deployment", "audio");
-    let shards = args.usize("shards", 1);
+    // numeric serve flags parse strictly: a typo'd value is a loud exit
+    // naming the flag, never a silent fallback to the default
+    let strict = |key: &str, default| {
+        args.usize_strict(key, default).map_err(|e| anyhow!(e))
+    };
+    let shards = strict("shards", 1)?;
     // `--batch B` drains a fixed B frames per forward; `--batch auto`
     // lets each shard adapt within [1, --batch-max] (AIMD on injector
     // depth and its own service time — coordinator::shard::BatchPolicy)
-    let batch_arg = args.get_or("batch", "1");
-    let (batch, adaptive) = if batch_arg == "auto" {
-        (args.usize("batch-max", 8), true)
-    } else {
-        (batch_arg.parse().unwrap_or(1), false)
-    };
+    let (batch, adaptive) =
+        match cli::parse_batch_arg(args.get_or("batch", "1"))
+            .map_err(|e| anyhow!(e))?
+        {
+            None => (strict("batch-max", 8)?, true),
+            Some(b) => (b, false),
+        };
     // `--producers K` splits the deployment stream over K sources fed by
     // K ingest threads (the multi-producer tier in front of the
     // work-stealing scheduler)
-    let producers = args.usize("producers", 1);
-    let queue_depth = args.usize("queue-depth", 64);
+    let producers = strict("producers", 1)?;
+    let queue_depth = strict("queue-depth", 64)?;
     // --steal is the (default) work-stealing scheduler; --round-robin
     // opts back into the PR-3 baseline for comparison
     let steal = args.flag("steal") || !args.flag("round-robin");
-    let sharded = shards > 1 || batch > 1 || adaptive || producers > 1;
+    // `--listen ADDR` swaps the synthetic deployment stream for the
+    // framed TCP front-end (coordinator::net): frames arrive over up to
+    // `--conns` connections carrying tenant/QoS/deadline headers
+    let listen = args.get("listen");
+    let sharded =
+        listen.is_some() || shards > 1 || batch > 1 || adaptive || producers > 1;
     // refuse the incompatible combination BEFORE the expensive prepare:
     // sharded/batched serving needs Send executors, and the PJRT engine
     // is Rc-based (!Send)
@@ -201,6 +214,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
              --round-robin"
         ));
     }
+    if listen.is_some() && !steal {
+        // serve_net re-checks this, but refuse before the expensive
+        // deployment prepare
+        return Err(anyhow!(
+            "the network front-end fronts the work-stealing scheduler; \
+             drop --round-robin to use --listen"
+        ));
+    }
     if adaptive && !steal {
         return Err(anyhow!(
             "--batch auto adapts the work-stealing scheduler's pops; the \
@@ -210,7 +231,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (bundle, be) = bench::figures_train::deployment_bundle(which, args)?;
     let prep = &bundle.prep;
     let n = prep.ncls.len();
-    let frames_n = args.usize("frames", 100);
+    let frames_n = strict("frames", 100)?;
     let frames: Vec<(u64, antler::model::Tensor)> = (0..frames_n)
         .map(|i| (i as u64, bundle.data.x.slice_batch(i % bundle.data.len(), 1)))
         .collect();
@@ -292,21 +313,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
             tier,
             ..ShardOpts::default()
         };
-        let sr = if producers > 1 {
-            // split the deployment stream round-robin over K sources, one
-            // ingest thread each, feeding the shared injector
-            let mut split: Vec<Vec<(u64, antler::model::Tensor)>> =
-                (0..producers).map(|_| Vec::new()).collect();
-            for (id, x) in frames {
-                split[id as usize % producers].push((id, x));
-            }
-            let sources: Vec<antler::coordinator::Source> = split
-                .into_iter()
-                .enumerate()
-                .map(|(s, fr)| {
-                    antler::coordinator::Source::flood(&format!("src{s}"), fr)
-                })
-                .collect();
+        let sr = if let Some(addr) = listen {
+            let conns = strict("conns", 1024)?;
+            let qos = cli::parse_switch("qos", args.get_or("qos", "on"))
+                .map_err(|e| anyhow!(e))?;
+            let listener = std::net::TcpListener::bind(addr)
+                .map_err(|e| anyhow!("--listen cannot bind {addr}: {e}"))?;
+            let local = listener
+                .local_addr()
+                .map_err(|e| anyhow!("--listen local_addr: {e}"))?;
+            println!(
+                "listening on {local}: up to {conns} connection{} over {} \
+                 producer{}, qos {}",
+                if conns == 1 { "" } else { "s" },
+                producers.max(1),
+                if producers.max(1) == 1 { "" } else { "s" },
+                if qos { "on" } else { "off" }
+            );
+            let net = NetOpts {
+                producers: producers.max(1),
+                max_conns: conns,
+                qos,
+                ..NetOpts::default()
+            };
+            let (sr, nr) =
+                serve_net(make, shards, &plan, listener, &net, &opts)?;
+            println!(
+                "network front-end: {} connection{} closed, offered {} \
+                 delivered {} dropped {} ({} truncated)",
+                nr.conns.len(),
+                if nr.conns.len() == 1 { "" } else { "s" },
+                nr.offered(),
+                nr.delivered(),
+                nr.dropped(),
+                nr.dropped_truncated()
+            );
+            print!("{}", nr.class_table());
+            sr
+        } else if producers > 1 {
+            // ONE assignment convention for frame→producer fan-out:
+            // positional round-robin (ingest::split_round_robin), the same
+            // rule run_ingest and the listener use. The old inline
+            // `id % producers` split disagreed with it whenever the
+            // producer count was clamped, stranding whole sources.
+            let sources = antler::coordinator::ingest::split_round_robin(
+                frames, producers, "src",
+            );
             let (sr, ingest) = antler::coordinator::serve_sharded_sources(
                 make, shards, &plan, sources, producers, &opts,
             )?;

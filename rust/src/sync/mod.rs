@@ -17,9 +17,12 @@
 //! * **`mpsc` is re-exported from std even under loom** (loom has no
 //!   channel model). Channels are used for result *collection* (every
 //!   sender is dropped before the receiver is drained — plain
-//!   join-style hand-off) and for the round-robin baseline's per-shard
-//!   queues; the load-bearing serving protocols (steal queue, ingest
-//!   barrier, pool shutdown) are mutex+condvar+atomics and ARE
+//!   join-style hand-off), for the round-robin baseline's per-shard
+//!   queues, and for the network listener's acceptor→producer
+//!   connection hand-off (`coordinator::net`, where dropping the
+//!   senders IS the shutdown signal — CONCURRENCY.md §Listener
+//!   shutdown); the load-bearing serving protocols (steal queue,
+//!   ingest barrier, pool shutdown) are mutex+condvar+atomics and ARE
 //!   loom-modeled.
 //! * **`thread::scope` is re-exported from std even under loom** (loom
 //!   models only `'static` spawns). The ingest barrier's loom test

@@ -63,6 +63,68 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Strict numeric accessor: absent → default, present-but-malformed
+    /// → an error naming the flag. The lenient [`Args::usize`] silently
+    /// swallowed typos into the default (`--batch 1O` served with
+    /// batch 1 and nobody noticed); config-shaped flags go through this
+    /// instead so a typo is a loud exit, not a silent misconfiguration.
+    pub fn usize_strict(
+        &self,
+        key: &str,
+        default: usize,
+    ) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                format!("--{key} wants an unsigned integer, got {v:?}")
+            }),
+        }
+    }
+}
+
+/// `--batch B|auto`: `Ok(None)` selects adaptive sizing, `Ok(Some(b))`
+/// a fixed batch. Malformed values are an error naming the flag —
+/// `"1O".parse().unwrap_or(1)` used to demote a typo'd batch to 1
+/// silently.
+pub fn parse_batch_arg(s: &str) -> Result<Option<usize>, String> {
+    if s == "auto" {
+        return Ok(None);
+    }
+    s.parse().map(Some).map_err(|_| {
+        format!("--batch wants a frame count or 'auto', got {s:?}")
+    })
+}
+
+/// `--precedence a>b,c>d`: every pair must parse. The old
+/// `filter_map(.. parse().ok()?)` silently DROPPED malformed pairs —
+/// a typo'd constraint vanished and the solver happily returned an
+/// order violating what the user asked for.
+pub fn parse_precedence(spec: &str) -> Result<Vec<(usize, usize)>, String> {
+    spec.split(',')
+        .map(|pair| {
+            let (a, b) = pair.split_once('>').ok_or_else(|| {
+                format!("--precedence pair {pair:?} wants the form a>b")
+            })?;
+            let a = a.parse().map_err(|_| {
+                format!("--precedence node {a:?} is not a task index")
+            })?;
+            let b = b.parse().map_err(|_| {
+                format!("--precedence node {b:?} is not a task index")
+            })?;
+            Ok((a, b))
+        })
+        .collect()
+}
+
+/// `--qos on|off` (and `--prefetch`-style switches): strict two-state
+/// parse, error names the flag.
+pub fn parse_switch(key: &str, s: &str) -> Result<bool, String> {
+    match s {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => Err(format!("--{key} wants on|off, got {other:?}")),
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +164,48 @@ mod tests {
     fn trailing_flag() {
         let a = argv("x --fast");
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn malformed_batch_errors_naming_the_flag() {
+        // the bug: "1O" (letter O) used to become batch=1 silently
+        let err = parse_batch_arg("1O").unwrap_err();
+        assert!(err.contains("--batch"), "error must name the flag: {err}");
+        assert_eq!(parse_batch_arg("auto"), Ok(None));
+        assert_eq!(parse_batch_arg("8"), Ok(Some(8)));
+        assert!(parse_batch_arg("-3").is_err());
+        assert!(parse_batch_arg("").is_err());
+    }
+
+    #[test]
+    fn malformed_precedence_errors_naming_the_flag() {
+        // the bug: a malformed pair was silently dropped from the
+        // constraint set instead of rejected
+        for bad in ["1>2,3-4", "a>2", "1>2,", ">", "1>b"] {
+            let err = parse_precedence(bad).unwrap_err();
+            assert!(
+                err.contains("--precedence"),
+                "error must name the flag for {bad:?}: {err}"
+            );
+        }
+        assert_eq!(parse_precedence("1>2,0>3"), Ok(vec![(1, 2), (0, 3)]));
+    }
+
+    #[test]
+    fn malformed_numeric_flags_error_naming_the_flag() {
+        let a = argv("serve --shards 2x --frames 10");
+        let err = a.usize_strict("shards", 1).unwrap_err();
+        assert!(err.contains("--shards"), "error must name the flag: {err}");
+        assert_eq!(a.usize_strict("frames", 100), Ok(10));
+        // absent flag keeps its default
+        assert_eq!(a.usize_strict("queue-depth", 64), Ok(64));
+    }
+
+    #[test]
+    fn malformed_switch_errors_naming_the_flag() {
+        let err = parse_switch("qos", "maybe").unwrap_err();
+        assert!(err.contains("--qos"), "error must name the flag: {err}");
+        assert_eq!(parse_switch("qos", "on"), Ok(true));
+        assert_eq!(parse_switch("qos", "off"), Ok(false));
     }
 }

@@ -1,0 +1,239 @@
+//! Acceptance tests for the framed network front-end (`coordinator::net`):
+//! many concurrent loopback connections across all three QoS classes
+//! into a sharded serve, with exact per-connection and aggregate
+//! conservation, class-ordered shedding, and hangup accounting.
+//!
+//! The load test's zero-realtime-drop claim is an arithmetic guarantee,
+//! not a timing hope. With `queue_depth = 80`: best-effort admits only
+//! while `backlog * 4 < 240` (backlog ≤ 59) and batch only while
+//! `backlog * 2 < 80` (backlog ≤ 39), so non-realtime traffic alone
+//! cannot push the backlog past 60 — plus at most `producers - 1 = 3`
+//! overshoot from concurrent admission probes → 63. Only 16 realtime
+//! frames exist in the whole run, so a realtime push never sees more
+//! than 63 + 15 = 78 < 80 queued: the hard cap cannot refuse it, in any
+//! interleaving.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use antler::coordinator::wire::{encode_frame, WireFrame};
+use antler::coordinator::{
+    serve_net, BlockExecutor, NetOpts, QosClass, ServePlan, ShardOpts,
+};
+use antler::device::Device;
+use antler::runtime::{Backend, ReferenceBackend};
+use antler::taskgraph::{Partition, TaskGraph};
+use antler::trainer::GraphWeights;
+use antler::util::rng::Pcg32;
+
+fn make_executor(_s: usize) -> Result<BlockExecutor<ReferenceBackend>> {
+    let backend = ReferenceBackend::new();
+    let arch = backend.arch("cnn5")?;
+    let graph = TaskGraph::new(
+        3,
+        vec![1, 3, 4],
+        vec![
+            Partition(vec![0, 0, 0]),
+            Partition(vec![0, 0, 0]),
+            Partition(vec![0, 0, 1]),
+            Partition::singletons(3),
+        ],
+    )?;
+    let ncls = vec![2, 2, 2];
+    let mut rng = Pcg32::seed(7);
+    let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+    Ok(BlockExecutor::new(
+        backend,
+        Device::msp430(),
+        arch,
+        graph,
+        ncls,
+        store,
+    ))
+}
+
+/// A well-formed wire record the test executor accepts.
+fn record(id: u64, tenant: u32, qos: QosClass, deadline_us: u32) -> Vec<u8> {
+    let mut rng = Pcg32::seed(id ^ 0x5eed);
+    encode_frame(&WireFrame {
+        id,
+        tenant,
+        qos,
+        deadline_us,
+        shape: vec![1, 16, 16, 1],
+        data: (0..256).map(|_| rng.gauss() as f32).collect(),
+    })
+}
+
+/// Class and frame count for connection `c` in the load test: 16
+/// realtime connections with one frame each, 24 best-effort and 24
+/// batch connections with 12 frames each — 592 frames total.
+fn load_mix(c: u32) -> (QosClass, u64) {
+    match c {
+        0..=15 => (QosClass::Realtime, 1),
+        16..=39 => (QosClass::BestEffort, 12),
+        _ => (QosClass::Batch, 12),
+    }
+}
+
+/// 64 concurrent connections across all three classes into a 2-shard
+/// serve with a deliberately small injector: exact conservation per
+/// connection and in aggregate, zero realtime drops (see the module doc
+/// for why that is arithmetic, not luck), and nonzero best-effort and
+/// batch backpressure drops.
+#[test]
+fn qos_shedding_under_load_across_64_connections() {
+    const CONNS: u32 = 64;
+    const TOTAL: usize = 16 + 24 * 12 + 24 * 12; // 592
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let clients: Vec<_> = (0..CONNS)
+        .map(|c| {
+            thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                let (qos, n) = load_mix(c);
+                for i in 0..n {
+                    let rec = record(u64::from(c) * 100 + i, c, qos, 0);
+                    s.write_all(&rec).unwrap();
+                }
+            })
+        })
+        .collect();
+
+    let plan = ServePlan::unconditional(vec![0, 1, 2]);
+    let net = NetOpts {
+        producers: 4,
+        max_conns: CONNS as usize,
+        qos: true,
+        accept_grace: Duration::from_secs(10),
+    };
+    let opts = ShardOpts {
+        queue_depth: 80,
+        batch: 4,
+        // slow one shard slightly so the injector actually backs up
+        handicap: Some((0, Duration::from_micros(300))),
+        ..ShardOpts::default()
+    };
+    let (sr, nr) = serve_net(make_executor, 2, &plan, listener, &net, &opts)
+        .unwrap();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // every connection reported, none truncated, each exactly conserved
+    assert_eq!(nr.conns.len(), CONNS as usize);
+    assert_eq!(nr.dropped_truncated(), 0);
+    for c in &nr.conns {
+        assert_eq!(
+            c.delivered + c.dropped(),
+            c.offered,
+            "connection {} leaks frames",
+            c.conn
+        );
+        // accept order is arbitrary, so match expectations by tenant
+        let (_, want) = load_mix(c.tenant);
+        assert_eq!(
+            c.offered, want as usize,
+            "tenant {} offered the wrong count",
+            c.tenant
+        );
+    }
+
+    // aggregate conservation, across the socket boundary into the
+    // scheduler: everything offered is either served or accounted drop
+    assert_eq!(nr.offered(), TOTAL);
+    assert_eq!(nr.delivered() + nr.dropped(), TOTAL);
+    assert_eq!(sr.aggregate.frames, nr.delivered());
+    assert_eq!(sr.aggregate.frames + sr.aggregate.dropped, TOTAL);
+
+    // class rows cover every decoded record
+    let class_offered: usize = nr.classes.iter().map(|cl| cl.offered).sum();
+    assert_eq!(class_offered, TOTAL);
+
+    // the QoS contract: realtime is never shed …
+    let rt = nr.class(QosClass::Realtime);
+    assert_eq!(rt.offered, 16);
+    assert_eq!(rt.dropped(), 0, "a realtime frame was dropped");
+    assert_eq!(rt.delivered, 16);
+    // … while lower classes take the backpressure
+    assert!(
+        nr.class(QosClass::BestEffort).dropped_backpressure > 0,
+        "no best-effort backpressure drops — the injector never backed up"
+    );
+    assert!(
+        nr.class(QosClass::Batch).dropped_backpressure > 0,
+        "no batch backpressure drops — the injector never backed up"
+    );
+}
+
+/// Abrupt mid-record disconnects: every connection hangs up halfway
+/// through its final record, and the remainder is counted as one
+/// offered, truncated frame — conservation survives the hangup on every
+/// connection and in aggregate.
+#[test]
+fn qos_conservation_survives_abrupt_disconnects() {
+    const CONNS: u32 = 8;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let clients: Vec<_> = (0..CONNS)
+        .map(|c| {
+            thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                for i in 0..3u64 {
+                    let rec = record(
+                        u64::from(c) * 100 + i,
+                        c,
+                        QosClass::BestEffort,
+                        0,
+                    );
+                    s.write_all(&rec).unwrap();
+                }
+                // start a fourth record and hang up mid-frame
+                let partial =
+                    record(u64::from(c) * 100 + 3, c, QosClass::BestEffort, 0);
+                s.write_all(&partial[..partial.len() / 2]).unwrap();
+            })
+        })
+        .collect();
+
+    let plan = ServePlan::unconditional(vec![0, 1, 2]);
+    let net = NetOpts {
+        producers: 2,
+        max_conns: CONNS as usize,
+        qos: true,
+        accept_grace: Duration::from_secs(10),
+    };
+    // deep injector: nothing may be shed, so the only drops are the
+    // hangup remainders
+    let opts = ShardOpts { queue_depth: 1024, ..ShardOpts::default() };
+    let (sr, nr) = serve_net(make_executor, 2, &plan, listener, &net, &opts)
+        .unwrap();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    assert_eq!(nr.conns.len(), CONNS as usize);
+    for c in &nr.conns {
+        assert_eq!(c.offered, 4, "3 whole records + the unfinished one");
+        assert_eq!(c.dropped_truncated, 1, "hangup remainder must be counted");
+        assert_eq!(
+            c.delivered + c.dropped(),
+            c.offered,
+            "connection {} lost its hangup remainder",
+            c.conn
+        );
+    }
+    assert_eq!(nr.offered(), 4 * CONNS as usize);
+    assert_eq!(nr.dropped_truncated(), CONNS as usize);
+    // truncated frames carry no class; the class rows plus the
+    // truncated bucket cover everything offered
+    let class_offered: usize = nr.classes.iter().map(|cl| cl.offered).sum();
+    assert_eq!(class_offered + nr.dropped_truncated(), nr.offered());
+    // the whole records all made it through the deep injector
+    assert_eq!(nr.delivered(), 3 * CONNS as usize);
+    assert_eq!(sr.aggregate.frames, nr.delivered());
+}

@@ -543,6 +543,124 @@ fn prop_multi_producer_ingest_matches_single_producer() {
     );
 }
 
+/// Class-aware admission (`QosClass::admit_at`) sheds strictly in
+/// priority order. Replaying the listener's admission rule against a
+/// pure integer queue model over random arrival/service schedules:
+/// admission is monotone in backlog (never resumes as the queue grows),
+/// at any backlog where a protected class is refused every less
+/// protected class is refused too, realtime is never refused by class
+/// policy at all — so the only way a realtime frame drops is a
+/// physically full injector, a point where best-effort and batch were
+/// already being shed.
+#[test]
+fn prop_qos_shedding_never_drops_realtime_before_best_effort() {
+    use antler::coordinator::QosClass;
+    let (rt, be, bt) =
+        (QosClass::Realtime, QosClass::BestEffort, QosClass::Batch);
+    prop_check(
+        "qos-shedding-order",
+        60,
+        |rng| {
+            let capacity = gen::usize_in(rng, 1, 129); // 1..=128
+            let n = gen::usize_in(rng, 40, 300);
+            // one event = (arriving class, frames serviced just before)
+            let events: Vec<(usize, usize)> =
+                (0..n).map(|_| (rng.below(3), rng.below(4))).collect();
+            (capacity, events)
+        },
+        |(capacity, events)| {
+            let cap = *capacity;
+            let mut backlog = 0usize;
+            // lowest backlog at which each class (ALL order) was refused
+            let mut shed_floor = [usize::MAX; 3];
+            for &(which, serviced) in events {
+                backlog = backlog.saturating_sub(serviced);
+                // monotone: refusal at b implies refusal at b+1
+                for cls in QosClass::ALL {
+                    if !cls.admit_at(backlog, cap)
+                        && cls.admit_at(backlog + 1, cap)
+                    {
+                        return Err(format!(
+                            "{cls} refused at backlog {backlog} but admitted \
+                             at {} (cap {cap})",
+                            backlog + 1
+                        ));
+                    }
+                }
+                // priority order, pointwise: batch admitted ⇒ best-effort
+                // admitted ⇒ realtime admitted
+                if bt.admit_at(backlog, cap) && !be.admit_at(backlog, cap) {
+                    return Err(format!(
+                        "batch admitted but best-effort refused at backlog \
+                         {backlog}/{cap}"
+                    ));
+                }
+                if be.admit_at(backlog, cap) && !rt.admit_at(backlog, cap) {
+                    return Err(format!(
+                        "best-effort admitted but realtime refused at \
+                         backlog {backlog}/{cap}"
+                    ));
+                }
+                // realtime is never refused by class policy
+                if !rt.admit_at(backlog, cap) {
+                    return Err(format!(
+                        "class policy refused realtime at backlog \
+                         {backlog}/{cap}"
+                    ));
+                }
+                // the queue itself: class shed OR hard-full ⇒ drop
+                let cls = QosClass::ALL[which];
+                if cls.admit_at(backlog, cap) && backlog < cap {
+                    backlog += 1;
+                } else {
+                    shed_floor[which] = shed_floor[which].min(backlog);
+                    if cls == rt {
+                        // a dropped realtime frame means a physically full
+                        // injector — and at that backlog both lower
+                        // classes must already be shed by policy
+                        if backlog < cap {
+                            return Err(format!(
+                                "realtime dropped below the hard cap: \
+                                 backlog {backlog}/{cap}"
+                            ));
+                        }
+                        if be.admit_at(backlog, cap)
+                            || bt.admit_at(backlog, cap)
+                        {
+                            return Err(format!(
+                                "realtime dropped at backlog {backlog}/{cap} \
+                                 while a lower class was still admitted"
+                            ));
+                        }
+                    }
+                }
+            }
+            // whole-run ordering: at the lowest backlog where a class was
+            // ever refused, the policy must already refuse every less
+            // protected class (probe the rule — a lower class needn't
+            // have happened to *arrive* at that backlog)
+            if shed_floor[0] != usize::MAX
+                && (be.admit_at(shed_floor[0], cap)
+                    || bt.admit_at(shed_floor[0], cap))
+            {
+                return Err(format!(
+                    "realtime first dropped at backlog {} where a lower \
+                     class was still admitted (cap {cap})",
+                    shed_floor[0]
+                ));
+            }
+            if shed_floor[1] != usize::MAX && bt.admit_at(shed_floor[1], cap) {
+                return Err(format!(
+                    "best-effort first shed at backlog {} where batch was \
+                     still admitted (cap {cap})",
+                    shed_floor[1]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The expected-cost fitness of the solver's order is never beaten by a
 /// random valid order (Held–Karp optimality spot-check under
 /// conditionals).

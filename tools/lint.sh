@@ -46,6 +46,8 @@ hot_files=(
     "$SRC/coordinator/shard.rs"
     "$SRC/coordinator/ingest.rs"
     "$SRC/coordinator/server.rs"
+    "$SRC/coordinator/net.rs"
+    "$SRC/coordinator/wire.rs"
     "$SRC/exec/pool.rs"
     "$SRC/memory/tier.rs"
 )

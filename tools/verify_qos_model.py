@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Python port of the QoS admission model (coordinator/wire.rs), used to
+verify the arithmetic the Rust suite asserts and to derive the proxy
+rows in EXPERIMENTS.md §Network QoS on a machine without a cargo
+toolchain (same role as verify_tier_model.py for the weight tier).
+
+Three parts:
+
+1. `admit_at` boundary/monotonicity checks mirroring the
+   `coordinator::wire` unit tests (integer arithmetic, no floats).
+2. The zero-realtime-drop ceiling argument of
+   `tests/net_qos.rs::qos_shedding_under_load_across_64_connections`,
+   re-derived: with queue_depth 80, 4 producers and only 16 realtime
+   frames in the run, a realtime push can never see a full injector.
+3. The zero-service-limit proxy for the 64-connection scenario: all 592
+   frames admitted in accept order before any service completes (the
+   worst case for low classes — live runs drain during arrival, which
+   only shifts drops downward, never reorders classes).
+"""
+
+QUEUE_DEPTH = 80
+PRODUCERS = 4
+
+
+def admit_at(cls, backlog, capacity):
+    """Line-for-line port of QosClass::admit_at."""
+    if cls == "realtime":
+        return True
+    if cls == "best-effort":
+        return backlog * 4 < capacity * 3
+    if cls == "batch":
+        return backlog * 2 < capacity
+    raise ValueError(cls)
+
+
+def check(cond, msg):
+    if not cond:
+        raise SystemExit(f"FAIL: {msg}")
+    print(f"  ok: {msg}")
+
+
+def part1_boundaries():
+    print("== admit_at boundaries and monotonicity ==")
+    # the unit-test boundaries at capacity 64
+    check(admit_at("batch", 31, 64) and not admit_at("batch", 32, 64),
+          "batch admits at 31/64, refuses at 32/64 (1/2 boundary)")
+    check(admit_at("best-effort", 47, 64) and not admit_at("best-effort", 48, 64),
+          "best-effort admits at 47/64, refuses at 48/64 (3/4 boundary)")
+    for cap in range(1, 257):
+        for b in range(0, cap + 2):
+            # realtime never refused by class policy
+            assert admit_at("realtime", b, cap)
+            # priority order, pointwise
+            if admit_at("batch", b, cap):
+                assert admit_at("best-effort", b, cap), (b, cap)
+            # monotone: refusal never un-happens as backlog grows
+            for cls in ("best-effort", "batch"):
+                if not admit_at(cls, b, cap):
+                    assert not admit_at(cls, b + 1, cap), (cls, b, cap)
+    check(True, "priority order + monotonicity over caps 1..=256, all backlogs")
+
+
+def part2_ceiling():
+    print("== zero-realtime-drop ceiling (tests/net_qos.rs load test) ==")
+    # best-effort admission floor: largest backlog still admitted
+    be_floor = max(b for b in range(QUEUE_DEPTH) if admit_at("best-effort", b, QUEUE_DEPTH))
+    bt_floor = max(b for b in range(QUEUE_DEPTH) if admit_at("batch", b, QUEUE_DEPTH))
+    check(be_floor == 59, f"best-effort admits up to backlog {be_floor} (< 60)")
+    check(bt_floor == 39, f"batch admits up to backlog {bt_floor} (< 40)")
+    # non-realtime ceiling: one past the floor, plus one overshoot per
+    # concurrent producer racing the same backlog read (the probe and
+    # the push are not atomic — net.rs documents the race as shifting
+    # borderline admission only)
+    ceiling = be_floor + 1 + (PRODUCERS - 1)
+    check(ceiling == 63, f"non-realtime backlog ceiling {ceiling}")
+    rt_frames = 16
+    worst = ceiling + rt_frames - 1
+    check(worst < QUEUE_DEPTH,
+          f"worst realtime push sees {worst} < {QUEUE_DEPTH} queued "
+          "=> the hard cap cannot refuse realtime in any interleaving")
+
+
+def part3_proxy():
+    print("== zero-service-limit proxy (EXPERIMENTS.md §Network QoS) ==")
+    # the load test's mix: conns 0..16 realtime x1, 16..40 best-effort
+    # x12, 40..64 batch x12, drained whole-connection in accept order
+    # (one 12-record stream fits one READ_CHUNK pump visit)
+    offered = {"realtime": 0, "best-effort": 0, "batch": 0}
+    delivered = {"realtime": 0, "best-effort": 0, "batch": 0}
+    backlog = 0
+    for conn in range(64):
+        cls, n = (("realtime", 1) if conn < 16 else
+                  ("best-effort", 12) if conn < 40 else ("batch", 12))
+        for _ in range(n):
+            offered[cls] += 1
+            if admit_at(cls, backlog, QUEUE_DEPTH) and backlog < QUEUE_DEPTH:
+                delivered[cls] += 1
+                backlog += 1
+    total = sum(offered.values())
+    check(total == 592, "592 frames offered (16 + 24*12 + 24*12)")
+    check(delivered["realtime"] == offered["realtime"] == 16,
+          "realtime: 16/16 delivered, zero drops")
+    check(delivered["best-effort"] == 44,
+          "best-effort: 44/288 delivered in the zero-service limit "
+          "(backlog 16 -> 60, then the 3/4 gate closes)")
+    check(delivered["batch"] == 0,
+          "batch: 0/288 delivered in the zero-service limit "
+          "(the 1/2 gate is already closed at backlog 60)")
+    print("  per-class proxy rows:")
+    for cls in ("realtime", "best-effort", "batch"):
+        d = delivered[cls]
+        o = offered[cls]
+        print(f"    {cls:<11} offered {o:>3}  delivered {d:>3}  "
+              f"backpressure {o - d:>3}")
+
+
+if __name__ == "__main__":
+    part1_boundaries()
+    part2_ceiling()
+    part3_proxy()
+    print("qos model verification OK")
