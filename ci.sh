@@ -20,6 +20,11 @@
 #                      # (UB check). Skips loudly without nightly+miri.
 #   ./ci.sh --tsan     # advisory: ThreadSanitizer over the test suite
 #                      # (-Zsanitizer=thread). Skips loudly w/o nightly.
+#   ./ci.sh --analyzer-only
+#                      # fast pre-commit lane: just the semantic lint
+#                      # gate (cargo run -p pallas-analyzer, rules
+#                      # A1-A5), falling back to tools/lint.sh with a
+#                      # loud advisory when cargo is unavailable.
 #
 # See CONCURRENCY.md for what each lane proves and how to run it locally.
 set -euo pipefail
@@ -30,6 +35,7 @@ PJRT=0
 LOOM=0
 MIRI=0
 TSAN=0
+ANALYZER_ONLY=0
 for arg in "$@"; do
     case "$arg" in
         --strict) STRICT=1 ;;   # kept for compatibility; already the default
@@ -38,8 +44,76 @@ for arg in "$@"; do
         --loom) LOOM=1 ;;
         --miri) MIRI=1 ;;
         --tsan) TSAN=1 ;;
+        --analyzer-only) ANALYZER_ONLY=1 ;;
     esac
 done
+
+# The semantic lint gate: pallas-analyzer (tools/analyzer) parses
+# rust/src and enforces rules A1-A5 (facade, hot-path panics, wait
+# annotations, guard-across-blocking, custody exhaustiveness) — see
+# CONCURRENCY.md §Static gates. Gating when cargo exists; otherwise a
+# LOUD advisory fallback to the grep approximation (tools/lint.sh),
+# which cannot check A4/A5 at all.
+run_analyzer() {
+    echo "== analyzer: cargo run -p pallas-analyzer (gating, rules A1-A5) =="
+    if command -v cargo >/dev/null 2>&1; then
+        cargo run --release -q -p pallas-analyzer
+    else
+        echo "WARNING: cargo unavailable — semantic rules A1-A5 NOT checked."
+        echo "         Falling back to the grep approximation (tools/lint.sh);"
+        echo "         run './ci.sh --analyzer-only' on a machine with a Rust"
+        echo "         toolchain before merging."
+        ../tools/lint.sh
+    fi
+}
+
+# Teeth check: seed one violation per rule into a scratch copy of the
+# tree and assert the gate fails AND names the right rule — the same
+# discipline the grep gates got in PR 6. The A2 payload is appended
+# AFTER wire.rs's test module on purpose: the awk fallback goes blind
+# past the first test marker, the analyzer's item-level spans do not.
+analyzer_teeth() {
+    echo "== analyzer teeth: seeded A1-A5 violations must fail the gate =="
+    cargo build --release -q -p pallas-analyzer
+    local bin="${CARGO_TARGET_DIR:-../target}/release/pallas-analyzer"
+    local rule tmp out
+    for rule in A1 A2 A3 A4 A5; do
+        tmp=$(mktemp -d)
+        mkdir -p "$tmp/rust"
+        cp -r src "$tmp/rust/src"
+        case "$rule" in
+            A1) echo 'use std::{collections::BTreeMap, sync::Mutex as TeethMutex};' \
+                >> "$tmp/rust/src/util/mod.rs" ;;
+            A2) echo 'pub fn teeth_a2(v: &[u32]) -> u32 { v[0] }' \
+                >> "$tmp/rust/src/coordinator/wire.rs" ;;
+            A3) echo 'pub fn teeth_a3(cv: &Cv, g: G) -> G { cv.wait(g) }' \
+                >> "$tmp/rust/src/util/mod.rs" ;;
+            A4) echo 'pub fn teeth_a4(m: &M) { let g = lock_unpoisoned(m); sleep(D); drop(g); }' \
+                >> "$tmp/rust/src/util/mod.rs" ;;
+            A5) echo 'pub fn teeth_a5(a: Admission) -> u32 { match a { Admission::Delivered => 1, _ => 0 } }' \
+                >> "$tmp/rust/src/util/mod.rs" ;;
+        esac
+        if out=$("$bin" "$tmp" 2>&1); then
+            echo "analyzer teeth FAILED: seeded $rule violation passed the gate"
+            rm -rf "$tmp"
+            exit 1
+        fi
+        if ! grep -q ": $rule:" <<<"$out"; then
+            echo "analyzer teeth FAILED: seeded $rule violation not reported as $rule"
+            echo "$out"
+            rm -rf "$tmp"
+            exit 1
+        fi
+        rm -rf "$tmp"
+        echo "  teeth($rule): gate fails as it must"
+    done
+}
+
+if [[ "$ANALYZER_ONLY" == 1 ]]; then
+    run_analyzer
+    echo "analyzer-only lane OK"
+    exit 0
+fi
 
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
@@ -83,10 +157,16 @@ tier_gate --test props prop_qos_shedding_never_drops_realtime_before_best_effort
 echo "== benches compile: cargo bench --no-run =="
 cargo bench --no-run
 
-# the custom concurrency lint (tools/lint.sh): facade bypasses, hot-path
-# panics, unannotated condvar waits. Always gating — it is pure grep/awk,
-# so there is no toolchain drift to be advisory about.
-echo "== custom lint: tools/lint.sh =="
+# the semantic lint gate (rules A1-A5) + its seeded-violation teeth
+run_analyzer
+if command -v cargo >/dev/null 2>&1; then
+    analyzer_teeth
+fi
+
+# the grep fallback still runs in the default lane — it is nearly free,
+# and running it here is what keeps the fallback honest (a rule that
+# drifts from the analyzer shows up as a disagreement, not silently)
+echo "== custom lint (fallback parity): tools/lint.sh =="
 ../tools/lint.sh
 
 # clippy on the default feature set — gating by default (a finding fails

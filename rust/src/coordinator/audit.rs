@@ -42,6 +42,8 @@ impl QueueLedger {
     fn queued(&self) -> u64 {
         match self.enqueued.checked_sub(self.popped + self.drained) {
             Some(q) => q,
+            // lint:allow(panic) — the auditor's teeth: a conservation
+            // breach must halt the debug run at the violation site
             None => panic!(
                 "custody violation: removed more frames than enqueued \
                  ({} popped + {} drained > {} enqueued)",
@@ -53,6 +55,8 @@ impl QueueLedger {
     fn in_flight(&self) -> u64 {
         match self.popped.checked_sub(self.served + self.failed) {
             Some(f) => f,
+            // lint:allow(panic) — the auditor's teeth: a conservation
+            // breach must halt the debug run at the violation site
             None => panic!(
                 "custody violation: reported more frames than popped \
                  ({} served + {} failed > {} popped)",
@@ -380,6 +384,8 @@ impl TierLedger {
     fn in_flight(&self) -> u64 {
         match self.issued.checked_sub(self.completed + self.cancelled) {
             Some(f) => f,
+            // lint:allow(panic) — the auditor's teeth: a conservation
+            // breach must halt the debug run at the violation site
             None => panic!(
                 "custody violation: tier retired more loads than issued \
                  ({} completed + {} cancelled > {} issued)",
@@ -391,6 +397,8 @@ impl TierLedger {
     fn resident(&self) -> u64 {
         match self.inserted.checked_sub(self.evicted) {
             Some(r) => r,
+            // lint:allow(panic) — the auditor's teeth: a conservation
+            // breach must halt the debug run at the violation site
             None => panic!(
                 "custody violation: tier evicted more blocks than inserted \
                  ({} evicted > {} inserted)",

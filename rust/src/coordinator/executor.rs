@@ -191,7 +191,7 @@ impl<B: Backend> BlockExecutor<B> {
         task: usize,
         input: &Tensor,
     ) -> Result<(usize, Cost)> {
-        assert_eq!(input.shape[0], 1, "serving path is batch-1");
+        assert_eq!(input.shape.first(), Some(&1), "serving path is batch-1");
         let (plan, flat_cost) = self.plan(sample, task);
         // flat residency: the plan's cost is the answer. Tiered: the
         // plan still decides *what executes* (identical predictions),
@@ -310,7 +310,7 @@ impl<B: Backend> BlockExecutor<B> {
             inputs.len()
         );
         for t in inputs {
-            ensure!(t.shape[0] == 1, "each batched frame must be batch-1");
+            ensure!(t.shape.first() == Some(&1), "each batched frame must be batch-1");
         }
         let xbatch = Tensor::concat_batch(inputs);
         let nseg = self.graph.n_segments();
@@ -360,13 +360,11 @@ impl<B: Backend> BlockExecutor<B> {
                 let group = self.graph.group_of(s, t);
                 let nlayers =
                     self.graph.segment_layers(&self.arch, s).len() as u64;
-                let hit = matches!(
-                    &bact[s],
-                    Some(c) if c.group == group
+                let hit = bact[s].as_ref().filter(|c| {
+                    c.group == group
                         && act_ids.iter().all(|id| c.ids.contains(id))
-                );
-                if hit {
-                    let c = bact[s].as_ref().unwrap();
+                });
+                if let Some(c) = hit {
                     x = Some(gather_rows(&c.out, &c.ids, &act_ids));
                     self.layer_skips += nlayers * active.len() as u64;
                     continue;
@@ -478,6 +476,9 @@ fn gather_rows(src: &Tensor, ids: &[u64], want: &[u64]) -> Tensor {
     let per: usize = src.shape[1..].iter().product();
     let mut data = Vec::with_capacity(want.len() * per);
     for w in want {
+        // lint:allow(panic) — caller invariant: `want` is assembled by
+        // filtering `ids`, so every wanted id is present; absence is a
+        // batching bug worth dying loudly for
         let row = ids
             .iter()
             .position(|id| id == w)
@@ -485,7 +486,7 @@ fn gather_rows(src: &Tensor, ids: &[u64], want: &[u64]) -> Tensor {
         data.extend_from_slice(&src.data[row * per..(row + 1) * per]);
     }
     let mut shape = src.shape.clone();
-    shape[0] = want.len();
+    shape[0] = want.len(); // lint:allow(panic) — Tensor rank >= 1 by construction
     Tensor::new(shape, data)
 }
 

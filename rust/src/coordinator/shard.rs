@@ -424,7 +424,9 @@ where
                     Ok((r, sk)) => {
                         out.results.push(r);
                         out.tasks_skipped += sk;
-                        out.batch_hist[0] += 1; // frame-at-a-time
+                        // lint:allow(panic) — batch_hist is sized >= 1
+                        // at construction; bucket 0 is frame-at-a-time
+                        out.batch_hist[0] += 1;
                     }
                     Err(e) => {
                         out.error = Some(format!("{e:#}"));
@@ -924,6 +926,8 @@ where
     // a shard is "warm" when the blocks every task in the round shares
     // (the stable trunk) are resident; branch segments swap groups
     // within a round and are excluded from the test
+    // lint:allow(panic) — `n = n_shards.max(1)` above, so the loop
+    // pushed at least one executor
     let graph = &executors[0].graph;
     let nseg = graph.n_segments();
     let needed: Vec<Option<usize>> = match plan.order.first() {

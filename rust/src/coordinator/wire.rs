@@ -256,12 +256,15 @@ pub fn decode_frame(
     }
     let id = rd_u64(buf, 4);
     let tenant = rd_u32(buf, 12);
-    let qos = match QosClass::from_u8(buf[16]) {
+    // lint:allow(panic) — framing: `buf.len() >= 4 + len` was checked
+    // above and `len >= FIXED`, so every fixed-header byte is in range
+    let qos_byte = buf[16];
+    let qos = match QosClass::from_u8(qos_byte) {
         Some(q) => q,
-        None => return Err(WireError(format!("unknown QoS class {}", buf[16]))),
+        None => return Err(WireError(format!("unknown QoS class {qos_byte}"))),
     };
     let deadline_us = rd_u32(buf, 17);
-    let ndims = buf[21] as usize;
+    let ndims = buf[21] as usize; // lint:allow(panic) — within the checked fixed header
     let mut shape = Vec::with_capacity(ndims);
     let mut numel = 1usize;
     for i in 0..ndims {

@@ -1,0 +1,12 @@
+//! A1 bad: every known evasion of the old grep facade rule.
+
+use std::{collections::HashMap, sync::Mutex}; //~ A1
+use std::sync as s; //~ A1
+use std::thread; //~ A1
+use std as renamed; //~ A1
+
+pub fn fully_qualified() {
+    let _m = std::sync::Mutex::new(0u32); //~ A1
+    let _t = std::thread::current(); //~ A1
+    let _map: HashMap<u32, u32> = HashMap::new();
+}

@@ -1,0 +1,14 @@
+//! A1 good: benign std imports; sync only through the facade; the
+//! banned paths appearing in strings and prose do not count.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
+use std::time::Duration;
+
+pub fn stdlib_only() {
+    let mut m: HashMap<u32, VecDeque<u32>> = HashMap::new();
+    m.entry(1).or_default().push_back(2);
+    let _d = Duration::from_millis(5);
+    let _s = "std::sync is fine inside a string literal";
+    // and std::thread in a comment is fine too
+}

@@ -1,0 +1,26 @@
+//! A2 bad: panics on the hot path — including one appended AFTER a
+//! test module, the case the awk window could not see.
+
+pub fn frame(v: &[u32], r: Result<u32, ()>) -> u32 {
+    let first = v[0]; //~ A2
+    let x = r.unwrap(); //~ A2
+    let y = Some(1u32).expect("present"); //~ A2
+    if first > 9 {
+        panic!("bad frame"); //~ A2
+    }
+    x + y
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        let v = [1u32, 2];
+        assert_eq!(v[0], 1);
+        Some(2u32).unwrap();
+    }
+}
+
+pub fn appended_after_tests(v: &[u32]) -> u32 {
+    v[1] //~ A2
+}

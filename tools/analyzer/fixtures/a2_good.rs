@@ -1,0 +1,20 @@
+//! A2 good: fallible access via `?` / `.first()`, a justified
+//! annotation, and unrestricted panics inside test regions.
+
+pub fn frame(v: &[u32], r: Result<u32, ()>) -> Result<u32, ()> {
+    let first = *v.first().ok_or(())?;
+    let x = r?;
+    // lint:allow(panic) — hist is sized at construction; index 0 exists
+    let h = v[0];
+    Ok(first + x + h)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        Some(1u32).unwrap();
+        let v = [7u32];
+        assert_eq!(v[0], 7);
+    }
+}

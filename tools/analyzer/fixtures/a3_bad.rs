@@ -1,0 +1,16 @@
+//! A3 bad: an untimed wait with no annotation, and one whose
+//! annotation names a loom model that does not exist.
+
+pub fn unannotated(cv: &Condvar, mut g: Guard) -> Guard {
+    loop {
+        if g.ready {
+            return g;
+        }
+        g = cv.wait(g); //~ A3
+    }
+}
+
+pub fn names_missing_model(cv: &Condvar, g: Guard) -> Guard {
+    // loom-verified: loom_model_that_does_not_exist
+    cv.wait(g) //~ A3
+}

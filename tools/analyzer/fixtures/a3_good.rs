@@ -1,0 +1,21 @@
+//! A3 good: an annotated untimed wait naming a model that exists in
+//! this file, and a timeout-bounded wait that needs no annotation.
+
+pub fn annotated(cv: &Condvar, mut g: Guard) -> Guard {
+    while !g.ready {
+        // loom-verified: loom_fixture_wake_model proves the notify
+        // cannot be lost between the predicate check and the park
+        g = cv.wait(g);
+    }
+    g
+}
+
+pub fn timed(cv: &Condvar, g: Guard) -> Guard {
+    let (g, _timed_out) = cv.wait_timeout(g, SHORT);
+    g
+}
+
+#[cfg(all(loom, test))]
+mod loom_tests {
+    fn loom_fixture_wake_model() {}
+}

@@ -1,0 +1,28 @@
+//! A4 bad: lock guards live across blocking calls — a sleep, a
+//! channel send, and a wait on a *different* guard.
+
+pub fn sleep_with_guard(m: &Mutex) {
+    let g = lock_unpoisoned(m);
+    crate::sync::thread::sleep(SHORT); //~ A4
+    drop(g);
+}
+
+pub fn send_with_guard(m: &Mutex, tx: &Sender) {
+    let mut q = m.lock();
+    q.push(1);
+    tx.send(2); //~ A4
+}
+
+pub fn wait_on_other_guard(a: &Mutex, b: &Mutex, cv: &Condvar) {
+    let held = lock_unpoisoned(a);
+    let mut g = lock_unpoisoned(b);
+    // loom-verified: loom_fixture_double_lock
+    g = cv.wait(g); //~ A4
+    drop(held);
+    drop(g);
+}
+
+#[cfg(all(loom, test))]
+mod loom_tests {
+    fn loom_fixture_double_lock() {}
+}

@@ -1,0 +1,40 @@
+//! A4 good: drop before blocking, scope exit before blocking, the
+//! sanctioned wait hand-off (the wait consumes the guard), and a
+//! justified annotated hold.
+
+pub fn drop_then_sleep(m: &Mutex) {
+    let g = lock_unpoisoned(m);
+    let snapshot = g.len();
+    drop(g);
+    crate::sync::thread::sleep(SHORT);
+    let _ = snapshot;
+}
+
+pub fn scope_exit_then_send(m: &Mutex, tx: &Sender) {
+    {
+        let g = lock_unpoisoned(m);
+        g.touch();
+    }
+    tx.send(3);
+}
+
+pub fn wait_handoff(m: &Mutex, cv: &Condvar) {
+    let mut g = lock_unpoisoned(m);
+    while !g.ready {
+        // loom-verified: loom_fixture_handoff_model
+        g = wait_unpoisoned(cv, g);
+    }
+}
+
+pub fn annotated_hold(m: &Mutex, tx: &Sender) {
+    let g = lock_unpoisoned(m);
+    // lint:allow(guard-across-blocking) — tx is unbounded, the send
+    // cannot block; the guard serialises snapshot order with send order
+    tx.send(g.snapshot());
+    drop(g);
+}
+
+#[cfg(all(loom, test))]
+mod loom_tests {
+    fn loom_fixture_handoff_model() {}
+}

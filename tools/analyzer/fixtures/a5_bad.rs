@@ -1,0 +1,23 @@
+//! A5 bad: wildcard and catch-all arms in matches over custody enums.
+
+pub fn account(a: Admission) -> u32 {
+    match a {
+        Admission::Delivered => 1,
+        Admission::Stale => 2,
+        _ => 0, //~ A5
+    }
+}
+
+pub fn route(q: QosClass, depth: usize) -> usize {
+    match q {
+        QosClass::Realtime => 0,
+        other => depth, //~ A5
+    }
+}
+
+pub fn evict_label(e: EvictPolicy) -> &'static str {
+    match e {
+        EvictPolicy::Affinity { .. } => "affinity",
+        _ => "other", //~ A5
+    }
+}

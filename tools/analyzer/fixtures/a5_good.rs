@@ -1,0 +1,30 @@
+//! A5 good: exhaustive custody matches; enums in value position
+//! (the from_u8 shape) keep their open-ended wildcard; a justified
+//! wildcard is allowed with a reason.
+
+pub fn account(a: Admission) -> u32 {
+    match a {
+        Admission::Delivered => 1,
+        Admission::Stale => 2,
+        Admission::Backpressure => 3,
+        Admission::Truncated => 4,
+    }
+}
+
+pub fn from_u8(v: u8) -> Option<QosClass> {
+    match v {
+        0 => Some(QosClass::Realtime),
+        1 => Some(QosClass::Standard),
+        _ => None,
+    }
+}
+
+pub fn display(q: QosClass) -> &'static str {
+    match q {
+        QosClass::Realtime => "rt",
+        QosClass::Standard => "std",
+        // lint:allow(custody-wildcard) — label only; the accounting
+        // sites enumerate every variant, a display label need not
+        _ => "other",
+    }
+}

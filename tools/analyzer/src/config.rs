@@ -1,0 +1,63 @@
+//! What the rules scan. Paths are relative to the scanned source root
+//! (`rust/src`). Kept in one place so the analyzer and the grep
+//! fallback (`tools/lint.sh`) can be diffed against each other — the
+//! rule table in CONCURRENCY.md §Static gates mirrors this file.
+
+pub struct Config {
+    /// Files under this prefix are the concurrency facade: the one
+    /// sanctioned home for raw `std::sync` / `std::thread` (A1) and
+    /// for the primitive wait the facade itself wraps (A3, A4).
+    pub facade_prefix: String,
+    /// The per-frame serving files: A2's hot-path panic ban applies
+    /// here. Mirrors `hot_files` in tools/lint.sh R2 (plus the two
+    /// debug-per-frame files lint.sh historically skipped:
+    /// coordinator/executor.rs and coordinator/audit.rs).
+    pub hot_files: Vec<String>,
+    /// Enums whose `match` sites carry conservation accounting: a
+    /// wildcard arm over these silently swallows a future variant and
+    /// breaks `delivered + stale + backpressure + truncated == offered`
+    /// (A5). Extend this list when a ledger transition enum lands.
+    pub custody_enums: Vec<String>,
+}
+
+impl Config {
+    /// The real tree's configuration.
+    pub fn tree() -> Config {
+        Config {
+            facade_prefix: "sync/".into(),
+            hot_files: vec![
+                "coordinator/shard.rs".into(),
+                "coordinator/ingest.rs".into(),
+                "coordinator/server.rs".into(),
+                "coordinator/net.rs".into(),
+                "coordinator/wire.rs".into(),
+                "coordinator/executor.rs".into(),
+                "coordinator/audit.rs".into(),
+                "exec/pool.rs".into(),
+                "memory/tier.rs".into(),
+            ],
+            custody_enums: vec![
+                "Admission".into(),
+                "QosClass".into(),
+                "EvictPolicy".into(),
+                "SegmentAction".into(),
+            ],
+        }
+    }
+
+    /// Fixture configuration: every fixture file is treated as hot so
+    /// A2 applies, with the same custody enums.
+    pub fn fixtures(rel: &str) -> Config {
+        let mut c = Config::tree();
+        c.hot_files = vec![rel.to_string()];
+        c
+    }
+
+    pub fn is_facade(&self, rel: &str) -> bool {
+        rel.starts_with(&self.facade_prefix)
+    }
+
+    pub fn is_hot(&self, rel: &str) -> bool {
+        self.hot_files.iter().any(|h| h == rel)
+    }
+}

@@ -1,0 +1,470 @@
+//! A minimal, honest Rust lexer: exactly enough to tell code from
+//! comments, strings, and char literals, so the rule passes can reason
+//! about *tokens* instead of raw lines. This is what closes the grep
+//! gates' known evasions — a `use std::{sync, thread}` inside a string
+//! or comment is not code, and a grouped import is not hidden by line
+//! formatting.
+//!
+//! Deliberately *not* a full parser: no expression trees, no types.
+//! The structural layer (`model.rs`) adds item spans, test regions and
+//! statement boundaries on top of this token stream; the rules consume
+//! both. `syn` would give a true AST, but it would also make the gate
+//! unbuildable on an offline machine — the same trade that keeps the
+//! loom dependency target-gated (see `tools/analyzer/Cargo.toml`).
+
+/// Token kind. Comments are kept in the stream (annotations like
+/// `lint:allow(...)` and `loom-verified:` live in them); rule passes
+/// that only care about code iterate `FileModel::code`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Lifetime,
+    Int,
+    Float,
+    Str,
+    Char,
+    Comment,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+    /// 1-based line of the token's last character (block comments and
+    /// multi-line strings span lines).
+    pub end_line: usize,
+    /// Char offset of the token's first character — adjacency checks
+    /// (`::` = two `:` puncts at consecutive offsets, `=>` likewise).
+    pub pos: usize,
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+
+    /// An integer literal (decimal, hex, suffixed, underscored): the
+    /// shape the indexing rule cares about — `v[0]`, `v[0x1F]`.
+    pub fn is_plain_int(&self) -> bool {
+        self.kind == Kind::Int
+    }
+}
+
+fn ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a full token stream (comments included).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let text_of = |a: usize, b: usize, cs: &[char]| -> String { cs[a..b].iter().collect() };
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // ---------------------------------------------------- comments
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Comment,
+                text: text_of(start, i, &cs),
+                line,
+                end_line: line,
+                pos: start,
+            });
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: Kind::Comment,
+                text: text_of(start, i, &cs),
+                line: start_line,
+                end_line: line,
+                pos: start,
+            });
+            continue;
+        }
+        // ------------------------- raw strings / byte strings / r#idents
+        if c == 'r' || c == 'b' {
+            // possible prefixes: r" r#" b" b' br" br#" (and r#ident)
+            let mut j = i;
+            let mut is_raw = false;
+            let mut is_byte_char = false;
+            if cs[j] == 'b' {
+                j += 1;
+                if j < n && cs[j] == 'r' {
+                    is_raw = true;
+                    j += 1;
+                } else if j < n && cs[j] == '\'' {
+                    is_byte_char = true;
+                }
+            } else {
+                // c == 'r'
+                j += 1;
+                is_raw = true;
+            }
+            if is_byte_char {
+                // b'x' — lex as a char literal below by skipping the b
+                let (start, start_line) = (i, line);
+                i = j; // now at the quote
+                i = lex_char_body(&cs, i, &mut line);
+                toks.push(Tok {
+                    kind: Kind::Char,
+                    text: text_of(start, i, &cs),
+                    line: start_line,
+                    end_line: line,
+                    pos: start,
+                });
+                continue;
+            }
+            let mut hashes = 0usize;
+            let mut k = j;
+            while is_raw && k < n && cs[k] == '#' {
+                hashes += 1;
+                k += 1;
+            }
+            let raw_string = is_raw && k < n && cs[k] == '"';
+            let plain_string = !is_raw && j < n && cs[j] == '"' && cs[i] == 'b';
+            if raw_string {
+                // r##"..."## — scan for `"` + `hashes` hashes
+                let (start, start_line) = (i, line);
+                i = k + 1;
+                'outer: while i < n {
+                    if cs[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if cs[i] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes && i + 1 + h < n && cs[i + 1 + h] == '#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            i += 1 + hashes;
+                            break 'outer;
+                        }
+                    }
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Str,
+                    text: String::from("r\"…\""),
+                    line: start_line,
+                    end_line: line,
+                    pos: start,
+                });
+                continue;
+            }
+            if plain_string {
+                // b"..." — escaped string body
+                let (start, start_line) = (i, line);
+                i = j; // at the quote
+                i = lex_str_body(&cs, i, &mut line);
+                toks.push(Tok {
+                    kind: Kind::Str,
+                    text: text_of(start, i.min(n), &cs),
+                    line: start_line,
+                    end_line: line,
+                    pos: start,
+                });
+                continue;
+            }
+            if is_raw && hashes == 1 && k < n && ident_start(cs[k]) {
+                // r#ident — a raw identifier
+                let start = i;
+                let mut e = k;
+                while e < n && ident_cont(cs[e]) {
+                    e += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Ident,
+                    text: text_of(k, e, &cs),
+                    line,
+                    end_line: line,
+                    pos: start,
+                });
+                i = e;
+                continue;
+            }
+            // plain identifier starting with r/b — fall through
+        }
+        // ------------------------------------------------------ strings
+        if c == '"' {
+            let (start, start_line) = (i, line);
+            i = lex_str_body(&cs, i, &mut line);
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: text_of(start, i.min(n), &cs),
+                line: start_line,
+                end_line: line,
+                pos: start,
+            });
+            continue;
+        }
+        // ------------------------------------- char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && ident_start(cs[i + 1]) && cs[i + 1] != '\\' {
+                // scan the ident; a closing quote right after means char
+                let mut e = i + 1;
+                while e < n && ident_cont(cs[e]) {
+                    e += 1;
+                }
+                if e < n && cs[e] == '\'' && e > i + 1 {
+                    // 'a' — char literal (only single-char idents close)
+                    toks.push(Tok {
+                        kind: Kind::Char,
+                        text: text_of(i, e + 1, &cs),
+                        line,
+                        end_line: line,
+                        pos: i,
+                    });
+                    i = e + 1;
+                    continue;
+                }
+                toks.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: text_of(i, e, &cs),
+                    line,
+                    end_line: line,
+                    pos: i,
+                });
+                i = e;
+                continue;
+            }
+            // '\n', '0', '{' … — a char literal body
+            let (start, start_line) = (i, line);
+            i = lex_char_body(&cs, i, &mut line);
+            toks.push(Tok {
+                kind: Kind::Char,
+                text: text_of(start, i.min(n), &cs),
+                line: start_line,
+                end_line: line,
+                pos: start,
+            });
+            continue;
+        }
+        // ------------------------------------------------------ numbers
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut saw_dot = false;
+            while i < n && (ident_cont(cs[i])) {
+                i += 1;
+            }
+            // fraction: `1.5` but not `1..5` and not `1.method()`
+            if i + 1 < n
+                && cs[i] == '.'
+                && cs[i + 1].is_ascii_digit()
+            {
+                saw_dot = true;
+                i += 1;
+                while i < n && ident_cont(cs[i]) {
+                    i += 1;
+                }
+            }
+            // exponent sign: `1e-3`
+            if i < n
+                && (cs[i] == '+' || cs[i] == '-')
+                && i > start
+                && (cs[i - 1] == 'e' || cs[i - 1] == 'E')
+                && i + 1 < n
+                && cs[i + 1].is_ascii_digit()
+            {
+                saw_dot = true;
+                i += 1;
+                while i < n && ident_cont(cs[i]) {
+                    i += 1;
+                }
+            }
+            let text = text_of(start, i, &cs);
+            let kind = if saw_dot || text.contains('.') { Kind::Float } else { Kind::Int };
+            toks.push(Tok { kind, text, line, end_line: line, pos: start });
+            continue;
+        }
+        // --------------------------------------------------- identifiers
+        if ident_start(c) {
+            let start = i;
+            while i < n && ident_cont(cs[i]) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: text_of(start, i, &cs),
+                line,
+                end_line: line,
+                pos: start,
+            });
+            continue;
+        }
+        // ------------------------------------------------- single punct
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+            end_line: line,
+            pos: i,
+        });
+        i += 1;
+    }
+    toks
+}
+
+/// Consume an escaped string body starting at the opening quote; return
+/// the index just past the closing quote.
+fn lex_str_body(cs: &[char], mut i: usize, line: &mut usize) -> usize {
+    let n = cs.len();
+    i += 1; // opening quote
+    while i < n {
+        match cs[i] {
+            '\\' => {
+                // an escaped newline (line-continuation) still ends a
+                // source line — keep the line counter honest
+                if i + 1 < n && cs[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Consume a char-literal body starting at the opening quote; return
+/// the index just past the closing quote.
+fn lex_char_body(cs: &[char], mut i: usize, line: &mut usize) -> usize {
+    let n = cs.len();
+    i += 1; // opening quote
+    while i < n {
+        match cs[i] {
+            '\\' => {
+                if i + 1 < n && cs[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '\'' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_strings_and_chars_are_not_code() {
+        let toks = kinds(r#"let s = "std::sync"; // std::thread"#);
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Str && t.contains("sync")));
+        assert!(toks.iter().any(|(k, t)| *k == Kind::Comment && t.contains("thread")));
+        // no Ident token spells sync/thread
+        assert!(!toks
+            .iter()
+            .any(|(k, t)| *k == Kind::Ident && (t == "sync" || t == "thread")));
+    }
+
+    #[test]
+    fn raw_strings_swallow_quotes_and_hashes() {
+        let toks = kinds(r###"let x = r#"a "quoted" std::sync"# ; let y = 1;"###);
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|(k, _)| *k == Kind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "x", "let", "y"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'a' }");
+        assert_eq!(toks.iter().filter(|(k, _)| *k == Kind::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|(k, _)| *k == Kind::Char).count(), 1);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let toks = kinds("/* a /* b */ c */ ident");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1].1, "ident");
+    }
+
+    #[test]
+    fn ints_and_floats() {
+        let toks = lex("a[0] + 1_000usize + 1.5 + 0x1F");
+        let ints: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Int)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(ints, ["0", "1_000usize", "0x1F"]);
+        assert!(toks.iter().any(|t| t.kind == Kind::Float && t.text == "1.5"));
+        assert!(lex("v[0]")[2].is_plain_int());
+    }
+
+    #[test]
+    fn multiline_tokens_record_end_line() {
+        let toks = lex("/* a\nb\nc */ x");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].end_line, 3);
+        assert_eq!(toks[1].line, 3);
+    }
+}

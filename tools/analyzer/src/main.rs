@@ -1,0 +1,41 @@
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!(
+            "pallas-analyzer — semantic lint gate (rules A1–A5) for rust/src\n\
+             \n\
+             usage: pallas-analyzer [REPO_ROOT]\n\
+             \n\
+             REPO_ROOT defaults to the repository containing this tool.\n\
+             Scans REPO_ROOT/rust/src, prints `file:line: rule: message`\n\
+             per finding, exits 1 if there are any. Rule table:\n\
+             CONCURRENCY.md §Static gates; fallback: tools/lint.sh."
+        );
+        return ExitCode::SUCCESS;
+    }
+    let root: PathBuf = match args.first() {
+        Some(p) => PathBuf::from(p),
+        // tools/analyzer/../.. == repo root
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join(".."),
+    };
+    let findings = match pallas_analyzer::analyze_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("pallas-analyzer: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    if findings.is_empty() {
+        eprintln!("pallas-analyzer: clean (rules A1-A5, {})", root.join("rust/src").display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("pallas-analyzer: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

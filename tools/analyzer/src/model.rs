@@ -1,0 +1,339 @@
+//! Structural layer over the token stream: per-line code/comment maps,
+//! *item-level* test regions (the semantic upgrade over lint.sh's
+//! "stop at the first test-cfg marker" — an item appended after a test
+//! module is still production code here), and annotation attachment
+//! (a `lint:allow(...)` / `loom-verified:` comment counts only when it
+//! is attached to the statement containing the finding, not merely
+//! within an 8-line window).
+
+use crate::lexer::{lex, Kind, Tok};
+
+pub struct FileModel {
+    /// Path relative to the scanned source root, e.g.
+    /// `coordinator/shard.rs`.
+    pub rel: String,
+    /// Full token stream, comments included.
+    pub toks: Vec<Tok>,
+    /// Indices into `toks` of the non-comment tokens.
+    pub code: Vec<usize>,
+    /// 1-based: line carries at least one code token.
+    pub line_is_code: Vec<bool>,
+    /// 1-based: line carries at least one comment token.
+    pub line_has_comment: Vec<bool>,
+    /// 1-based: concatenated comment text, attributed to the comment's
+    /// first line.
+    pub line_comment: Vec<String>,
+    /// 1-based: line lies inside a `#[cfg(...test...)]` / `#[test]`
+    /// item span or a `mod tests` / `mod loom_tests` body.
+    pub test_line: Vec<bool>,
+}
+
+impl FileModel {
+    pub fn build(rel: &str, src: &str) -> FileModel {
+        let toks = lex(src);
+        let nlines = src.lines().count() + 2;
+        let mut line_is_code = vec![false; nlines + 1];
+        let mut line_has_comment = vec![false; nlines + 1];
+        let mut line_comment = vec![String::new(); nlines + 1];
+        let code: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind != Kind::Comment)
+            .map(|(i, _)| i)
+            .collect();
+        for t in &toks {
+            for l in t.line..=t.end_line.min(nlines) {
+                if t.kind == Kind::Comment {
+                    line_has_comment[l] = true;
+                } else {
+                    line_is_code[l] = true;
+                }
+            }
+            if t.kind == Kind::Comment {
+                line_comment[t.line].push_str(&t.text);
+                line_comment[t.line].push(' ');
+            }
+        }
+        let mut m = FileModel {
+            rel: rel.to_string(),
+            toks,
+            code,
+            line_is_code,
+            line_has_comment,
+            line_comment,
+            test_line: vec![false; nlines + 1],
+        };
+        m.mark_test_regions();
+        m
+    }
+
+    pub fn tok(&self, code_idx: usize) -> &Tok {
+        &self.toks[self.code[code_idx]]
+    }
+
+    pub fn ncode(&self) -> usize {
+        self.code.len()
+    }
+
+    /// Two puncts forming a glued pair (`::`, `=>`) — consecutive char
+    /// offsets.
+    fn glued(&self, a: usize, b: usize) -> bool {
+        self.tok(b).pos == self.tok(a).pos + 1
+    }
+
+    /// `code[i], code[i+1]` spell `::`.
+    pub fn is_path_sep(&self, i: usize) -> bool {
+        i + 1 < self.ncode()
+            && self.tok(i).is_punct(':')
+            && self.tok(i + 1).is_punct(':')
+            && self.glued(i, i + 1)
+    }
+
+    // ----------------------------------------------------- test regions
+
+    /// Attribute starting at code index `i` (`#` `[`): return
+    /// (index one past the closing `]`, attribute is test-gating).
+    fn parse_attr(&self, i: usize) -> (usize, bool) {
+        let mut j = i + 2; // past `#` `[`
+        let mut depth = 1i32; // bracket depth of the attr itself
+        let mut paren_stack: Vec<String> = Vec::new();
+        let mut pending: Option<String> = None;
+        let mut is_test = false;
+        while j < self.ncode() && depth > 0 {
+            let t = self.tok(j);
+            if t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(']') {
+                depth -= 1;
+            } else if t.is_punct('(') {
+                paren_stack.push(pending.take().unwrap_or_default());
+            } else if t.is_punct(')') {
+                paren_stack.pop();
+            } else if t.kind == Kind::Ident {
+                if t.text == "test" && !paren_stack.iter().any(|p| p == "not") {
+                    is_test = true;
+                }
+                pending = Some(t.text.clone());
+            }
+            j += 1;
+        }
+        (j, is_test)
+    }
+
+    /// From code index `i` (first token of an item after its
+    /// attributes), return the code index of the item's last token:
+    /// either a `;` at depth 0 or the `}` matching its first body `{`.
+    fn item_end(&self, i: usize) -> usize {
+        let mut j = i;
+        let mut depth = 0i32;
+        while j < self.ncode() {
+            let t = self.tok(j);
+            if t.is_punct('(') || t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                depth -= 1;
+            } else if t.is_punct('{') {
+                if depth == 0 {
+                    // match to the closing brace
+                    let mut b = 1i32;
+                    let mut k = j + 1;
+                    while k < self.ncode() && b > 0 {
+                        if self.tok(k).is_punct('{') {
+                            b += 1;
+                        } else if self.tok(k).is_punct('}') {
+                            b -= 1;
+                        }
+                        k += 1;
+                    }
+                    return k.saturating_sub(1);
+                }
+                depth += 1;
+            } else if t.is_punct('}') {
+                depth -= 1;
+            } else if t.is_punct(';') && depth == 0 {
+                return j;
+            }
+            j += 1;
+        }
+        self.ncode().saturating_sub(1)
+    }
+
+    fn mark_span_test(&mut self, from_line: usize, to_line: usize) {
+        for l in from_line..=to_line.min(self.test_line.len() - 1) {
+            self.test_line[l] = true;
+        }
+    }
+
+    fn mark_test_regions(&mut self) {
+        let mut k = 0usize;
+        let mut pending_test = false;
+        let mut pending_line = 0usize;
+        while k < self.ncode() {
+            let t = self.tok(k);
+            if t.is_punct('#') && k + 1 < self.ncode() && self.tok(k + 1).is_punct('[') {
+                let (after, is_test) = self.parse_attr(k);
+                if is_test && !pending_test {
+                    pending_test = true;
+                    pending_line = t.line;
+                }
+                k = after;
+                continue;
+            }
+            if pending_test {
+                let end = self.item_end(k);
+                let (a, b) = (pending_line, self.tok(end).end_line);
+                self.mark_span_test(a, b);
+                pending_test = false;
+                k = end + 1;
+                continue;
+            }
+            // an un-cfg'd `mod tests` / `mod loom_tests` body is a test
+            // region too (matches the grep fallback's convention)
+            if t.is_ident("mod")
+                && k + 1 < self.ncode()
+                && matches!(self.tok(k + 1).text.as_str(), "tests" | "loom_tests")
+                && self.tok(k + 1).kind == Kind::Ident
+            {
+                let end = self.item_end(k);
+                let (a, b) = (t.line, self.tok(end).end_line);
+                self.mark_span_test(a, b);
+                k = end + 1;
+                continue;
+            }
+            k += 1;
+        }
+    }
+
+    // ------------------------------------------------------- attachment
+
+    /// Code index of the first token of the statement containing
+    /// `code_idx`. Walks backward to the nearest `;`, `=>`, or
+    /// unmatched opening bracket at depth 0. Lenient by construction:
+    /// chained calls, multi-line builders and `match` scrutinees stay
+    /// inside one span.
+    pub fn stmt_first(&self, code_idx: usize) -> usize {
+        let mut depth = 0i32;
+        let mut j = code_idx;
+        while j > 0 {
+            let t = self.tok(j - 1);
+            if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+                depth += 1;
+            } else if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+                if depth == 0 {
+                    return j;
+                }
+                depth -= 1;
+            } else if t.is_punct(';') && depth == 0 {
+                return j;
+            } else if t.is_punct('>')
+                && depth == 0
+                && j >= 2
+                && self.tok(j - 2).is_punct('=')
+                && self.glued(j - 2, j - 1)
+            {
+                // a match arm's `=>` bounds the arm body
+                return j;
+            }
+            j -= 1;
+        }
+        0
+    }
+
+    /// All comment text attached to the statement containing
+    /// `code_idx`: the contiguous comment-only run immediately above
+    /// the statement's first line, plus every comment between the
+    /// statement's first line and the finding's line (inclusive — a
+    /// trailing same-line comment counts).
+    pub fn attached_comments(&self, code_idx: usize) -> String {
+        let first = self.stmt_first(code_idx);
+        let start_line = self.tok(first).line;
+        let end_line = self.tok(code_idx).line;
+        let mut text = String::new();
+        let mut l = start_line.saturating_sub(1);
+        while l >= 1 && !self.line_is_code[l] && self.line_has_comment[l] {
+            text.push_str(&self.line_comment[l]);
+            if l == 1 {
+                break;
+            }
+            l -= 1;
+        }
+        for l in start_line..=end_line.min(self.line_comment.len() - 1) {
+            text.push_str(&self.line_comment[l]);
+        }
+        text
+    }
+
+    /// Does the statement containing `code_idx` carry the given
+    /// annotation?
+    pub fn allowed(&self, code_idx: usize, annotation: &str) -> bool {
+        self.attached_comments(code_idx).contains(annotation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_test_item_spans_are_test_regions() {
+        let src = "\
+fn prod() { x.unwrap(); }
+#[cfg(all(test, not(loom)))]
+mod tests {
+    fn t() { y.unwrap(); }
+}
+fn appended_after_tests() { z.unwrap(); }
+";
+        let m = FileModel::build("f.rs", src);
+        assert!(!m.test_line[1]);
+        assert!(m.test_line[2] && m.test_line[3] && m.test_line[4] && m.test_line[5]);
+        // the item AFTER the test module is production code — the case
+        // the awk window gets wrong
+        assert!(!m.test_line[6]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn prod() { x.unwrap(); }\n";
+        let m = FileModel::build("f.rs", src);
+        assert!(!m.test_line[2]);
+    }
+
+    #[test]
+    fn test_attr_marks_single_fn() {
+        let src = "#[test]\nfn t() { x.unwrap(); }\nfn prod() {}\n";
+        let m = FileModel::build("f.rs", src);
+        assert!(m.test_line[1] && m.test_line[2]);
+        assert!(!m.test_line[3]);
+    }
+
+    #[test]
+    fn attachment_covers_statement_not_window() {
+        let src = "\
+// lint:allow(panic) — reason
+let row = ids
+    .iter()
+    .position(|id| id == w)
+    .expect(\"present\");
+let other = q.unwrap();
+";
+        let m = FileModel::build("f.rs", src);
+        // find the expect token
+        let expect_idx =
+            (0..m.ncode()).find(|&i| m.tok(i).is_ident("expect")).unwrap();
+        assert!(m.allowed(expect_idx, "lint:allow(panic)"));
+        let unwrap_idx =
+            (0..m.ncode()).find(|&i| m.tok(i).is_ident("unwrap")).unwrap();
+        // the annotation above the FIRST statement is not attached to
+        // the second one
+        assert!(!m.allowed(unwrap_idx, "lint:allow(panic)"));
+    }
+
+    #[test]
+    fn trailing_comment_attaches() {
+        let src = "shape[0] = n; // lint:allow(panic) — rank >= 1\n";
+        let m = FileModel::build("f.rs", src);
+        let idx = (0..m.ncode()).find(|&i| m.tok(i).is_punct('[')).unwrap();
+        assert!(m.allowed(idx, "lint:allow(panic)"));
+    }
+}

@@ -1,0 +1,774 @@
+//! The five semantic rules. Each closes a specific evasion or blind
+//! spot of the grep gates (tools/lint.sh R1–R3):
+//!
+//! * **A1** facade enforcement — *any* import path resolving to
+//!   `std::sync` / `std::thread` outside `rust/src/sync/`, including
+//!   grouped (`use std::{sync, thread}`), aliased (`use std::sync as
+//!   s`), renamed-root (`use std as s`) and fully-qualified expression
+//!   paths. R1's regex missed the grouped form entirely.
+//! * **A2** hot-path panic ban — `unwrap` / `expect` / `panic!` /
+//!   indexing-with-an-integer-literal in the *non-test* code of the
+//!   per-frame files, with real item-level `#[cfg(test)]` span
+//!   detection (R2's awk stopped at the first test marker, so anything
+//!   after a test module was invisible).
+//! * **A3** untimed condvar waits need a `loom-verified:` annotation
+//!   attached to the wait's statement, and the annotation must name a
+//!   loom model that actually exists in the crate (R3 accepted any
+//!   text within 8 lines).
+//! * **A4** guard-across-blocking — a lock guard live across a
+//!   blocking call (`.wait(…)` on *another* guard, `sleep`,
+//!   `busy_wait`, `.join()`, channel `send`/`recv`) in the same block.
+//!   Grep cannot see liveness at all.
+//! * **A5** custody exhaustiveness — a `match` whose arms name a
+//!   custody enum (`Admission`, `QosClass`, `EvictPolicy`,
+//!   `SegmentAction`) may not carry a wildcard / catch-all arm: adding
+//!   a variant must break the build at every accounting site, not be
+//!   silently absorbed.
+
+use std::collections::BTreeSet;
+
+use crate::config::Config;
+use crate::lexer::Kind;
+use crate::model::FileModel;
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Crate-wide facts the per-file passes need: today, the set of loom
+/// model fns (`fn loom_*`), so A3 can verify an annotation names a
+/// model that exists.
+#[derive(Default)]
+pub struct Ctx {
+    pub loom_fns: BTreeSet<String>,
+}
+
+impl Ctx {
+    pub fn scan(models: &[FileModel]) -> Ctx {
+        let mut loom_fns = BTreeSet::new();
+        for m in models {
+            for i in 0..m.ncode().saturating_sub(1) {
+                if m.tok(i).is_ident("fn") {
+                    let nx = m.tok(i + 1);
+                    if nx.kind == Kind::Ident && nx.text.starts_with("loom_") {
+                        loom_fns.insert(nx.text.clone());
+                    }
+                }
+            }
+        }
+        Ctx { loom_fns }
+    }
+}
+
+pub fn analyze_file(m: &FileModel, cfg: &Config, ctx: &Ctx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if cfg.is_facade(&m.rel) {
+        // the facade is the audited boundary: it is the one place raw
+        // std primitives (and the primitive wait it wraps) may live
+        return out;
+    }
+    rule_a1(m, &mut out);
+    if cfg.is_hot(&m.rel) {
+        rule_a2(m, &mut out);
+    }
+    rule_a3(m, ctx, &mut out);
+    rule_a4(m, &mut out);
+    rule_a5(m, cfg, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn push(out: &mut Vec<Finding>, m: &FileModel, line: usize, rule: &'static str, msg: String) {
+    out.push(Finding { file: m.rel.clone(), line, rule, msg });
+}
+
+// ===================================================================== A1
+
+/// One leaf of an expanded use tree.
+struct UseLeaf {
+    segs: Vec<String>,
+    alias: Option<String>,
+    /// code index of the leaf's terminal token (for attachment/line).
+    at: usize,
+}
+
+/// Parse one use-tree element starting at code index `i` with `prefix`
+/// already consumed; append leaves; return the index of the token that
+/// terminated the element (`,`, `}`, `;` — not consumed).
+fn parse_use_tree(m: &FileModel, mut i: usize, prefix: &[String], leaves: &mut Vec<UseLeaf>) -> usize {
+    let mut segs = prefix.to_vec();
+    while i < m.ncode() {
+        let t = m.tok(i);
+        if t.is_punct(':') && m.is_path_sep(i) {
+            i += 2; // `::` separator (also leading `::`)
+            continue;
+        }
+        if t.is_punct('{') {
+            // group: subtrees separated by commas
+            i += 1;
+            loop {
+                if i >= m.ncode() {
+                    return i;
+                }
+                if m.tok(i).is_punct('}') {
+                    return i + 1;
+                }
+                i = parse_use_tree(m, i, &segs, leaves);
+                if i < m.ncode() && m.tok(i).is_punct(',') {
+                    i += 1;
+                    continue;
+                }
+                if i < m.ncode() && m.tok(i).is_punct('}') {
+                    return i + 1;
+                }
+                return i; // malformed — bail without looping forever
+            }
+        }
+        if t.is_punct('*') {
+            segs.push("*".into());
+            leaves.push(UseLeaf { segs, alias: None, at: i });
+            return i + 1;
+        }
+        if t.is_ident("as") {
+            let alias = if i + 1 < m.ncode() && m.tok(i + 1).kind == Kind::Ident {
+                Some(m.tok(i + 1).text.clone())
+            } else {
+                None
+            };
+            leaves.push(UseLeaf { segs, alias, at: i });
+            return i + 2;
+        }
+        if t.kind == Kind::Ident {
+            if t.text != "self" {
+                segs.push(t.text.clone());
+            }
+            i += 1;
+            continue;
+        }
+        // `,` `}` `;` or anything unexpected: this element is complete
+        if !segs.is_empty() && segs != prefix {
+            leaves.push(UseLeaf { segs, alias: None, at: i.saturating_sub(1) });
+        } else if segs == prefix && !prefix.is_empty() {
+            // bare `self` leaf: the prefix itself
+            leaves.push(UseLeaf { segs, alias: None, at: i.saturating_sub(1) });
+        }
+        return i;
+    }
+    i
+}
+
+fn rule_a1(m: &FileModel, out: &mut Vec<Finding>) {
+    let mut use_spans: Vec<(usize, usize)> = Vec::new();
+    let mut k = 0usize;
+    while k < m.ncode() {
+        if m.tok(k).is_ident("use") {
+            let start = k;
+            let mut leaves = Vec::new();
+            let mut i = parse_use_tree(m, k + 1, &[], &mut leaves);
+            while i < m.ncode() && !m.tok(i).is_punct(';') {
+                i += 1;
+            }
+            use_spans.push((start, i));
+            for leaf in &leaves {
+                let s = &leaf.segs;
+                let banned = (s.len() >= 2
+                    && s[0] == "std"
+                    && (s[1] == "sync" || s[1] == "thread" || s[1] == "*"))
+                    || (s.len() == 1 && s[0] == "std" && leaf.alias.is_some());
+                if banned && !m.allowed(start, "lint:allow(raw-sync)") {
+                    let path = s.join("::");
+                    let ali = leaf
+                        .alias
+                        .as_ref()
+                        .map(|a| format!(" (as `{a}`)"))
+                        .unwrap_or_default();
+                    push(
+                        out,
+                        m,
+                        m.tok(leaf.at).line,
+                        "A1",
+                        format!(
+                            "import resolves to `{path}`{ali} outside the sync facade — \
+                             route through crate::sync so loom can model it \
+                             (lint:allow(raw-sync) + why, if loom cannot)"
+                        ),
+                    );
+                }
+            }
+            k = i + 1;
+            continue;
+        }
+        k += 1;
+    }
+    // fully-qualified expression paths: `std::sync::…` / `::std::thread::…`
+    let in_use = |i: usize| use_spans.iter().any(|&(a, b)| i >= a && i <= b);
+    for i in 0..m.ncode().saturating_sub(3) {
+        let t = m.tok(i);
+        if t.is_ident("std")
+            && m.is_path_sep(i + 1)
+            && m.tok(i + 3).kind == Kind::Ident
+            && matches!(m.tok(i + 3).text.as_str(), "sync" | "thread")
+            && !in_use(i)
+            && !m.allowed(i, "lint:allow(raw-sync)")
+        {
+            push(
+                out,
+                m,
+                t.line,
+                "A1",
+                format!(
+                    "fully-qualified `std::{}` path outside the sync facade — \
+                     route through crate::sync so loom can model it",
+                    m.tok(i + 3).text
+                ),
+            );
+        }
+    }
+}
+
+// ===================================================================== A2
+
+fn rule_a2(m: &FileModel, out: &mut Vec<Finding>) {
+    const ALLOW: &str = "lint:allow(panic)";
+    for i in 0..m.ncode() {
+        let t = m.tok(i);
+        if m.test_line[t.line.min(m.test_line.len() - 1)] {
+            continue;
+        }
+        let prev = |j: usize| j.checked_sub(1).map(|p| m.tok(p));
+        let next = |j: usize| if j + 1 < m.ncode() { Some(m.tok(j + 1)) } else { None };
+        if (t.is_ident("unwrap") || t.is_ident("expect"))
+            && prev(i).map(|p| p.is_punct('.')).unwrap_or(false)
+            && next(i).map(|n| n.is_punct('(')).unwrap_or(false)
+            && !m.allowed(i, ALLOW)
+        {
+            push(
+                out,
+                m,
+                t.line,
+                "A2",
+                format!(
+                    ".{}() on the serving hot path — a panic here kills a worker and \
+                     silently shrinks the pool; use `?`, lock_unpoisoned, or \
+                     lint:allow(panic) + why dying is correct",
+                    t.text
+                ),
+            );
+        }
+        if t.is_ident("panic")
+            && next(i).map(|n| n.is_punct('!')).unwrap_or(false)
+            && !m.allowed(i, ALLOW)
+        {
+            push(
+                out,
+                m,
+                t.line,
+                "A2",
+                "panic! on the serving hot path — return an error or annotate \
+                 lint:allow(panic) + why dying is correct"
+                    .into(),
+            );
+        }
+        if t.is_punct('[')
+            && prev(i)
+                .map(|p| p.kind == Kind::Ident || p.is_punct(')') || p.is_punct(']'))
+                .unwrap_or(false)
+            && next(i).map(|n| n.is_plain_int()).unwrap_or(false)
+            && i + 2 < m.ncode()
+            && m.tok(i + 2).is_punct(']')
+            && !m.allowed(i, ALLOW)
+        {
+            push(
+                out,
+                m,
+                t.line,
+                "A2",
+                format!(
+                    "indexing with integer literal `[{}]` on the serving hot path — \
+                     out-of-bounds panics kill the worker; use .get()/.first() or \
+                     lint:allow(panic) + the invariant that bounds it",
+                    m.tok(i + 1).text
+                ),
+            );
+        }
+    }
+}
+
+// ===================================================================== A3
+
+fn rule_a3(m: &FileModel, ctx: &Ctx, out: &mut Vec<Finding>) {
+    for i in 0..m.ncode() {
+        let t = m.tok(i);
+        let dotted_wait = t.is_ident("wait")
+            && i > 0
+            && m.tok(i - 1).is_punct('.')
+            && i + 1 < m.ncode()
+            && m.tok(i + 1).is_punct('(');
+        let facade_wait = t.is_ident("wait_unpoisoned")
+            && i + 1 < m.ncode()
+            && m.tok(i + 1).is_punct('(')
+            && !(i > 0 && m.tok(i - 1).is_ident("fn"));
+        if !dotted_wait && !facade_wait {
+            continue;
+        }
+        let ann = m.attached_comments(i);
+        if !ann.contains("loom-verified:") {
+            push(
+                out,
+                m,
+                t.line,
+                "A3",
+                "untimed condvar wait without a `loom-verified:` annotation naming \
+                 the loom model that proves its wake protocol lost-wakeup-free \
+                 (wait_timeout is exempt — a timeout is its own liveness floor)"
+                    .into(),
+            );
+            continue;
+        }
+        let names = loom_names(&ann);
+        if !names.iter().any(|n| ctx.loom_fns.contains(n)) {
+            push(
+                out,
+                m,
+                t.line,
+                "A3",
+                format!(
+                    "`loom-verified:` annotation names no loom model that exists in \
+                     the crate (named: {}; known models: {})",
+                    if names.is_empty() { "none".into() } else { names.join(", ") },
+                    ctx.loom_fns.iter().cloned().collect::<Vec<_>>().join(", ")
+                ),
+            );
+        }
+    }
+}
+
+/// Extract `loom_*` identifiers from annotation text.
+fn loom_names(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut names = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        let rest: String = chars[i..].iter().collect();
+        if rest.starts_with("loom_") {
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            i += name.chars().count();
+            if !names.contains(&name) {
+                names.push(name);
+            }
+        } else {
+            i += 1;
+        }
+    }
+    names
+}
+
+// ===================================================================== A4
+
+const GUARD_ALLOW: &str = "lint:allow(guard-across-blocking)";
+
+fn rule_a4(m: &FileModel, out: &mut Vec<Finding>) {
+    struct Guard {
+        name: String,
+        depth: i32,
+        line: usize,
+    }
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut brace = 0i32;
+    let mut i = 0usize;
+    while i < m.ncode() {
+        let t = m.tok(i);
+        let on_test_line = m.test_line[t.line.min(m.test_line.len() - 1)];
+        if t.is_punct('{') {
+            brace += 1;
+        } else if t.is_punct('}') {
+            brace -= 1;
+            guards.retain(|g| g.depth <= brace);
+        } else if t.is_ident("drop")
+            && i + 3 < m.ncode()
+            && m.tok(i + 1).is_punct('(')
+            && m.tok(i + 2).kind == Kind::Ident
+            && m.tok(i + 3).is_punct(')')
+        {
+            let name = &m.tok(i + 2).text;
+            guards.retain(|g| &g.name != name);
+        } else if t.is_ident("let") && !on_test_line {
+            if let Some((name, line)) = guard_binding(m, i) {
+                guards.push(Guard { name, depth: brace, line });
+            }
+        } else if !on_test_line {
+            if let Some((kind, consumed)) = blocking_site(m, i) {
+                let offenders: Vec<&Guard> = guards
+                    .iter()
+                    .filter(|g| !consumed.contains(&g.name))
+                    .collect();
+                if !offenders.is_empty() && !m.allowed(i, GUARD_ALLOW) {
+                    let held = offenders
+                        .iter()
+                        .map(|g| format!("`{}` (bound line {})", g.name, g.line))
+                        .collect::<Vec<_>>()
+                        .join(", ");
+                    push(
+                        out,
+                        m,
+                        t.line,
+                        "A4",
+                        format!(
+                            "lock guard {held} held across blocking call `{kind}` — \
+                             every thread contending that mutex now waits on this \
+                             call too; drop the guard first, or annotate \
+                             lint:allow(guard-across-blocking) + why it cannot \
+                             deadlock"
+                        ),
+                    );
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `let [mut] NAME [: Ty] = <rhs containing a guard maker> ;` → NAME.
+fn guard_binding(m: &FileModel, let_idx: usize) -> Option<(String, usize)> {
+    let mut j = let_idx + 1;
+    if j < m.ncode() && m.tok(j).is_ident("mut") {
+        j += 1;
+    }
+    if j >= m.ncode() || m.tok(j).kind != Kind::Ident {
+        return None; // tuple / struct pattern — out of scope
+    }
+    let name = m.tok(j).text.clone();
+    let line = m.tok(j).line;
+    j += 1;
+    // optional `: Type` — scan to the `=` (stop at `;` = no initializer)
+    let mut depth = 0i32;
+    while j < m.ncode() {
+        let t = m.tok(j);
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth -= 1;
+        } else if t.is_punct(';') && depth <= 0 {
+            return None;
+        } else if t.is_punct('=') && depth == 0 {
+            // reject `==` (glued) — cannot appear here in valid code anyway
+            break;
+        }
+        j += 1;
+    }
+    // RHS: up to `;` at depth 0 — does it make a guard? `{ … }` blocks
+    // are skipped whole: a lock taken inside a block is bound to an
+    // inner binding whose lifetime the block already ends, not to NAME
+    // (the worker-loop `let job = { let q = lock…; … };` shape).
+    let mut depth = 0i32;
+    let mut k = j + 1;
+    while k < m.ncode() {
+        let t = m.tok(k);
+        if t.is_punct('{') {
+            let mut b = 1i32;
+            k += 1;
+            while k < m.ncode() && b > 0 {
+                if m.tok(k).is_punct('{') {
+                    b += 1;
+                } else if m.tok(k).is_punct('}') {
+                    b -= 1;
+                }
+                k += 1;
+            }
+            continue;
+        }
+        if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            if depth == 0 {
+                break; // `let` inside an expression position — bail
+            }
+            depth -= 1;
+        } else if t.is_punct(';') && depth == 0 {
+            break;
+        } else if t.is_ident("lock_unpoisoned")
+            || (t.is_ident("lock") && k > 0 && m.tok(k - 1).is_punct('.'))
+        {
+            return Some((name, line));
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Is code index `i` a blocking call? Returns (label, idents passed as
+/// arguments — a wait consumes the guard it is given, which is the
+/// sanctioned hand-off, not a hold).
+fn blocking_site(m: &FileModel, i: usize) -> Option<(String, Vec<String>)> {
+    let t = m.tok(i);
+    let next_is_paren = i + 1 < m.ncode() && m.tok(i + 1).is_punct('(');
+    if !next_is_paren {
+        return None;
+    }
+    let prev_dot = i > 0 && m.tok(i - 1).is_punct('.');
+    let prev_fn = i > 0 && m.tok(i - 1).is_ident("fn");
+    if prev_fn {
+        return None;
+    }
+    let wait_family = (prev_dot && matches!(t.text.as_str(), "wait" | "wait_timeout"))
+        || t.is_ident("wait_unpoisoned");
+    let sleep_family = !prev_dot && matches!(t.text.as_str(), "sleep" | "busy_wait");
+    let chan_family =
+        prev_dot && matches!(t.text.as_str(), "join" | "send" | "recv" | "recv_timeout");
+    if !wait_family && !sleep_family && !chan_family {
+        return None;
+    }
+    let consumed = if wait_family {
+        // idents in the argument list
+        let mut depth = 0i32;
+        let mut k = i + 1;
+        let mut args = Vec::new();
+        while k < m.ncode() {
+            let a = m.tok(k);
+            if a.is_punct('(') {
+                depth += 1;
+            } else if a.is_punct(')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if a.kind == Kind::Ident {
+                args.push(a.text.clone());
+            }
+            k += 1;
+        }
+        args
+    } else {
+        Vec::new()
+    };
+    Some((format!(".{}(", t.text), consumed))
+}
+
+// ===================================================================== A5
+
+fn rule_a5(m: &FileModel, cfg: &Config, out: &mut Vec<Finding>) {
+    const ALLOW: &str = "lint:allow(custody-wildcard)";
+    for i in 0..m.ncode() {
+        if !m.tok(i).is_ident("match") {
+            continue;
+        }
+        // scrutinee: scan to the arms' `{` at paren/bracket depth 0
+        let mut j = i + 1;
+        let mut depth = 0i32;
+        while j < m.ncode() {
+            let t = m.tok(j);
+            if t.is_punct('(') || t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                depth -= 1;
+            } else if t.is_punct('{') && depth == 0 {
+                break;
+            }
+            j += 1;
+        }
+        if j >= m.ncode() {
+            continue;
+        }
+        let arms = split_arms(m, j);
+        let custody = arms.iter().any(|a| {
+            a.pattern.iter().any(|&p| {
+                let t = m.tok(p);
+                t.kind == Kind::Ident
+                    && cfg.custody_enums.iter().any(|e| e == &t.text)
+                    && m.is_path_sep(p + 1)
+            })
+        });
+        if !custody {
+            continue;
+        }
+        for a in &arms {
+            // pattern up to a top-level `if` guard
+            let core: Vec<&usize> = a
+                .pattern
+                .iter()
+                .take_while(|&&p| !m.tok(p).is_ident("if"))
+                .collect();
+            if core.len() != 1 {
+                continue;
+            }
+            let p = *core[0];
+            let t = m.tok(p);
+            let is_wild = t.is_ident("_");
+            let is_binding = !is_wild
+                && t.kind == Kind::Ident
+                && t.text
+                    .chars()
+                    .next()
+                    .map(|c| c.is_lowercase() || c == '_')
+                    .unwrap_or(false)
+                && !matches!(t.text.as_str(), "true" | "false");
+            if (is_wild || is_binding) && !m.allowed(p, ALLOW) {
+                let what = if is_wild {
+                    "wildcard `_` arm".to_string()
+                } else {
+                    format!("catch-all binding `{}` arm", t.text)
+                };
+                push(
+                    out,
+                    m,
+                    t.line,
+                    "A5",
+                    format!(
+                        "{what} in a match over a custody enum — a new variant would \
+                         be silently absorbed instead of forcing this accounting \
+                         site to be revisited; enumerate every variant \
+                         (lint:allow(custody-wildcard) + why, if the arm is \
+                         genuinely variant-independent)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+struct Arm {
+    /// Code indices of the pattern tokens (before `=>`).
+    pattern: Vec<usize>,
+}
+
+/// Split the arms of a match whose `{` is at code index `open`.
+fn split_arms(m: &FileModel, open: usize) -> Vec<Arm> {
+    let mut arms = Vec::new();
+    let mut i = open + 1;
+    let mut pat: Vec<usize> = Vec::new();
+    let mut depth = 0i32; // over () [] {} inside the arms block
+    let mut in_body = false;
+    while i < m.ncode() {
+        let t = m.tok(i);
+        if t.is_punct('{') || t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+            // a body that IS a block: arm ends at its matching close
+            if in_body && t.is_punct('{') && depth == 1 {
+                // walk to the matching `}`
+                let mut b = 1i32;
+                let mut k = i + 1;
+                while k < m.ncode() && b > 0 {
+                    if m.tok(k).is_punct('{') {
+                        b += 1;
+                    } else if m.tok(k).is_punct('}') {
+                        b -= 1;
+                    }
+                    k += 1;
+                }
+                i = k; // past the body block
+                depth -= 1;
+                in_body = false;
+                arms.push(Arm { pattern: std::mem::take(&mut pat) });
+                // optional trailing comma
+                if i < m.ncode() && m.tok(i).is_punct(',') {
+                    i += 1;
+                }
+                continue;
+            }
+        } else if t.is_punct('}') || t.is_punct(')') || t.is_punct(']') {
+            if depth == 0 && t.is_punct('}') {
+                // end of the match
+                if !pat.is_empty() {
+                    arms.push(Arm { pattern: std::mem::take(&mut pat) });
+                }
+                break;
+            }
+            depth -= 1;
+        } else if depth == 0
+            && t.is_punct('=')
+            && i + 1 < m.ncode()
+            && m.tok(i + 1).is_punct('>')
+            && m.tok(i + 1).pos == t.pos + 1
+        {
+            in_body = true;
+            i += 2;
+            continue;
+        } else if depth == 0 && t.is_punct(',') && in_body {
+            arms.push(Arm { pattern: std::mem::take(&mut pat) });
+            in_body = false;
+            i += 1;
+            continue;
+        }
+        if !in_body {
+            pat.push(i);
+        }
+        i += 1;
+    }
+    arms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> Vec<Finding> {
+        let m = FileModel::build("t.rs", src);
+        let cfg = Config::fixtures("t.rs");
+        let ctx = Ctx::scan(std::slice::from_ref(&m));
+        analyze_file(&m, &cfg, &ctx)
+    }
+
+    #[test]
+    fn grouped_and_aliased_imports_are_caught() {
+        let f = run("use std::{collections::HashMap, sync::Mutex};\n");
+        assert!(f.iter().any(|x| x.rule == "A1" && x.msg.contains("std::sync")));
+        let f = run("use std::sync as s;\n");
+        assert_eq!(f.iter().filter(|x| x.rule == "A1").count(), 1);
+        let f = run("use std as s;\n");
+        assert_eq!(f.iter().filter(|x| x.rule == "A1").count(), 1);
+        let f = run("use ::std::thread::spawn;\n");
+        assert_eq!(f.iter().filter(|x| x.rule == "A1").count(), 1);
+    }
+
+    #[test]
+    fn benign_std_imports_pass() {
+        let f = run("use std::collections::{HashMap, VecDeque};\nuse std::time::Duration;\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn qualified_expression_path_is_caught() {
+        let f = run("fn f() { let m = std::sync::Mutex::new(0); }\n");
+        assert_eq!(f.iter().filter(|x| x.rule == "A1").count(), 1);
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_trip_a1() {
+        let f = run("// std::sync in prose\nfn f() -> &'static str { \"std::thread\" }\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn custody_wildcard_flags_but_value_position_does_not() {
+        let bad = "fn f(a: Admission) -> u32 {\n    match a {\n        Admission::Delivered => 1,\n        _ => 0,\n    }\n}\n";
+        let f = run(bad);
+        assert_eq!(f.iter().filter(|x| x.rule == "A5").count(), 1, "{f:?}");
+        // enum only on the arm VALUE side (from_u8 shape) — fine
+        let good = "fn g(v: u8) -> Option<QosClass> {\n    match v {\n        0 => Some(QosClass::Realtime),\n        _ => None,\n    }\n}\n";
+        let f = run(good);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn guard_across_sleep_flags_and_wait_handoff_does_not() {
+        let bad = "fn f() {\n    let g = lock_unpoisoned(&m);\n    thread::sleep(d);\n}\n";
+        let f = run(bad);
+        assert_eq!(f.iter().filter(|x| x.rule == "A4").count(), 1, "{f:?}");
+        let good = "fn f() {\n    let mut g = lock_unpoisoned(&m);\n    g = wait_unpoisoned(&cv, g); // loom-verified: loom_model_x\n}\nmod loom_tests { fn loom_model_x() {} }\n";
+        let f = run(good);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

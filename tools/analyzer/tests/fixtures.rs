@@ -1,0 +1,104 @@
+//! Fixture battery: every rule must flag its known-bad fixture at
+//! exactly the `//~ RULE` marker lines (no more, no less) and stay
+//! silent on its known-good twin. A final test pins the real tree
+//! clean, so a regression in either the rules or the tree fails
+//! `cargo test -p pallas-analyzer`.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use pallas_analyzer::analyze_sources;
+use pallas_analyzer::config::Config;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// `//~ RULE` markers → set of (1-based line, rule).
+fn markers(src: &str) -> BTreeSet<(usize, String)> {
+    src.lines()
+        .enumerate()
+        .filter_map(|(i, l)| l.split("//~").nth(1).map(|m| (i + 1, m.trim().to_string())))
+        .collect()
+}
+
+fn run(name: &str) -> (BTreeSet<(usize, String)>, BTreeSet<(usize, String)>) {
+    let src = fixture(name);
+    let cfg = Config::fixtures(name);
+    let found = analyze_sources(&[(name.to_string(), src.clone())], &cfg)
+        .into_iter()
+        .map(|f| (f.line, f.rule.to_string()))
+        .collect();
+    (markers(&src), found)
+}
+
+fn assert_exact(name: &str) {
+    let (want, got) = run(name);
+    assert!(!want.is_empty(), "bad fixture {name} declares no //~ markers");
+    assert_eq!(want, got, "fixture {name}: findings != markers");
+}
+
+fn assert_clean(name: &str) {
+    let (want, got) = run(name);
+    assert!(want.is_empty(), "good fixture {name} must not declare //~ markers");
+    assert!(got.is_empty(), "fixture {name}: unexpected findings {got:?}");
+}
+
+#[test]
+fn a1_bad_flags_every_import_evasion() {
+    assert_exact("a1_bad.rs");
+}
+
+#[test]
+fn a1_good_passes() {
+    assert_clean("a1_good.rs");
+}
+
+#[test]
+fn a2_bad_flags_hot_path_panics_including_after_test_mod() {
+    assert_exact("a2_bad.rs");
+}
+
+#[test]
+fn a2_good_passes() {
+    assert_clean("a2_good.rs");
+}
+
+#[test]
+fn a3_bad_flags_unannotated_and_unresolvable_waits() {
+    assert_exact("a3_bad.rs");
+}
+
+#[test]
+fn a3_good_passes() {
+    assert_clean("a3_good.rs");
+}
+
+#[test]
+fn a4_bad_flags_guards_across_blocking() {
+    assert_exact("a4_bad.rs");
+}
+
+#[test]
+fn a4_good_passes() {
+    assert_clean("a4_good.rs");
+}
+
+#[test]
+fn a5_bad_flags_custody_wildcards() {
+    assert_exact("a5_bad.rs");
+}
+
+#[test]
+fn a5_good_passes() {
+    assert_clean("a5_good.rs");
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let findings = pallas_analyzer::analyze_tree(&root).expect("scan rust/src");
+    let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+    assert!(rendered.is_empty(), "tree findings:\n{}", rendered.join("\n"));
+}

@@ -1,6 +1,14 @@
 #!/usr/bin/env bash
-# Custom static gates for the concurrency core (run by ./ci.sh next to
-# clippy). Three rules, all grep/awk — no extra toolchain:
+# Grep/awk static gates for the concurrency core — the documented
+# NO-TOOLCHAIN FALLBACK. The gating lint lane is now the semantic
+# analyzer (`cargo run -p pallas-analyzer`, rules A1-A5 — see
+# CONCURRENCY.md §Static gates); ci.sh falls back to this script with a
+# loud advisory only when cargo is unavailable. Kept honest because it
+# still runs in the default lane: the rules below are the line-level
+# approximations of A1-A3 (A4 guard-liveness and A5 custody
+# exhaustiveness need token structure and have no grep equivalent).
+#
+# Three rules, all grep/awk — no extra toolchain:
 #
 #   R1  raw `std::sync` / `std::thread` anywhere in rust/src outside the
 #       `sync/` facade. Concurrency that bypasses the facade is invisible
@@ -29,8 +37,15 @@ fail=0
 
 # ----------------------------------------------------------------- R1
 # file:line:content hits, minus: the facade itself, comment-only lines,
-# and explicit allows.
-r1=$(grep -rn -E 'std::(sync|thread)\b' "$SRC" --include='*.rs' \
+# and explicit allows. Three patterns, matching the analyzer's A1:
+#   plain paths        std::sync::… / std::thread::…
+#   grouped imports    use std::{…, sync::…} / use std::{thread, …}
+#   renamed std root   use std as s;  (aliasing the root defeats any
+#                      later textual scan, so it is banned outright)
+r1=$( { grep -rn -E 'std::(sync|thread)\b' "$SRC" --include='*.rs'; \
+        grep -rn -E 'use[[:space:]]+(::)?std::\{[^}]*\b(sync|thread)\b' "$SRC" --include='*.rs'; \
+        grep -rn -E 'use[[:space:]]+(::)?std[[:space:]]+as[[:space:]]' "$SRC" --include='*.rs'; } \
+    | sort -u \
     | grep -v "^$SRC/sync/" \
     | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//' \
     | grep -v 'lint:allow(raw-sync)' || true)
@@ -48,6 +63,8 @@ hot_files=(
     "$SRC/coordinator/server.rs"
     "$SRC/coordinator/net.rs"
     "$SRC/coordinator/wire.rs"
+    "$SRC/coordinator/executor.rs"
+    "$SRC/coordinator/audit.rs"
     "$SRC/exec/pool.rs"
     "$SRC/memory/tier.rs"
 )
