@@ -152,6 +152,17 @@ tier_gate --lib coordinator::net::
 tier_gate --test net_qos qos_
 tier_gate --test props prop_qos_shedding_never_drops_realtime_before_best_effort
 
+# the multi-tenant registry battery, same by-name rule: the registry and
+# replanner unit suites, the tenant-routing / hot-swap / parity-pin
+# acceptance tests, and the per-epoch hot-swap property test. The
+# single-tenant parity pin inside tests/multi_tenant.rs is the contract
+# that the registry refactor changed no pre-existing behavior.
+echo "== multi-tenant gate: registry/replan/hot-swap suites (named) =="
+tier_gate --lib coordinator::registry::
+tier_gate --lib coordinator::replan::
+tier_gate --test multi_tenant
+tier_gate --test props prop_plan_hot_swap_matches_per_epoch_baselines
+
 # benches are harness=false binaries that cargo test does not compile;
 # without this they rot silently
 echo "== benches compile: cargo bench --no-run =="

@@ -472,6 +472,99 @@ impl TierLedger {
     }
 }
 
+/// Custody ledger for one plan version (`coordinator::registry`): every
+/// frame admitted under an epoch must retire exactly once — completed,
+/// failed with its shard, or drained at shutdown — on the *same*
+/// version that admitted it, so a plan hot-swap can neither drop nor
+/// double-serve a frame. Unlike the other ledgers this one lives under
+/// its own mutex inside `PlanVersion` (admissions book inside the steal
+/// queue's lock, retirements on worker threads), but the lock order is
+/// strictly queue → ledger and the guard never crosses a blocking call.
+/// `close_check` cross-checks the version's atomic counters against the
+/// transitions and requires full retirement.
+#[cfg(debug_assertions)]
+#[derive(Debug, Default)]
+pub struct PlanEpochLedger {
+    admitted: u64,
+    completed: u64,
+    failed: u64,
+    drained: u64,
+}
+
+#[cfg(debug_assertions)]
+impl PlanEpochLedger {
+    pub fn new() -> PlanEpochLedger {
+        PlanEpochLedger::default()
+    }
+
+    fn in_flight(&self) -> u64 {
+        match self.admitted.checked_sub(
+            self.completed + self.failed + self.drained,
+        ) {
+            Some(f) => f,
+            // lint:allow(panic) — the auditor's teeth: a conservation
+            // breach must halt the debug run at the violation site
+            None => panic!(
+                "custody violation: epoch retired more frames than admitted \
+                 ({} completed + {} failed + {} drained > {} admitted)",
+                self.completed, self.failed, self.drained, self.admitted
+            ),
+        }
+    }
+
+    /// One frame pinned this version at admission.
+    pub fn admit(&mut self) {
+        self.admitted += 1;
+    }
+
+    /// An admitted frame's round finished on this plan.
+    pub fn complete(&mut self) {
+        self.completed += 1;
+        self.in_flight();
+    }
+
+    /// An admitted frame's shard died before serving it.
+    pub fn fail(&mut self) {
+        self.failed += 1;
+        self.in_flight();
+    }
+
+    /// An admitted frame was cleared unserved at shutdown.
+    pub fn drain(&mut self) {
+        self.drained += 1;
+        self.in_flight();
+    }
+
+    /// End of serving: the version's atomic counters must match the
+    /// transitions exactly, and every admission must be retired.
+    pub fn close_check(
+        &self,
+        admitted: usize,
+        completed: usize,
+        failed: usize,
+        drained: usize,
+    ) {
+        assert!(
+            (admitted as u64, completed as u64, failed as u64, drained as u64)
+                == (self.admitted, self.completed, self.failed, self.drained),
+            "custody violation: version counted {admitted}/{completed}/\
+             {failed}/{drained} (admitted/completed/failed/drained), ledger \
+             saw {}/{}/{}/{}",
+            self.admitted,
+            self.completed,
+            self.failed,
+            self.drained
+        );
+        assert_eq!(
+            self.in_flight(),
+            0,
+            "custody violation: {} admitted frames never retired \
+             (completed/failed/drained) on their epoch",
+            self.in_flight()
+        );
+    }
+}
+
 // ------------------------------------------------------------ release
 // Zero-sized, inlined-away stubs: the serving path keeps one unsendable
 // code shape in both profiles, and release builds pay nothing.
@@ -582,6 +675,28 @@ impl TierLedger {
     pub fn reconcile(&self, _n_entries: usize, _n_in_flight: usize) {}
     #[inline(always)]
     pub fn close_check(&self) {}
+}
+
+#[cfg(not(debug_assertions))]
+#[derive(Debug, Default)]
+pub struct PlanEpochLedger;
+
+#[cfg(not(debug_assertions))]
+impl PlanEpochLedger {
+    #[inline(always)]
+    pub fn new() -> PlanEpochLedger {
+        PlanEpochLedger
+    }
+    #[inline(always)]
+    pub fn admit(&mut self) {}
+    #[inline(always)]
+    pub fn complete(&mut self) {}
+    #[inline(always)]
+    pub fn fail(&mut self) {}
+    #[inline(always)]
+    pub fn drain(&mut self) {}
+    #[inline(always)]
+    pub fn close_check(&self, _a: usize, _c: usize, _f: usize, _d: usize) {}
 }
 
 // The teeth tests: the auditor is only worth its wiring if a corrupted
@@ -844,6 +959,125 @@ mod tests {
         let mut l = TierLedger::new();
         l.issue(true); // in flight forever
         l.close_check();
+    }
+
+    #[test]
+    fn plan_epoch_ledger_accepts_a_conserving_epoch() {
+        let mut l = PlanEpochLedger::new();
+        l.admit();
+        l.admit();
+        l.admit();
+        l.complete();
+        l.fail();
+        l.drain();
+        l.close_check(3, 1, 1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn plan_epoch_ledger_panics_on_phantom_completion() {
+        let mut l = PlanEpochLedger::new();
+        l.admit();
+        l.complete();
+        l.complete(); // corrupt: one admission, two completions — the
+                      // double-serve a hot-swap must never produce
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn plan_epoch_ledger_panics_on_unretired_admission_at_close() {
+        let mut l = PlanEpochLedger::new();
+        l.admit();
+        // corrupt: the admitted frame neither completed, failed, nor
+        // drained — the dropped-by-swap case
+        l.close_check(1, 0, 0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "custody violation")]
+    fn plan_epoch_ledger_panics_on_counter_disagreement() {
+        let mut l = PlanEpochLedger::new();
+        l.admit();
+        l.complete();
+        // corrupt: the version's atomics claim a drain the transitions
+        // never saw (a frame retired on the wrong version)
+        l.close_check(1, 0, 0, 1);
+    }
+
+    /// Property: random valid epoch custody walks pass, and corrupting
+    /// any single retirement (replaying it against the ledger without a
+    /// matching admission) panics — over admit/complete/fail/drain.
+    #[test]
+    fn prop_plan_epoch_walks_pass_and_random_corruptions_panic() {
+        for seed in 0..200u64 {
+            let mut rng = Pcg32::seed(seed);
+            // ops: 0 = admit, 1 = complete, 2 = fail, 3 = drain
+            let mut plan: Vec<u8> = Vec::new();
+            let mut open = 0usize;
+            for _ in 0..(3 + rng.below(12)) {
+                let op = if open == 0 { 0 } else { rng.below(4) as u8 };
+                match op {
+                    0 => open += 1,
+                    _ => open -= 1,
+                }
+                plan.push(op);
+            }
+            // retire the stragglers so the valid walk closes balanced
+            for _ in 0..open {
+                plan.push(1 + rng.below(3) as u8);
+            }
+
+            let run = |corrupt_at: Option<usize>| {
+                let mut l = PlanEpochLedger::new();
+                let (mut a, mut c, mut f, mut d) = (0usize, 0, 0, 0);
+                for (i, &op) in plan.iter().enumerate() {
+                    match op {
+                        0 => {
+                            l.admit();
+                            a += 1;
+                        }
+                        1 => {
+                            l.complete();
+                            c += 1;
+                        }
+                        2 => {
+                            l.fail();
+                            f += 1;
+                        }
+                        _ => {
+                            l.drain();
+                            d += 1;
+                        }
+                    }
+                    if corrupt_at == Some(i) {
+                        // replay the ledger half without the structure
+                        // half: a retirement that never happened
+                        match op {
+                            0 => l.drain(), // admit corrupted to a phantom
+                            1 => l.complete(),
+                            2 => l.fail(),
+                            _ => l.drain(),
+                        }
+                        d += usize::from(op == 0); // keep close counters
+                        c += usize::from(op == 1); // aligned so the walk
+                        f += usize::from(op == 2); // panics at the breach,
+                        d += usize::from(op == 3); // not the cross-check
+                    }
+                }
+                l.close_check(a, c, f, d);
+            };
+
+            run(None);
+            let at = rng.below(plan.len());
+            let caught =
+                catch_unwind(AssertUnwindSafe(|| run(Some(at)))).is_err();
+            assert!(
+                caught,
+                "seed {seed}: epoch corruption at step {at} of {:?} went \
+                 undetected",
+                plan
+            );
+        }
     }
 
     /// Property: random valid tier custody walks (issue/complete/cancel/

@@ -60,6 +60,10 @@ pub struct Source {
     /// class-aware sinks (`WsDispatch::offer_classed`) shed lower
     /// classes first under backpressure.
     pub qos: QosClass,
+    /// Tenant stamped on every frame this source offers. A registry
+    /// sink routes the frame to this tenant's current plan version;
+    /// the default 0 keeps single-tenant callers on their old path.
+    pub tenant: u32,
 }
 
 impl Source {
@@ -72,6 +76,7 @@ impl Source {
             slack: None,
             prep: None,
             qos: QosClass::Realtime,
+            tenant: 0,
         }
     }
 
@@ -87,6 +92,11 @@ impl Source {
     /// Same source, different admission class.
     pub fn with_qos(self, qos: QosClass) -> Source {
         Source { qos, ..self }
+    }
+
+    /// Same source, owned by a different tenant.
+    pub fn with_tenant(self, tenant: u32) -> Source {
+        Source { tenant, ..self }
     }
 }
 
@@ -180,6 +190,7 @@ struct Cursor {
     slack: Option<Duration>,
     prep: Option<Duration>,
     qos: QosClass,
+    tenant: u32,
     frames: VecDeque<(u64, Tensor)>,
     offered: usize,
     sent: usize,
@@ -202,6 +213,7 @@ impl Cursor {
             slack: src.slack,
             prep: src.prep,
             qos: src.qos,
+            tenant: src.tenant,
             frames: src.frames.into(),
             offered,
             sent: 0,
@@ -342,7 +354,10 @@ where
                 (Some(_), Some(slack)) => Some(due + slack),
                 _ => None,
             };
-            if sink(Frame::with_qos(id, input, c.qos, deadline)) {
+            if sink(
+                Frame::with_qos(id, input, c.qos, deadline)
+                    .with_tenant(c.tenant),
+            ) {
                 c.delivered += 1;
                 c.audit.deliver();
             } else {

@@ -9,30 +9,45 @@
 //! shared-injector work-stealing scheduler with residency-aware
 //! dispatch and adaptive cross-frame batching, plus the round-robin
 //! baseline; `pipeline` wires offline preparation (affinity → graph →
-//! order → trained weights) into a ready-to-serve executor; `audit` is
-//! the debug-build frame-custody auditor backing the conservation
-//! invariant `delivered + dropped == offered` at every transfer point
-//! (CONCURRENCY.md).
+//! order → trained weights) into a ready-to-serve executor; `registry`
+//! is the versioned multi-tenant plan store with epoch-based hot-swap
+//! (in-flight frames finish on the plan version they were admitted
+//! under); `replan` is the background cost-drift replanner that
+//! publishes new epochs when observed costs drift off the `Device`
+//! model; `audit` is the debug-build frame-custody auditor backing the
+//! conservation invariant `delivered + dropped == offered` at every
+//! transfer point (CONCURRENCY.md).
 
 pub mod audit;
 pub mod executor;
 pub mod ingest;
 pub mod net;
 pub mod pipeline;
+pub mod registry;
+pub mod replan;
 pub mod server;
 pub mod shard;
 pub mod wire;
 
 pub use executor::{BatchRound, BlockExecutor};
 pub use ingest::{run_ingest, IngestReport, Source, SourceReport};
-pub use net::{serve_net, ConnReport, NetOpts, NetReport};
-pub use pipeline::{prepare, Prepared, PrepareConfig};
+pub use net::{
+    serve_net, serve_net_registry, ConnReport, NetOpts, NetReport,
+};
+pub use pipeline::{compile_tenant_plans, prepare, Prepared, PrepareConfig};
+pub use registry::{EpochOutcome, EpochRow, PlanRegistry, PlanVersion};
+pub use replan::{
+    spawn_replanner, CostObs, DriftConfig, DriftModel, ReplanEvent,
+    TenantSpec,
+};
 pub use server::{
-    process_frame, run_executor, serve, Frame, FrameResult, ServePlan,
-    ServeReport,
+    process_frame, process_frame_observed, run_executor, serve, Frame,
+    FrameResult, ServePlan, ServeReport,
 };
 pub use shard::{
-    serve_sharded, serve_sharded_opts, serve_sharded_sources, BatchPolicy,
-    ShardOpts, ShardReport,
+    serve_sharded, serve_sharded_opts, serve_sharded_registry,
+    serve_sharded_registry_feed, serve_sharded_sources,
+    serve_sharded_sources_registry, BatchPolicy, ShardOpts, ShardReport,
+    WsDispatch,
 };
 pub use wire::QosClass;

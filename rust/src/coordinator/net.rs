@@ -44,10 +44,15 @@ use crate::sync::thread;
 
 use super::audit::ConnLedger;
 use super::executor::BlockExecutor;
+use super::registry::PlanRegistry;
+use super::replan::CostObs;
 use super::server::{Frame, ServePlan};
 use super::shard::{
-    serve_work_stealing_core, Admission, ShardOpts, ShardReport, WsDispatch,
+    serve_registry_core, serve_work_stealing_core, Admission, ShardOpts,
+    ShardReport, WsDispatch,
 };
+use crate::sync::mpsc::Sender;
+use crate::sync::Arc;
 use super::wire::{decode_frame, QosClass, WireFrame};
 
 /// Bytes read from one connection per fair-rotation visit. Bounded so a
@@ -203,6 +208,41 @@ impl NetReport {
         }
         t
     }
+
+    /// Per-tenant row breakdown of the admission table: connections
+    /// grouped by the tenant their records declared, with the same
+    /// conservation columns as the per-connection reports. Rendered
+    /// under the per-class table by `serve --listen`.
+    pub fn tenant_table(&self) -> String {
+        let mut rows: std::collections::BTreeMap<u32, ConnReport> =
+            std::collections::BTreeMap::new();
+        for c in &self.conns {
+            let r = rows
+                .entry(c.tenant)
+                .or_insert_with(|| ConnReport::empty(0));
+            r.offered += c.offered;
+            r.delivered += c.delivered;
+            r.dropped_stale += c.dropped_stale;
+            r.dropped_backpressure += c.dropped_backpressure;
+            r.dropped_truncated += c.dropped_truncated;
+        }
+        let mut t = String::from(
+            "per-tenant admission (network front-end):\n  tenant  \
+             offered  delivered  stale  backpressure  truncated\n",
+        );
+        for (tenant, r) in rows {
+            t.push_str(&format!(
+                "  {:>6}  {:>7}  {:>9}  {:>5}  {:>12}  {:>9}\n",
+                tenant,
+                r.offered,
+                r.delivered,
+                r.dropped_stale,
+                r.dropped_backpressure,
+                r.dropped_truncated
+            ));
+        }
+        t
+    }
 }
 
 /// Per-class tallies one producer accumulates (merged at the barrier).
@@ -279,8 +319,12 @@ impl Conn {
         // of the ingest tier's `due + slack`
         let deadline = (wf.deadline_us > 0)
             .then(|| self.read_at + Duration::from_micros(wf.deadline_us as u64));
+        // the tenant field used to be decoded and dropped here — plan
+        // selection ignored it. It now rides the frame into dispatch,
+        // where the registry pins the tenant's current plan version
         let frame =
-            Frame::with_qos(wf.id, Tensor::new(wf.shape, wf.data), cls, deadline);
+            Frame::with_qos(wf.id, Tensor::new(wf.shape, wf.data), cls, deadline)
+                .with_tenant(wf.tenant);
         let adm = if qos_on {
             d.offer_classed(frame)
         } else if d.offer(frame) {
@@ -614,6 +658,53 @@ where
     Ok((report, nr))
 }
 
+/// Tenant-routed network serving: like [`serve_net`] but frames are
+/// dispatched through a [`PlanRegistry`] — each record's wire `tenant`
+/// field selects that tenant's current plan version at admission, and
+/// hot-swaps published mid-stream take effect for frames admitted after
+/// the publish. `obs` (when provided) streams per-task simulated costs
+/// to the background replanner.
+pub fn serve_net_registry<B, F>(
+    make_executor: F,
+    n_shards: usize,
+    registry: Arc<PlanRegistry>,
+    listener: TcpListener,
+    net: &NetOpts,
+    opts: &ShardOpts,
+    obs: Option<Sender<CostObs>>,
+) -> Result<(ShardReport, NetReport)>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    if !opts.steal {
+        return Err(anyhow!(
+            "the network front-end fronts the work-stealing scheduler; \
+             drop --round-robin to use --listen"
+        ));
+    }
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| anyhow!("cannot make listener nonblocking: {e}"))?;
+    let mut slot: Option<NetReport> = None;
+    let (report, _) = serve_registry_core(
+        make_executor,
+        n_shards,
+        registry,
+        opts,
+        obs,
+        |d| {
+            let nr = run_listener(&listener, d, net);
+            let dropped = nr.dropped();
+            slot = Some(nr);
+            (dropped, None)
+        },
+    )?;
+    let nr =
+        slot.ok_or_else(|| anyhow!("network feeder returned no report"))?;
+    Ok((report, nr))
+}
+
 #[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
@@ -729,6 +820,64 @@ mod tests {
         assert_eq!(sr.aggregate.frames, nr.delivered());
         assert_eq!(nr.class(QosClass::Realtime).offered, 12);
         assert!(nr.class_table().contains("realtime"));
+        // the wire tenant rides the frame all the way into the shard
+        // results (it used to be decoded and dropped at admission)
+        for r in &sr.results {
+            assert_eq!(u64::from(r.tenant), r.id / 100, "frame {}", r.id);
+        }
+        let per_tenant = sr.frames_per_tenant();
+        assert_eq!(per_tenant, vec![(0, 4), (1, 4), (2, 4)]);
+        let tt = nr.tenant_table();
+        for tenant in 0..3u32 {
+            assert!(tt.contains(&format!("\n  {tenant:>6}  ")), "{tt}");
+        }
+    }
+
+    #[test]
+    fn registry_routes_wire_tenants_to_their_own_plans() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let clients: Vec<_> = (0..2u32)
+            .map(|t| {
+                thread::spawn(move || {
+                    let mut s = ClientStream::connect(addr).unwrap();
+                    for i in 0..5u64 {
+                        let rec = record(
+                            u64::from(t) * 100 + i,
+                            t,
+                            QosClass::Realtime,
+                            0,
+                        );
+                        s.write_all(&rec).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let registry = Arc::new(PlanRegistry::new(vec![
+            ServePlan::unconditional(vec![0, 1, 2]),
+            ServePlan::unconditional(vec![2, 1, 0]),
+        ]));
+        let (sr, nr) = serve_net_registry(
+            make_executor,
+            2,
+            Arc::clone(&registry),
+            listener,
+            &net_opts(2, 2),
+            &ShardOpts::default(),
+            None,
+        )
+        .unwrap();
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(nr.offered(), 10);
+        assert_eq!(sr.frames_per_tenant(), vec![(0, 5), (1, 5)]);
+        // every epoch the registry tracked balanced and retired its pins
+        registry.close_check();
+        assert_eq!(sr.epochs.len(), 2);
+        for row in &sr.epochs {
+            assert_eq!(row.admitted, row.completed, "{row:?}");
+        }
     }
 
     #[test]

@@ -11,12 +11,14 @@ use crate::affinity::{affinity_from_profiles, representation_profile, AffinityTe
 use crate::device::Device;
 use crate::memory::cost_matrix;
 use crate::model::{ArchSpec, Tensor};
-use crate::ordering::{solve_held_karp, OrderingProblem};
+use crate::ordering::{solve_held_karp, solve_subset, OrderingProblem};
 use crate::runtime::Backend;
 use crate::taskgraph::select::{score_graph, select_tradeoff, GraphScore};
-use crate::taskgraph::{enumerate, TaskGraph};
+use crate::taskgraph::{enumerate, tenant_task_split, TaskGraph};
 use crate::trainer::{self, GraphWeights};
 use crate::util::rng::Pcg32;
+
+use super::server::ServePlan;
 
 /// Anything that can feed the pipeline: the dataset analogs (binary
 /// one-vs-rest tasks) or the §7 deployment streams (multi-class tasks).
@@ -272,6 +274,44 @@ pub fn deployment_order(
         .unwrap_or_else(|| (0..prepared.ncls.len()).collect()))
 }
 
+/// Re-entrant per-tenant compile: split the prepared deployment's task
+/// set across `n_tenants` ([`tenant_task_split`] — round-robin, surplus
+/// tenants wrap to the full set), then push each subset through the
+/// same Held–Karp ordering `deployment_order` uses, restricted to the
+/// subset's rows and columns of the switching-cost matrix
+/// ([`solve_subset`]). Constraints that name a task outside a tenant's
+/// subset are vacuous for that tenant and drop out; an infeasible
+/// subset falls back to its ascending identity order, mirroring
+/// `deployment_order`'s fallback. Tenant `t`'s plan is `plans[t]` —
+/// ready to seed a `PlanRegistry` at epoch 0, or to be re-derived live
+/// by the cost-drift replanner (`coordinator::replan`).
+pub fn compile_tenant_plans(
+    prepared: &Prepared,
+    device: &Device,
+    n_tenants: usize,
+    precedence: &[(usize, usize)],
+    conditional: &[(usize, usize, f64)],
+) -> Vec<ServePlan> {
+    let cost =
+        cost_matrix(device, &prepared.arch, &prepared.graph, &prepared.ncls, false);
+    tenant_task_split(prepared.ncls.len(), n_tenants)
+        .into_iter()
+        .map(|tasks| {
+            let order = solve_subset(&cost, &tasks, precedence, conditional)
+                .map(|s| s.order)
+                .unwrap_or_else(|| tasks.clone());
+            let conditional: Vec<(usize, usize)> = conditional
+                .iter()
+                .filter(|&&(a, b, _)| {
+                    tasks.contains(&a) && tasks.contains(&b)
+                })
+                .map(|&(a, b, _)| (a, b))
+                .collect();
+            ServePlan { order, conditional }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,6 +346,23 @@ mod tests {
         // affinity is a D x 6 x 6 tensor
         assert_eq!(prep.affinity.n, 6);
         assert_eq!(prep.affinity.d, prep.graph.d());
+
+        // per-tenant compile: two tenants partition the 6 tasks and each
+        // tenant's order is a permutation of exactly its subset
+        let plans = compile_tenant_plans(&prep, &cfg.device, 2, &[], &[]);
+        assert_eq!(plans.len(), 2);
+        for (t, plan) in plans.iter().enumerate() {
+            let mut got = plan.order.clone();
+            got.sort_unstable();
+            let want: Vec<usize> = (0..6).filter(|i| i % 2 == t).collect();
+            assert_eq!(got, want, "tenant {t} order is not its subset");
+        }
+        // one tenant == the whole deployment: the subset solve over
+        // everything must reproduce deployment_order bit for bit
+        let single = compile_tenant_plans(&prep, &cfg.device, 1, &[], &[]);
+        let full = deployment_order(&prep, &cfg.device, vec![], vec![]).unwrap();
+        assert_eq!(single[0].order, full);
+        assert!(single[0].conditional.is_empty());
     }
 
     /// PJRT variant — kept behind artifact detection.

@@ -1,0 +1,433 @@
+//! Versioned multi-tenant plan registry with epoch-based hot-swap.
+//!
+//! Each tenant owns a slot holding the *current* [`PlanVersion`] — an
+//! immutable `(tenant, epoch, ServePlan)` triple behind an `Arc` — plus
+//! the history of every version ever published. Admission pins a frame
+//! to the version that was current at offer time by cloning the `Arc`
+//! into the frame itself; a [`publish`](PlanRegistry::publish) swaps
+//! the slot's current pointer under a short-lived mutex and bumps the
+//! epoch. That is the whole hot-swap protocol: in-flight frames keep
+//! executing the plan their pinned `Arc` points at, new frames pick up
+//! the new epoch at the next `current()` read, and the old version is
+//! freed when its last in-flight frame drops the pin — no drain, no
+//! pause, no reader lock on the per-frame path beyond one mutex-guarded
+//! pointer clone (RCU by refcount).
+//!
+//! Conservation across a swap is the load-bearing claim: a swap must
+//! neither drop nor double-serve a frame. Every admission books
+//! `note_admitted` on the pinned version *inside the steal queue's
+//! accept path* (before the frame becomes poppable — so a fast worker
+//! cannot retire a frame whose admission is unbooked), and every
+//! admitted frame is retired on that same version as exactly one
+//! [`EpochOutcome`]: completed, failed (its shard died mid-frame), or
+//! drained (still queued at shutdown). `close_check` then requires
+//! `admitted == completed + failed + drained` per version, summed over
+//! live epochs — re-derived transition-by-transition in debug builds by
+//! the [`PlanEpochLedger`](super::audit::PlanEpochLedger) auditor, and
+//! model-checked under loom (`loom_epoch_swap_pins_and_balances`, the
+//! 9th model — CONCURRENCY.md §Plan hot-swap).
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::{lock_unpoisoned, Arc, Mutex};
+
+#[cfg(debug_assertions)]
+use super::audit::PlanEpochLedger;
+use super::server::ServePlan;
+
+/// How an admitted frame left its plan version. Every admission must
+/// retire as exactly one of these — the epoch twin of the steal queue's
+/// served/failed/drained custody split. A new retirement class must
+/// break the build at every accounting site (analyzer rule A5), not be
+/// silently absorbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpochOutcome {
+    /// The frame's full multitask round finished on this plan.
+    Completed,
+    /// The frame's shard died mid-round; the frame is reported as a
+    /// shard error, never as a result.
+    Failed,
+    /// The frame was still queued when serving shut down and was
+    /// cleared by `drain_remaining` (counted as dropped upstream).
+    Drained,
+}
+
+/// One immutable published plan: the unit frames pin at admission.
+///
+/// Counters are `Relaxed` on both sides: each is an independent monotone
+/// tally (atomic RMWs never lose increments at any ordering), and every
+/// cross-thread *read* happens after the serving scope's joins — the
+/// synchronization barrier — so no counter carries a happens-before
+/// edge for frame data (frames travel through the mutex-guarded steal
+/// queue). Same contract as `ResidencyBoard` / `PrefetchSignal`.
+pub struct PlanVersion {
+    pub tenant: u32,
+    /// Monotone per-tenant version number, starting at 0.
+    pub epoch: u64,
+    pub plan: ServePlan,
+    admitted: AtomicUsize,
+    completed: AtomicUsize,
+    failed: AtomicUsize,
+    drained: AtomicUsize,
+    /// Debug-build custody ledger (`coordinator::audit`): re-derives
+    /// the counter arithmetic transition-by-transition and panics on
+    /// the first retirement no conserving execution could produce.
+    /// Compiled out in release (the loom lane runs `--release`, so the
+    /// model checks the protocol, not the auditor).
+    #[cfg(debug_assertions)]
+    audit: Mutex<PlanEpochLedger>,
+}
+
+impl std::fmt::Debug for PlanVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (a, c, fl, d) = self.counts();
+        f.debug_struct("PlanVersion")
+            .field("tenant", &self.tenant)
+            .field("epoch", &self.epoch)
+            .field("admitted", &a)
+            .field("completed", &c)
+            .field("failed", &fl)
+            .field("drained", &d)
+            .finish()
+    }
+}
+
+impl PlanVersion {
+    fn new(tenant: u32, epoch: u64, plan: ServePlan) -> PlanVersion {
+        PlanVersion {
+            tenant,
+            epoch,
+            plan,
+            admitted: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            drained: AtomicUsize::new(0),
+            #[cfg(debug_assertions)]
+            audit: Mutex::new(PlanEpochLedger::new()),
+        }
+    }
+
+    /// Book one admission against this version. Called from inside the
+    /// steal queue's accept path, under its lock, *before* the frame
+    /// becomes poppable — so no worker can retire a frame whose
+    /// admission is unbooked. Lock order is queue → ledger and nothing
+    /// ever takes them in reverse, so no cycle.
+    pub fn note_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        #[cfg(debug_assertions)]
+        lock_unpoisoned(&self.audit).admit();
+    }
+
+    /// Retire one admitted frame. Exhaustive over [`EpochOutcome`]: a
+    /// new retirement class must be accounted here (analyzer rule A5).
+    pub fn note_outcome(&self, outcome: EpochOutcome) {
+        match outcome {
+            EpochOutcome::Completed => {
+                self.completed.fetch_add(1, Ordering::Relaxed);
+                #[cfg(debug_assertions)]
+                lock_unpoisoned(&self.audit).complete();
+            }
+            EpochOutcome::Failed => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                #[cfg(debug_assertions)]
+                lock_unpoisoned(&self.audit).fail();
+            }
+            EpochOutcome::Drained => {
+                self.drained.fetch_add(1, Ordering::Relaxed);
+                #[cfg(debug_assertions)]
+                lock_unpoisoned(&self.audit).drain();
+            }
+        }
+    }
+
+    /// `(admitted, completed, failed, drained)`.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        (
+            self.admitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.drained.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Has every admitted frame been retired?
+    pub fn balanced(&self) -> bool {
+        let (a, c, f, d) = self.counts();
+        a == c + f + d
+    }
+
+    /// Assert full retirement: `admitted == completed + failed +
+    /// drained`. Runs in release builds too — a swap that leaks a frame
+    /// must fail loudly, not ship; the check is O(1) and runs after the
+    /// serving scope's joins, never per frame.
+    pub fn close_check(&self) {
+        let (a, c, f, d) = self.counts();
+        assert_eq!(
+            a,
+            c + f + d,
+            "plan version t{}e{} leaks frames: {a} admitted vs {c} completed \
+             + {f} failed + {d} drained",
+            self.tenant,
+            self.epoch,
+        );
+        #[cfg(debug_assertions)]
+        lock_unpoisoned(&self.audit).close_check(a, c, f, d);
+    }
+}
+
+/// One tenant's slot: current version + full publish history.
+struct TenantSlot {
+    /// `history.last()` is always the current version. Guarded by one
+    /// short-lived mutex: `current()` clones an `Arc` under it,
+    /// `publish()` pushes under it — no guard ever crosses a blocking
+    /// call (analyzer rule A4).
+    history: Mutex<Vec<Arc<PlanVersion>>>,
+}
+
+/// The versioned multi-tenant plan registry.
+///
+/// Routing: tenant `t` maps to slot `t % n_tenants`, so an unknown
+/// tenant id degrades to a deterministic slot instead of a panic — on
+/// the single-tenant path every frame (tenant 0 or otherwise) lands on
+/// the one plan, which is exactly the pre-registry behavior.
+pub struct PlanRegistry {
+    slots: Vec<TenantSlot>,
+}
+
+/// One row of the per-epoch accounting table (`ShardReport::epochs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpochRow {
+    pub tenant: u32,
+    pub epoch: u64,
+    pub admitted: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub drained: usize,
+    /// Is this the tenant's current (latest-published) version?
+    pub live: bool,
+}
+
+impl PlanRegistry {
+    /// A registry over `plans[i]` as tenant `i`'s epoch-0 plan.
+    /// `plans` must be non-empty; an empty fleet has nothing to route.
+    pub fn new(plans: Vec<ServePlan>) -> PlanRegistry {
+        assert!(!plans.is_empty(), "registry needs at least one tenant plan");
+        PlanRegistry {
+            slots: plans
+                .into_iter()
+                .enumerate()
+                .map(|(t, p)| TenantSlot {
+                    history: Mutex::new(vec![Arc::new(PlanVersion::new(
+                        t as u32, 0, p,
+                    ))]),
+                })
+                .collect(),
+        }
+    }
+
+    /// The single-tenant registry the legacy entry points wrap their
+    /// one static plan in: every tenant id routes to it.
+    pub fn single(plan: ServePlan) -> PlanRegistry {
+        PlanRegistry::new(vec![plan])
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn slot(&self, tenant: u32) -> &TenantSlot {
+        // non-empty by construction (`new` asserts), so the modulo is
+        // always in range
+        &self.slots[tenant as usize % self.slots.len()]
+    }
+
+    /// The tenant's current version — the one a frame offered *now*
+    /// pins. One mutex-guarded `Arc` clone.
+    pub fn current(&self, tenant: u32) -> Arc<PlanVersion> {
+        let h = lock_unpoisoned(&self.slot(tenant).history);
+        // the slot is created with its epoch-0 version and publish only
+        // appends, so last() always exists; if that invariant ever
+        // broke, dying here beats serving frames with no plan
+        // lint:allow(panic)
+        Arc::clone(h.last().expect("tenant slot lost its plan history"))
+    }
+
+    /// Publish `plan` as the tenant's next epoch and return that epoch.
+    /// In-flight frames keep their pinned version; only frames offered
+    /// after this call observe the new one.
+    pub fn publish(&self, tenant: u32, plan: ServePlan) -> u64 {
+        let slot = self.slot(tenant);
+        let mut h = lock_unpoisoned(&slot.history);
+        let epoch = h.last().map_or(0, |v| v.epoch + 1);
+        let t = h.last().map_or(tenant, |v| v.tenant);
+        h.push(Arc::new(PlanVersion::new(t, epoch, plan)));
+        epoch
+    }
+
+    /// Every version ever published, all tenants, publish order within
+    /// each tenant.
+    pub fn versions(&self) -> Vec<Arc<PlanVersion>> {
+        self.slots
+            .iter()
+            .flat_map(|s| lock_unpoisoned(&s.history).iter().cloned().collect::<Vec<_>>())
+            .collect()
+    }
+
+    /// Per-epoch accounting rows for `ShardReport`.
+    pub fn epoch_report(&self) -> Vec<EpochRow> {
+        let mut rows = Vec::new();
+        for s in &self.slots {
+            let h = lock_unpoisoned(&s.history);
+            let last = h.len().saturating_sub(1);
+            for (i, v) in h.iter().enumerate() {
+                let (admitted, completed, failed, drained) = v.counts();
+                rows.push(EpochRow {
+                    tenant: v.tenant,
+                    epoch: v.epoch,
+                    admitted,
+                    completed,
+                    failed,
+                    drained,
+                    live: i == last,
+                });
+            }
+        }
+        rows
+    }
+
+    /// Assert every version (live and retired) fully retired its
+    /// admissions. Called after the serving scope's joins.
+    pub fn close_check(&self) {
+        for v in self.versions() {
+            v.close_check();
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn plan(order: Vec<usize>) -> ServePlan {
+        ServePlan::unconditional(order)
+    }
+
+    #[test]
+    fn current_pins_the_version_at_read_time() {
+        let reg = PlanRegistry::new(vec![plan(vec![0, 1]), plan(vec![1, 0])]);
+        let v0 = reg.current(0);
+        assert_eq!((v0.tenant, v0.epoch), (0, 0));
+        assert_eq!(v0.plan.order, vec![0, 1]);
+        let e = reg.publish(0, plan(vec![1, 0]));
+        assert_eq!(e, 1);
+        // the pinned Arc still reads the old plan; a fresh read sees the new
+        assert_eq!(v0.plan.order, vec![0, 1]);
+        let v1 = reg.current(0);
+        assert_eq!(v1.epoch, 1);
+        assert_eq!(v1.plan.order, vec![1, 0]);
+        // tenant 1 is untouched by tenant 0's publish
+        assert_eq!(reg.current(1).epoch, 0);
+    }
+
+    #[test]
+    fn unknown_tenants_route_modulo_the_fleet() {
+        let reg = PlanRegistry::new(vec![plan(vec![0]), plan(vec![1])]);
+        assert_eq!(reg.current(2).tenant, 0);
+        assert_eq!(reg.current(7).tenant, 1);
+        let single = PlanRegistry::single(plan(vec![0, 1, 2]));
+        for t in [0u32, 1, 99] {
+            assert_eq!(single.current(t).plan.order, vec![0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn outcomes_retire_on_the_pinned_version_across_a_swap() {
+        let reg = PlanRegistry::new(vec![plan(vec![0])]);
+        let old = reg.current(0);
+        old.note_admitted();
+        old.note_admitted();
+        reg.publish(0, plan(vec![0]));
+        let new = reg.current(0);
+        new.note_admitted();
+        // in-flight frames finish on the version they were admitted under
+        old.note_outcome(EpochOutcome::Completed);
+        old.note_outcome(EpochOutcome::Drained);
+        new.note_outcome(EpochOutcome::Completed);
+        assert_eq!(old.counts(), (2, 1, 0, 1));
+        assert_eq!(new.counts(), (1, 1, 0, 0));
+        reg.close_check();
+        let rows = reg.epoch_report();
+        assert_eq!(rows.len(), 2);
+        assert!(!rows[0].live && rows[1].live);
+        assert_eq!(rows[0].admitted, 2);
+        assert_eq!(rows[1].epoch, 1);
+    }
+
+    #[test]
+    fn failed_outcome_is_its_own_bucket() {
+        let reg = PlanRegistry::single(plan(vec![0]));
+        let v = reg.current(0);
+        v.note_admitted();
+        v.note_outcome(EpochOutcome::Failed);
+        assert_eq!(v.counts(), (1, 0, 1, 0));
+        assert!(v.balanced());
+        reg.close_check();
+    }
+
+    #[test]
+    #[should_panic(expected = "leaks frames")]
+    fn close_check_panics_on_unretired_admission() {
+        let reg = PlanRegistry::single(plan(vec![0]));
+        reg.current(0).note_admitted();
+        reg.close_check();
+    }
+}
+
+/// Exhaustive model check of the epoch-swap protocol (`./ci.sh --loom`,
+/// 9th model): an admitter pinning + retiring frames races a publisher
+/// swapping the tenant's plan. In every interleaving each frame retires
+/// on the exact version that admitted it, every version balances, and
+/// the epoch advances — a swap can neither drop nor double-serve.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::thread;
+
+    fn model() -> loom::model::Builder {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(3);
+        b
+    }
+
+    #[test]
+    fn loom_epoch_swap_pins_and_balances() {
+        model().check(|| {
+            let reg = Arc::new(PlanRegistry::new(vec![
+                ServePlan::unconditional(vec![0]),
+            ]));
+            let r_a = Arc::clone(&reg);
+            let admitter = thread::spawn(move || {
+                for _ in 0..2 {
+                    // pin, admit, retire — the worker's life of a frame
+                    let v = r_a.current(0);
+                    v.note_admitted();
+                    v.note_outcome(EpochOutcome::Completed);
+                }
+            });
+            let r_p = Arc::clone(&reg);
+            let publisher = thread::spawn(move || {
+                r_p.publish(0, ServePlan::unconditional(vec![0]));
+            });
+            admitter.join().unwrap();
+            publisher.join().unwrap();
+            let versions = reg.versions();
+            assert_eq!(versions.len(), 2, "publish must add a version");
+            let total: usize = versions.iter().map(|v| v.counts().0).sum();
+            assert_eq!(total, 2, "both frames admitted exactly once");
+            for v in &versions {
+                assert!(v.balanced(), "version t{}e{} unbalanced", v.tenant, v.epoch);
+            }
+            reg.close_check();
+            assert_eq!(reg.current(0).epoch, 1, "swap must advance the epoch");
+        });
+    }
+}

@@ -1,0 +1,439 @@
+//! Cost-drift replanner: the background loop that closes the gap
+//! between the `Device` cost model the plans were compiled from and the
+//! costs the shards actually observe. Shards stream per-task simulated
+//! service times ([`CostObs`]) over a channel; the [`DriftModel`]
+//! accumulates an EWMA per (tenant, task) and compares the *shape* of
+//! observed costs against the shape the tenant's cost matrix predicts.
+//! When the worst per-task relative drift exceeds
+//! [`DriftConfig::threshold`] with every task at
+//! [`DriftConfig::min_samples`], the tenant's cost-matrix columns are
+//! rescaled by the observed/predicted ratio, the ordering pipeline is
+//! re-run off the hot path (`ordering::solve_subset` — the same
+//! Held–Karp the offline compile uses), and the new plan is published
+//! to the [`PlanRegistry`] as a new epoch. In-flight frames are
+//! untouched: the epoch-based hot-swap (`coordinator::registry`) lets
+//! them finish on the plan they were admitted under.
+//!
+//! The drift arithmetic is deliberately a handful of pure f64
+//! operations — `tools/verify_replanner.py` is a line-for-line port
+//! that replays the same traces without cargo (same contract as
+//! `verify_tier_model.py` / `verify_analyzer.py`).
+//!
+//! Why shapes, not absolute times: observations are *simulated* device
+//! seconds (`Cost::time()` from the executor), so they are deterministic
+//! — but a task's observed per-frame cost includes whatever trunk blocks
+//! its round position makes it pay, while the matrix predicts pairwise
+//! switching costs. Normalizing both sides to mean 1.0 compares the
+//! relative expensiveness of tasks, which is exactly what reordering can
+//! exploit; a uniform slowdown (same shape, bigger numbers) correctly
+//! triggers nothing, because no reorder can help it.
+
+use crate::ordering::solve_subset;
+use crate::sync::mpsc::{channel, Sender};
+use crate::sync::{thread, Arc};
+
+use super::registry::PlanRegistry;
+use super::server::ServePlan;
+
+/// One per-task service-time observation from a shard: `secs` is
+/// simulated device seconds for one execution of `task` on a frame of
+/// `tenant` (the single-frame serving path reports these; batched
+/// rounds amortize block loads across frames and are skipped).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostObs {
+    pub tenant: u32,
+    pub task: usize,
+    pub secs: f64,
+}
+
+/// Drift-trigger knobs. The defaults are conservative: half again off
+/// the predicted shape, sustained over 32 samples per task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftConfig {
+    /// Max per-task relative drift of the normalized observed shape vs
+    /// the normalized predicted shape that triggers a replan.
+    pub threshold: f64,
+    /// Observations required for EVERY task of a tenant before its
+    /// drift is trusted.
+    pub min_samples: usize,
+    /// EWMA smoothing factor for observed costs (1.0 = last sample).
+    pub alpha: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig { threshold: 0.5, min_samples: 32, alpha: 0.2 }
+    }
+}
+
+/// A tenant's compile context, carried by the replanner so the ordering
+/// pipeline can be re-run off the hot path without touching the
+/// `Prepared` artifacts.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub tenant: u32,
+    /// The tenant's task subset, original task ids.
+    pub tasks: Vec<usize>,
+    /// Full n×n switching-cost matrix from the `Device` model
+    /// (`memory::cost_matrix`) — the replanner rescales a copy's
+    /// columns as drift is confirmed.
+    pub cost: Vec<Vec<f64>>,
+    pub precedence: Vec<(usize, usize)>,
+    pub conditional: Vec<(usize, usize, f64)>,
+}
+
+/// One published replan, in publication order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanEvent {
+    pub tenant: u32,
+    /// The epoch the new plan was published as.
+    pub epoch: u64,
+    /// The max per-task relative drift that triggered it.
+    pub max_drift: f64,
+}
+
+/// Per-tenant accumulator state.
+#[derive(Debug)]
+struct TenantState {
+    spec: TenantSpec,
+    /// task id -> position in `spec.tasks`, usize::MAX = not ours.
+    local: Vec<usize>,
+    /// Predicted per-task cost: mean over the subset's other tasks of
+    /// the matrix column into this task (cost of switching INTO it).
+    predicted: Vec<f64>,
+    /// EWMA of observed per-task cost, per subset position.
+    ewma: Vec<Option<f64>>,
+    samples: Vec<usize>,
+}
+
+impl TenantState {
+    fn new(spec: TenantSpec, n_tasks: usize) -> TenantState {
+        let mut local = vec![usize::MAX; n_tasks];
+        for (i, &t) in spec.tasks.iter().enumerate() {
+            if t < n_tasks {
+                local[t] = i;
+            }
+        }
+        let k = spec.tasks.len();
+        let predicted = predicted_from_matrix(&spec.cost, &spec.tasks);
+        TenantState {
+            spec,
+            local,
+            predicted,
+            ewma: vec![None; k],
+            samples: vec![0; k],
+        }
+    }
+
+    /// Reset the accumulator after a publish: the rescaled matrix IS
+    /// the model now, so drift restarts from zero against it — without
+    /// this, persistent drift would republish every sample forever.
+    fn reset(&mut self) {
+        self.predicted = predicted_from_matrix(&self.spec.cost, &self.spec.tasks);
+        for e in self.ewma.iter_mut() {
+            *e = None;
+        }
+        for s in self.samples.iter_mut() {
+            *s = 0;
+        }
+    }
+}
+
+/// predicted[i] = mean over j≠i of cost[tasks[j]][tasks[i]] — the
+/// average modeled cost of switching into task i from elsewhere in the
+/// subset. Singleton subsets predict 0 (and can never trigger: there is
+/// nothing to reorder).
+fn predicted_from_matrix(cost: &[Vec<f64>], tasks: &[usize]) -> Vec<f64> {
+    let k = tasks.len();
+    tasks
+        .iter()
+        .map(|&into| {
+            if k < 2 {
+                return 0.0;
+            }
+            let sum: f64 = tasks
+                .iter()
+                .filter(|&&from| from != into)
+                .map(|&from| cost[from][into])
+                .sum();
+            sum / (k - 1) as f64
+        })
+        .collect()
+}
+
+/// Normalize a cost vector to mean 1.0 (shape). All-zero stays all-zero.
+fn shape(v: &[f64]) -> Vec<f64> {
+    let mean = v.iter().sum::<f64>() / v.len().max(1) as f64;
+    if mean <= 0.0 {
+        return v.to_vec();
+    }
+    v.iter().map(|&x| x / mean).collect()
+}
+
+/// The drift detector + replan compiler, pure and synchronous:
+/// [`DriftModel::observe`] folds one observation in and returns the new
+/// plan when that observation tips a tenant over the threshold.
+/// `spawn_replanner` wraps it in a thread; the tests and the Python
+/// port drive it directly.
+#[derive(Debug)]
+pub struct DriftModel {
+    cfg: DriftConfig,
+    tenants: Vec<TenantState>,
+}
+
+impl DriftModel {
+    pub fn new(specs: Vec<TenantSpec>, cfg: DriftConfig) -> DriftModel {
+        let n_tasks = specs.iter().map(|s| s.cost.len()).max().unwrap_or(0);
+        DriftModel {
+            cfg,
+            tenants: specs
+                .into_iter()
+                .map(|s| TenantState::new(s, n_tasks))
+                .collect(),
+        }
+    }
+
+    /// Fold one observation in. Returns `Some((tenant, plan, max_drift))`
+    /// when this observation confirms drift for its tenant: the tenant's
+    /// matrix columns have been rescaled, the subset re-ordered, and the
+    /// accumulator reset — the caller's only job is to publish.
+    pub fn observe(
+        &mut self,
+        obs: CostObs,
+    ) -> Option<(u32, ServePlan, f64)> {
+        let a = self.cfg.alpha;
+        let ti = self
+            .tenants
+            .iter()
+            .position(|t| t.spec.tenant == obs.tenant)?;
+        let st = &mut self.tenants[ti];
+        let pos = *st.local.get(obs.task)?;
+        if pos == usize::MAX {
+            return None;
+        }
+        st.ewma[pos] = Some(match st.ewma[pos] {
+            None => obs.secs,
+            Some(e) => (1.0 - a) * e + a * obs.secs,
+        });
+        st.samples[pos] += 1;
+        self.check(ti)
+    }
+
+    /// The drift-trigger arithmetic — ported line for line by
+    /// `tools/verify_replanner.py`; keep the two in lockstep.
+    fn check(&mut self, ti: usize) -> Option<(u32, ServePlan, f64)> {
+        let cfg = self.cfg;
+        let st = &mut self.tenants[ti];
+        let k = st.spec.tasks.len();
+        if k < 2 {
+            return None;
+        }
+        if st.samples.iter().any(|&s| s < cfg.min_samples) {
+            return None;
+        }
+        let observed: Vec<f64> =
+            st.ewma.iter().map(|e| e.unwrap_or(0.0)).collect();
+        let p_hat = shape(&st.predicted);
+        let o_hat = shape(&observed);
+        let mut max_drift = 0.0f64;
+        for i in 0..k {
+            let denom = p_hat[i].max(1e-12);
+            let d = (o_hat[i] - p_hat[i]).abs() / denom;
+            if d > max_drift {
+                max_drift = d;
+            }
+        }
+        if max_drift <= cfg.threshold {
+            return None;
+        }
+        // confirmed: rescale the matrix columns by observed/predicted
+        // shape ratio — column j is the cost of switching INTO task j,
+        // which is what the per-task observation measures
+        for i in 0..k {
+            let m = o_hat[i] / p_hat[i].max(1e-12);
+            let col = st.spec.tasks[i];
+            for row in st.spec.cost.iter_mut() {
+                if col < row.len() {
+                    row[col] *= m;
+                }
+            }
+        }
+        let order = solve_subset(
+            &st.spec.cost,
+            &st.spec.tasks,
+            &st.spec.precedence,
+            &st.spec.conditional,
+        )
+        .map(|s| s.order)
+        .unwrap_or_else(|| st.spec.tasks.clone());
+        let conditional: Vec<(usize, usize)> = st
+            .spec
+            .conditional
+            .iter()
+            .filter(|&&(x, y, _)| {
+                st.spec.tasks.contains(&x) && st.spec.tasks.contains(&y)
+            })
+            .map(|&(x, y, _)| (x, y))
+            .collect();
+        let tenant = st.spec.tenant;
+        st.reset();
+        Some((tenant, ServePlan { order, conditional }, max_drift))
+    }
+}
+
+/// Spawn the background replanner: returns the observation sender
+/// (clone it into every shard worker) and a handle yielding the
+/// published [`ReplanEvent`]s. The thread exits when the last sender is
+/// dropped — `serve_registry_core` drops the workers' clones as they
+/// finish, so `handle.join()` after the serve returns is drain-free.
+pub fn spawn_replanner(
+    registry: Arc<PlanRegistry>,
+    specs: Vec<TenantSpec>,
+    cfg: DriftConfig,
+) -> (Sender<CostObs>, thread::JoinHandle<Vec<ReplanEvent>>) {
+    let (tx, rx) = channel::<CostObs>();
+    let handle = thread::spawn(move || {
+        let mut model = DriftModel::new(specs, cfg);
+        let mut events = Vec::new();
+        while let Ok(obs) = rx.recv() {
+            if let Some((tenant, plan, max_drift)) = model.observe(obs) {
+                let epoch = registry.publish(tenant, plan);
+                events.push(ReplanEvent { tenant, epoch, max_drift });
+            }
+        }
+        events
+    });
+    (tx, handle)
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    /// 3 tasks, strongly asymmetric columns: switching into task 2 is
+    /// modeled 4x the cost of switching into task 0.
+    fn spec(tenant: u32) -> TenantSpec {
+        TenantSpec {
+            tenant,
+            tasks: vec![0, 1, 2],
+            cost: vec![
+                vec![0.0, 2.0, 4.0],
+                vec![1.0, 0.0, 4.0],
+                vec![1.0, 2.0, 0.0],
+            ],
+            precedence: vec![],
+            conditional: vec![],
+        }
+    }
+
+    fn cfg() -> DriftConfig {
+        // alpha 1.0: the EWMA is the last sample — deterministic tests
+        DriftConfig { threshold: 0.5, min_samples: 2, alpha: 1.0 }
+    }
+
+    fn feed(
+        model: &mut DriftModel,
+        tenant: u32,
+        costs: &[f64],
+        rounds: usize,
+    ) -> Option<(u32, ServePlan, f64)> {
+        let mut fired = None;
+        for _ in 0..rounds {
+            for (task, &secs) in costs.iter().enumerate() {
+                if let Some(hit) =
+                    model.observe(CostObs { tenant, task, secs })
+                {
+                    fired = Some(hit);
+                }
+            }
+        }
+        fired
+    }
+
+    #[test]
+    fn matching_shape_never_triggers() {
+        let mut m = DriftModel::new(vec![spec(0)], cfg());
+        // observations proportional to the predicted column means
+        // (1.0, 2.0, 4.0): same shape, scaled 3x — a uniform slowdown
+        // that reordering cannot help must not trigger
+        assert!(feed(&mut m, 0, &[3.0, 6.0, 12.0], 8).is_none());
+    }
+
+    #[test]
+    fn quiet_below_min_samples() {
+        let mut m = DriftModel::new(
+            vec![spec(0)],
+            DriftConfig { min_samples: 50, ..cfg() },
+        );
+        // wildly drifted, but not enough evidence yet
+        assert!(feed(&mut m, 0, &[9.0, 0.1, 0.1], 20).is_none());
+    }
+
+    #[test]
+    fn inverted_costs_trigger_and_resolve_to_a_new_order() {
+        let mut m = DriftModel::new(vec![spec(0)], cfg());
+        // the model says task 2 is the expensive switch; reality says
+        // task 0 is — shape fully inverted
+        let (tenant, plan, max_drift) = feed(&mut m, 0, &[4.0, 2.0, 1.0], 4)
+            .expect("inverted shape must trigger");
+        assert_eq!(tenant, 0);
+        assert!(max_drift > 0.5, "drift {max_drift}");
+        let mut got = plan.order.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2], "plan must stay a permutation");
+        // after the publish the rescaled matrix IS the model: the same
+        // observations must now be on-shape and quiet
+        assert!(
+            feed(&mut m, 0, &[4.0, 2.0, 1.0], 8).is_none(),
+            "replanner must not republish without fresh drift"
+        );
+    }
+
+    #[test]
+    fn observations_route_by_tenant_and_foreign_tasks_are_ignored() {
+        let two = TenantSpec { tenant: 1, tasks: vec![0, 1], ..spec(1) };
+        let mut m = DriftModel::new(vec![spec(0), two], cfg());
+        // tenant 7 is unknown; task 9 is nobody's — both are no-ops
+        assert!(m.observe(CostObs { tenant: 7, task: 0, secs: 9.0 }).is_none());
+        assert!(m.observe(CostObs { tenant: 0, task: 9, secs: 9.0 }).is_none());
+        // tenant 1 never owns task 2: its observation is dropped, so
+        // tenant 1 cannot reach min_samples on a foreign task
+        assert!(m.observe(CostObs { tenant: 1, task: 2, secs: 9.0 }).is_none());
+    }
+
+    #[test]
+    fn singleton_tenants_never_replan() {
+        let one = TenantSpec { tasks: vec![1], ..spec(0) };
+        let mut m = DriftModel::new(vec![one], cfg());
+        for _ in 0..20 {
+            assert!(m
+                .observe(CostObs { tenant: 0, task: 1, secs: 99.0 })
+                .is_none());
+        }
+    }
+
+    #[test]
+    fn spawned_replanner_publishes_epochs_to_the_registry() {
+        let registry = Arc::new(PlanRegistry::new(vec![
+            ServePlan::unconditional(vec![0, 1, 2]),
+        ]));
+        let (tx, handle) =
+            spawn_replanner(Arc::clone(&registry), vec![spec(0)], cfg());
+        for _ in 0..4 {
+            for (task, secs) in [(0, 4.0), (1, 2.0), (2, 1.0)] {
+                tx.send(CostObs { tenant: 0, task, secs }).unwrap();
+            }
+        }
+        drop(tx); // last sender gone: the replanner drains and reports
+        let events = handle.join().expect("replanner thread panicked");
+        assert_eq!(events.len(), 1, "one confirmed drift, one publish");
+        assert_eq!(events[0].tenant, 0);
+        assert_eq!(events[0].epoch, 1);
+        assert!(events[0].max_drift > 0.5);
+        let current = registry.current(0);
+        assert_eq!(current.epoch, 1);
+        let mut got = current.plan.order.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+}

@@ -18,11 +18,12 @@ use crate::device::Cost;
 use crate::model::Tensor;
 use crate::runtime::Backend;
 use crate::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use crate::sync::thread;
+use crate::sync::{thread, Arc};
 use crate::util::stats;
 
 use super::audit::FeedLedger;
 use super::executor::BlockExecutor;
+use super::registry::PlanVersion;
 use super::wire::QosClass;
 
 /// Ordering + runtime-dependency plan for the task set.
@@ -56,6 +57,17 @@ pub struct Frame {
     /// shed as `dropped_stale` before any downstream cost. `None` =
     /// no deadline.
     pub deadline: Option<Instant>,
+    /// Plan-routing tenant (`coordinator::wire` decodes it off the
+    /// network; in-process sources default to 0). The registry maps it
+    /// to a [`ServePlan`] at admission.
+    pub tenant: u32,
+    /// The plan version this frame was admitted under — pinned at
+    /// dispatch (`WsDispatch::offer`) by cloning the tenant's current
+    /// `Arc<PlanVersion>` into the frame, so an epoch hot-swap cannot
+    /// change the plan of a frame already in flight. `None` on paths
+    /// that never touch a registry (the single-executor loop, the
+    /// round-robin baseline).
+    pub version: Option<Arc<PlanVersion>>,
 }
 
 impl Frame {
@@ -68,6 +80,8 @@ impl Frame {
             enqueued: Instant::now(),
             qos: QosClass::Realtime,
             deadline: None,
+            tenant: 0,
+            version: None,
         }
     }
 
@@ -78,7 +92,21 @@ impl Frame {
         qos: QosClass,
         deadline: Option<Instant>,
     ) -> Frame {
-        Frame { id, input, enqueued: Instant::now(), qos, deadline }
+        Frame {
+            id,
+            input,
+            enqueued: Instant::now(),
+            qos,
+            deadline,
+            tenant: 0,
+            version: None,
+        }
+    }
+
+    /// Same frame, routed to `tenant`'s plan.
+    pub fn with_tenant(mut self, tenant: u32) -> Frame {
+        self.tenant = tenant;
+        self
     }
 
     /// Has the client deadline passed as of `now`? (`false` when the
@@ -92,6 +120,12 @@ impl Frame {
 #[derive(Debug, Clone)]
 pub struct FrameResult {
     pub id: u64,
+    /// Tenant whose plan served this frame (0 on single-tenant paths).
+    pub tenant: u32,
+    /// Plan epoch the frame was admitted under (0 on paths with no
+    /// registry). The hot-swap property test keys its per-epoch
+    /// baselines off this field.
+    pub epoch: u64,
     /// Predicted class per task; None = skipped by a conditional.
     pub predictions: Vec<Option<usize>>,
     pub sim_cost: Cost,
@@ -178,6 +212,21 @@ pub fn process_frame<B: Backend>(
     plan: &ServePlan,
     frame: Frame,
 ) -> Result<(FrameResult, usize)> {
+    process_frame_observed(exec, plan, frame, None)
+}
+
+/// [`process_frame`] with an optional per-task cost observer: `obs` is
+/// called `(task, simulated_seconds)` after each executed task — the
+/// signal the cost-drift replanner (`coordinator::replan`) accumulates.
+/// Simulated device seconds, not host wall time, so the observations
+/// are deterministic and comparable to the `Device` cost model the
+/// plans were compiled from. `None` skips all observation bookkeeping.
+pub fn process_frame_observed<B: Backend>(
+    exec: &mut BlockExecutor<B>,
+    plan: &ServePlan,
+    frame: Frame,
+    mut obs: Option<&mut dyn FnMut(usize, f64)>,
+) -> Result<(FrameResult, usize)> {
     let started = Instant::now();
     let queue_wait = started.duration_since(frame.enqueued).as_secs_f64();
     let n = exec.graph.n_tasks;
@@ -195,12 +244,17 @@ pub fn process_frame<B: Backend>(
             continue;
         }
         let (pred, c) = exec.run_task(frame.id, t, &frame.input)?;
+        if let Some(f) = obs.as_deref_mut() {
+            f(t, c.time());
+        }
         preds[t] = Some(pred);
         cost.add(c);
     }
     Ok((
         FrameResult {
             id: frame.id,
+            tenant: frame.tenant,
+            epoch: frame.version.as_ref().map_or(0, |v| v.epoch),
             predictions: preds,
             sim_cost: cost,
             wall_latency_s: frame.enqueued.elapsed().as_secs_f64(),

@@ -37,7 +37,7 @@
 //! preserved inside every shard (a frame's whole task round runs on one
 //! executor); only cross-frame weight residency is per-shard state.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -47,15 +47,18 @@ use crate::memory::tier::{TierConfig, TierCounters};
 use crate::model::Tensor;
 use crate::runtime::Backend;
 use crate::sync::atomic::{AtomicIsize, AtomicUsize, Ordering};
-use crate::sync::mpsc::{channel, sync_channel, TrySendError};
+use crate::sync::mpsc::{channel, sync_channel, Sender, TrySendError};
 use crate::sync::{lock_unpoisoned, thread, wait_unpoisoned, Arc, Condvar, Mutex};
 
 use super::audit::{FeedLedger, QueueLedger};
 
 use super::executor::BlockExecutor;
 use super::ingest::{run_ingest, IngestReport, Source};
+use super::registry::{EpochOutcome, EpochRow, PlanRegistry, PlanVersion};
+use super::replan::CostObs;
 use super::server::{
-    build_report, process_frame, Frame, FrameResult, ServePlan, ServeReport,
+    build_report, process_frame, process_frame_observed, Frame, FrameResult,
+    ServePlan, ServeReport,
 };
 
 /// Knobs for a sharded serve.
@@ -203,6 +206,11 @@ pub struct ShardReport {
     /// Two-tier weight-memory counters summed over every shard —
     /// `Some` iff the serve ran with [`ShardOpts::tier`] enabled.
     pub tier: Option<TierCounters>,
+    /// Plan-epoch ledger rows from the [`PlanRegistry`] the serve ran
+    /// against: one row per (tenant, epoch) with its admission and
+    /// retirement counts. Empty on the round-robin baseline, which has
+    /// no registry.
+    pub epochs: Vec<EpochRow>,
 }
 
 impl ShardReport {
@@ -239,6 +247,44 @@ impl ShardReport {
         for (s, e) in &self.shard_errors {
             let served = self.frames_per_shard.get(*s).copied().unwrap_or(0);
             t.push_str(&format!("  {s:>5}  {served:>6}  {e}\n"));
+        }
+        Some(t)
+    }
+
+    /// Frames served per tenant, derived from the per-frame results:
+    /// `(tenant, frames)` sorted by tenant id. Single-tenant serves
+    /// report one row for tenant 0 — the field is threaded even there,
+    /// so the admission table can always break down by tenant.
+    pub fn frames_per_tenant(&self) -> Vec<(u32, usize)> {
+        let mut map: BTreeMap<u32, usize> = BTreeMap::new();
+        for r in &self.results {
+            *map.entry(r.tenant).or_insert(0) += 1;
+        }
+        map.into_iter().collect()
+    }
+
+    /// Render the plan-epoch ledger as a table for the CLI `serve`
+    /// output, or `None` when the serve ran without a registry (the
+    /// round-robin baseline). One row per (tenant, epoch); a balanced
+    /// row has `admitted == completed + failed + drained`.
+    pub fn epoch_table(&self) -> Option<String> {
+        if self.epochs.is_empty() {
+            return None;
+        }
+        let mut t = String::from(
+            "plan epochs:\n  tenant  epoch  admitted  completed  failed  drained  live\n",
+        );
+        for e in &self.epochs {
+            t.push_str(&format!(
+                "  {:>6}  {:>5}  {:>8}  {:>9}  {:>6}  {:>7}  {}\n",
+                e.tenant,
+                e.epoch,
+                e.admitted,
+                e.completed,
+                e.failed,
+                e.drained,
+                if e.live { "yes" } else { "no" },
+            ));
         }
         Some(t)
     }
@@ -376,6 +422,110 @@ where
         })?;
     let ingest = ingest
         .ok_or_else(|| anyhow!("ingest feeder returned no report"))?;
+    Ok((report, ingest))
+}
+
+// ------------------------------------------------- multi-tenant serving
+
+/// Tenant-routed serving over a shared shard fleet: `frames` is
+/// `(id, tenant, input)`; each frame is pinned at admission to its
+/// tenant's current plan version in `registry` and served on that exact
+/// plan even if a new epoch is published mid-stream. `obs` optionally
+/// streams per-task simulated service times to a cost-drift replanner
+/// (`coordinator::replan::spawn_replanner`).
+///
+/// Registry routing runs on the work-stealing scheduler only — the
+/// round-robin baseline deliberately keeps its pre-registry shape.
+pub fn serve_sharded_registry<B, F>(
+    make_executor: F,
+    n_shards: usize,
+    registry: Arc<PlanRegistry>,
+    frames: Vec<(u64, u32, Tensor)>,
+    opts: &ShardOpts,
+    obs: Option<Sender<CostObs>>,
+) -> Result<ShardReport>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    let pace = opts.pace;
+    serve_sharded_registry_feed(
+        make_executor,
+        n_shards,
+        registry,
+        opts,
+        obs,
+        |d| {
+            let mut dropped = 0usize;
+            for (id, tenant, input) in frames {
+                if !d.offer(Frame::new(id, input).with_tenant(tenant)) {
+                    dropped += 1;
+                }
+                if let Some(p) = pace {
+                    thread::sleep(p);
+                }
+            }
+            (dropped, None)
+        },
+    )
+    .map(|(r, _)| r)
+}
+
+/// [`serve_sharded_registry`] with a caller-supplied feeder — the hook
+/// the hot-swap tests use to publish a new plan epoch at a
+/// deterministic point mid-stream (offer some frames, `publish`, offer
+/// the rest) while the shards serve concurrently.
+pub fn serve_sharded_registry_feed<B, F, Feed>(
+    make_executor: F,
+    n_shards: usize,
+    registry: Arc<PlanRegistry>,
+    opts: &ShardOpts,
+    obs: Option<Sender<CostObs>>,
+    feed: Feed,
+) -> Result<(ShardReport, Option<IngestReport>)>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+    Feed: FnOnce(&WsDispatch) -> (usize, Option<IngestReport>),
+{
+    if !opts.steal {
+        return Err(anyhow!(
+            "tenant-routed serving runs on the work-stealing scheduler; \
+             drop --round-robin to use --tenants"
+        ));
+    }
+    serve_registry_core(make_executor, n_shards, registry, opts, obs, feed)
+}
+
+/// Multi-producer ingest in front of the registry scheduler: sources
+/// carry their tenant tag ([`Source::with_tenant`]) and every produced
+/// frame is pinned at admission like the single-producer path.
+pub fn serve_sharded_sources_registry<B, F>(
+    make_executor: F,
+    n_shards: usize,
+    registry: Arc<PlanRegistry>,
+    sources: Vec<Source>,
+    producers: usize,
+    opts: &ShardOpts,
+    obs: Option<Sender<CostObs>>,
+) -> Result<(ShardReport, IngestReport)>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+{
+    if !opts.steal {
+        return Err(anyhow!(
+            "multi-producer ingest fronts the work-stealing scheduler; \
+             drop --round-robin to use --producers"
+        ));
+    }
+    let (report, ingest) =
+        serve_registry_core(make_executor, n_shards, registry, opts, obs, |d| {
+            let ingest = run_ingest(sources, producers, &|f| d.offer(f));
+            (ingest.dropped(), Some(ingest))
+        })?;
+    let ingest =
+        ingest.ok_or_else(|| anyhow!("ingest feeder returned no report"))?;
     Ok((report, ingest))
 }
 
@@ -527,6 +677,13 @@ impl StealQueue {
     /// injector. Returns false (frame dropped) only when the injector is
     /// full — there is no per-shard overflow, so a slow shard cannot
     /// strand frames the others could serve.
+    ///
+    /// Plan-epoch admission is booked HERE, inside the lock's accepting
+    /// branches, before the frame becomes poppable: were it booked after
+    /// `push` returned, a fast worker could pop and complete the frame
+    /// before its admission landed, and the epoch ledger would observe a
+    /// retirement with no matching admission. Frames with no pinned
+    /// version (direct queue tests, loom models) book nothing.
     fn push(
         &self,
         frame: Frame,
@@ -538,6 +695,9 @@ impl StealQueue {
         if let Some(p) = preferred {
             if p < st.locals.len() && !st.dead[p] && st.locals[p].len() < local_depth
             {
+                if let Some(v) = frame.version.as_ref() {
+                    v.note_admitted();
+                }
                 st.locals[p].push_back(frame);
                 #[cfg(debug_assertions)]
                 {
@@ -550,6 +710,9 @@ impl StealQueue {
             }
         }
         if st.global.len() < queue_depth {
+            if let Some(v) = frame.version.as_ref() {
+                v.note_admitted();
+            }
             st.global.push_back(frame);
             #[cfg(debug_assertions)]
             {
@@ -689,11 +852,20 @@ impl StealQueue {
     /// must be served, failed, or drained — checked in debug builds.
     fn drain_remaining(&self) -> usize {
         let mut st = lock_unpoisoned(&self.st);
-        let mut n = st.global.len();
-        st.global.clear();
+        let mut n = 0usize;
+        for f in st.global.drain(..) {
+            if let Some(v) = f.version.as_ref() {
+                v.note_outcome(EpochOutcome::Drained);
+            }
+            n += 1;
+        }
         for l in st.locals.iter_mut() {
-            n += l.len();
-            l.clear();
+            for f in l.drain(..) {
+                if let Some(v) = f.version.as_ref() {
+                    v.note_outcome(EpochOutcome::Drained);
+                }
+                n += 1;
+            }
         }
         #[cfg(debug_assertions)]
         {
@@ -768,13 +940,19 @@ pub struct WsDispatch {
     boards: Vec<Arc<ResidencyBoard>>,
     signals: Vec<Arc<PrefetchSignal>>,
     needed: Vec<Option<usize>>,
+    registry: Arc<PlanRegistry>,
     n: usize,
     queue_depth: usize,
     local_depth: usize,
 }
 
 impl WsDispatch {
-    pub fn offer(&self, frame: Frame) -> bool {
+    pub fn offer(&self, mut frame: Frame) -> bool {
+        // pin the tenant's CURRENT plan version at admission time: the
+        // frame will be served on this exact version even if a newer
+        // epoch is published while it queues (the hot-swap contract —
+        // in-flight frames finish on the plan they were admitted under)
+        frame.version = Some(self.registry.current(frame.tenant));
         // residency-aware dispatch: a frame sticks to its tagged shard
         // only while that shard is warm and has deque room; otherwise it
         // goes to the injector where any idle shard takes it
@@ -898,17 +1076,48 @@ where
     Ok(report)
 }
 
+/// Legacy single-plan entry into the registry core: wraps `plan` into a
+/// one-tenant [`PlanRegistry`] at epoch 0 with no replanner. Every
+/// pre-registry caller routes through here, which is exactly what the
+/// single-tenant parity pin (`tests/multi_tenant.rs`) locks down.
+pub(crate) fn serve_work_stealing_core<B, F, Feed>(
+    make_executor: F,
+    n_shards: usize,
+    plan: &ServePlan,
+    opts: &ShardOpts,
+    feed: Feed,
+) -> Result<(ShardReport, Option<IngestReport>)>
+where
+    B: Backend + Send + 'static,
+    F: FnMut(usize) -> Result<BlockExecutor<B>>,
+    Feed: FnOnce(&WsDispatch) -> (usize, Option<IngestReport>),
+{
+    let registry = Arc::new(PlanRegistry::single(plan.clone()));
+    serve_registry_core(make_executor, n_shards, registry, opts, None, feed)
+}
+
 /// The shared-injector work-stealing scheduler with residency-aware
-/// dispatch and adaptive cross-frame micro-batching. Generic over the
+/// dispatch and adaptive cross-frame micro-batching, serving plans out
+/// of a versioned multi-tenant [`PlanRegistry`]. Generic over the
 /// feeder: it spawns the shard workers, hands the feeder a [`WsDispatch`]
 /// to offer frames through, and aggregates once the feeder returns its
 /// drop count (plus the ingest report, when the feeder is the
 /// multi-producer tier).
-pub(crate) fn serve_work_stealing_core<B, F, Feed>(
+///
+/// Every admitted frame is pinned to its tenant's current
+/// [`PlanVersion`] at `offer` time and served on that exact plan; a
+/// [`PlanRegistry::publish`] concurrent with the serve redirects only
+/// frames admitted after it (epoch-based hot-swap — no drain, no
+/// pause). `obs` carries per-task simulated service times to the
+/// cost-drift replanner (`coordinator::replan`); the batched path skips
+/// observation (batched rounds amortize block loads across frames, so
+/// per-frame task costs are not individually attributable).
+pub(crate) fn serve_registry_core<B, F, Feed>(
     mut make_executor: F,
     n_shards: usize,
-    plan: &ServePlan,
+    registry: Arc<PlanRegistry>,
     opts: &ShardOpts,
+    obs: Option<Sender<CostObs>>,
     feed: Feed,
 ) -> Result<(ShardReport, Option<IngestReport>)>
 where
@@ -925,16 +1134,26 @@ where
     }
     // a shard is "warm" when the blocks every task in the round shares
     // (the stable trunk) are resident; branch segments swap groups
-    // within a round and are excluded from the test
+    // within a round and are excluded from the test. Multi-tenant: the
+    // union of every tenant's current order must agree on the segment's
+    // group, because any tenant's frames can land on any shard — this
+    // degenerates to the old single-plan rule when there is one tenant.
+    // The vector is computed against epoch-0 plans and deliberately NOT
+    // recomputed on a swap: it is a routing preference, and a stale
+    // preference only costs warmth, never correctness (the residency
+    // hints survive the swap; the pinned plan decides what actually runs)
     // lint:allow(panic) — `n = n_shards.max(1)` above, so the loop
     // pushed at least one executor
     let graph = &executors[0].graph;
     let nseg = graph.n_segments();
-    let needed: Vec<Option<usize>> = match plan.order.first() {
+    let all_tasks: Vec<usize> = (0..registry.n_tenants())
+        .flat_map(|t| registry.current(t as u32).plan.order.clone())
+        .collect();
+    let needed: Vec<Option<usize>> = match all_tasks.first() {
         Some(&t0) => (0..nseg)
             .map(|s| {
                 let g0 = graph.group_of(s, t0);
-                plan.order
+                all_tasks
                     .iter()
                     .all(|&t| graph.group_of(s, t) == g0)
                     .then_some(g0)
@@ -955,7 +1174,8 @@ where
         let queue = Arc::clone(&queue);
         let board = Arc::clone(&boards[s]);
         let signal = Arc::clone(&signals[s]);
-        let plan = plan.clone();
+        let registry = Arc::clone(&registry);
+        let obs = obs.clone();
         let res_tx = res_tx.clone();
         let handicap = opts.handicap;
         let tier_cfg = opts.tier;
@@ -969,7 +1189,7 @@ where
             } else {
                 BatchPolicy::fixed(batch)
             };
-            while let Some((popped, backlog)) =
+            'serve: while let Some((popped, backlog)) =
                 queue.pop_batch(s, policy.next())
             {
                 // drain the prefetch mailbox and fold it into the tier's
@@ -987,69 +1207,134 @@ where
                     }
                 }
                 let m = popped.len();
-                let step: Result<()> = (|| {
-                    if m == 1 {
-                        let Some(frame) = popped.into_iter().next() else {
-                            // pop_batch never returns an empty batch; if
-                            // it ever did, treat it as a served no-op
-                            // rather than panicking the shard
-                            return Ok(());
-                        };
-                        let (r, sk) = process_frame(&mut ex, &plan, frame)?;
-                        out.results.push(r);
-                        out.tasks_skipped += sk;
-                    } else {
-                        let ids: Vec<u64> =
-                            popped.iter().map(|f| f.id).collect();
-                        let enq: Vec<Instant> =
-                            popped.iter().map(|f| f.enqueued).collect();
-                        let inputs: Vec<&Tensor> =
-                            popped.iter().map(|f| &f.input).collect();
-                        let started = Instant::now();
-                        let round = ex.run_round_batched(
-                            &ids,
-                            &inputs,
-                            &plan.order,
-                            &plan.conditional,
-                        )?;
-                        for i in 0..m {
-                            out.results.push(FrameResult {
-                                id: ids[i],
-                                predictions: round.predictions[i].clone(),
-                                sim_cost: round.costs[i],
-                                wall_latency_s: enq[i]
-                                    .elapsed()
-                                    .as_secs_f64(),
-                                queue_wait_s: started
-                                    .duration_since(enq[i])
-                                    .as_secs_f64(),
-                            });
+                // group the pop by pinned (tenant, epoch): frames from
+                // different plan versions cannot share a batched round,
+                // and each frame's outcome must retire on the exact
+                // version it was admitted under. A frame with no pinned
+                // version (direct queue pushes in tests) is admitted on
+                // its tenant's current version here, so the ledger stays
+                // balanced on every path.
+                let mut groups: Vec<(Arc<PlanVersion>, Vec<Frame>)> =
+                    Vec::new();
+                for mut frame in popped {
+                    let v = match frame.version.clone() {
+                        Some(v) => v,
+                        None => {
+                            let v = registry.current(frame.tenant);
+                            v.note_admitted();
+                            frame.version = Some(Arc::clone(&v));
+                            v
                         }
-                        out.tasks_skipped += round.tasks_skipped;
-                    }
-                    Ok(())
-                })();
-                match step {
-                    Ok(()) => {
-                        queue.note_served(m);
-                        board.publish(&ex.resident_snapshot());
-                        out.batch_hist[m - 1] += 1;
-                        policy.observe(
-                            m,
-                            backlog,
-                            served_at.elapsed().as_secs_f64(),
-                        );
-                    }
-                    Err(e) => {
-                        // this shard is broken: surface the error, give
-                        // its queued frames back, let the others serve
-                        queue.note_failed(m);
-                        out.error = Some(format!("{e:#}"));
-                        out.failed += m;
-                        queue.mark_dead(s);
-                        break;
+                    };
+                    match groups.iter_mut().find(|(gv, _)| {
+                        gv.tenant == v.tenant && gv.epoch == v.epoch
+                    }) {
+                        Some((_, fs)) => fs.push(frame),
+                        None => groups.push((v, vec![frame])),
                     }
                 }
+                let mut groups = groups.into_iter();
+                while let Some((v, gframes)) = groups.next() {
+                    let k = gframes.len();
+                    let step: Result<()> = (|| {
+                        if k == 1 {
+                            let Some(frame) = gframes.into_iter().next()
+                            else {
+                                // groups are built non-empty; if one ever
+                                // were not, treat it as a served no-op
+                                // rather than panicking the shard
+                                return Ok(());
+                            };
+                            let tenant = frame.tenant;
+                            let mut sink = obs.as_ref().map(|tx| {
+                                let tx = tx.clone();
+                                move |task: usize, secs: f64| {
+                                    let _ = tx.send(CostObs {
+                                        tenant,
+                                        task,
+                                        secs,
+                                    });
+                                }
+                            });
+                            let (r, sk) = process_frame_observed(
+                                &mut ex,
+                                &v.plan,
+                                frame,
+                                sink.as_mut()
+                                    .map(|f| f as &mut dyn FnMut(usize, f64)),
+                            )?;
+                            out.results.push(r);
+                            out.tasks_skipped += sk;
+                        } else {
+                            let ids: Vec<u64> =
+                                gframes.iter().map(|f| f.id).collect();
+                            let tenants: Vec<u32> =
+                                gframes.iter().map(|f| f.tenant).collect();
+                            let enq: Vec<Instant> =
+                                gframes.iter().map(|f| f.enqueued).collect();
+                            let inputs: Vec<&Tensor> =
+                                gframes.iter().map(|f| &f.input).collect();
+                            let started = Instant::now();
+                            let round = ex.run_round_batched(
+                                &ids,
+                                &inputs,
+                                &v.plan.order,
+                                &v.plan.conditional,
+                            )?;
+                            for i in 0..k {
+                                out.results.push(FrameResult {
+                                    id: ids[i],
+                                    tenant: tenants[i],
+                                    epoch: v.epoch,
+                                    predictions: round.predictions[i].clone(),
+                                    sim_cost: round.costs[i],
+                                    wall_latency_s: enq[i]
+                                        .elapsed()
+                                        .as_secs_f64(),
+                                    queue_wait_s: started
+                                        .duration_since(enq[i])
+                                        .as_secs_f64(),
+                                });
+                            }
+                            out.tasks_skipped += round.tasks_skipped;
+                        }
+                        Ok(())
+                    })();
+                    match step {
+                        Ok(()) => {
+                            for _ in 0..k {
+                                v.note_outcome(EpochOutcome::Completed);
+                            }
+                            queue.note_served(k);
+                        }
+                        Err(e) => {
+                            // this shard is broken: surface the error,
+                            // account every popped-but-unserved frame —
+                            // this group and every group not yet run —
+                            // as failed on its pinned version, give the
+                            // queued frames back, let the others serve
+                            queue.note_failed(k);
+                            for _ in 0..k {
+                                v.note_outcome(EpochOutcome::Failed);
+                            }
+                            out.error = Some(format!("{e:#}"));
+                            out.failed += k;
+                            for (rv, rframes) in groups.by_ref() {
+                                let rk = rframes.len();
+                                queue.note_failed(rk);
+                                for _ in 0..rk {
+                                    rv.note_outcome(EpochOutcome::Failed);
+                                }
+                                out.failed += rk;
+                            }
+                            queue.mark_dead(s);
+                            break 'serve;
+                        }
+                    }
+                }
+                board.publish(&ex.resident_snapshot());
+                out.batch_hist[m - 1] += 1;
+                policy.observe(m, backlog, served_at.elapsed().as_secs_f64());
             }
             // settle in-flight prefetches and close the custody ledger
             // (debug builds panic on issued != completed + cancelled)
@@ -1061,6 +1346,9 @@ where
         });
     }
     drop(res_tx);
+    // the workers hold the only remaining obs senders: when the last
+    // worker exits, the replanner's receive loop ends and it can report
+    drop(obs);
 
     let (queue_depth, local_depth) = opts.effective_depths();
     let dispatch = WsDispatch {
@@ -1068,6 +1356,7 @@ where
         boards,
         signals,
         needed,
+        registry: Arc::clone(&registry),
         n,
         queue_depth,
         local_depth,
@@ -1081,10 +1370,14 @@ where
     drop(closer); // normal path: close now, workers drain and report
 
     let report = collect_outcomes(n, res_rx, dropped, t0);
-    // if every worker died early, queued frames were never consumed
+    // if every worker died early, queued frames were never consumed —
+    // drain books each leftover as Drained on its pinned version, so the
+    // registry close-check below still balances in total failure
     let leftover = queue.drain_remaining();
+    registry.close_check();
     report.map(|mut r| {
         r.aggregate.dropped += leftover;
+        r.epochs = registry.epoch_report();
         (r, ingest)
     })
 }
@@ -1136,6 +1429,7 @@ fn collect_outcomes(
         results: all,
         aggregate,
         tier,
+        epochs: Vec::new(),
     })
 }
 
@@ -1848,6 +2142,67 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("work-stealing"));
+    }
+
+    /// Two tenants with different orders over one shared fleet: every
+    /// frame is served on its tenant's plan, the report breaks frames
+    /// down per tenant, and the plan-epoch ledger balances and renders.
+    /// The legacy single-plan path must also report its one epoch-0 row
+    /// — every work-stealing serve is a registry serve now.
+    #[test]
+    fn registry_serve_routes_tenants_and_books_epochs() {
+        let registry = Arc::new(PlanRegistry::new(vec![
+            ServePlan::unconditional(vec![0, 1, 2]),
+            ServePlan::unconditional(vec![2, 1, 0]),
+        ]));
+        let fr: Vec<(u64, u32, Tensor)> = frames(20)
+            .into_iter()
+            .map(|(id, x)| (id, (id % 2) as u32, x))
+            .collect();
+        let opts = ShardOpts {
+            queue_depth: 64,
+            batch: 3,
+            ..ShardOpts::default()
+        };
+        let report = serve_sharded_registry(
+            make_executor,
+            2,
+            Arc::clone(&registry),
+            fr,
+            &opts,
+            None,
+        )
+        .unwrap();
+        assert_eq!(report.aggregate.dropped, 0);
+        assert_eq!(report.aggregate.frames, 20);
+        assert_eq!(report.frames_per_tenant(), vec![(0, 10), (1, 10)]);
+        for r in &report.results {
+            assert_eq!(r.tenant, (r.id % 2) as u32);
+            assert_eq!(r.epoch, 0);
+        }
+        assert_eq!(report.epochs.len(), 2);
+        for e in &report.epochs {
+            assert_eq!(e.admitted, 10);
+            assert_eq!(e.completed, 10);
+            assert_eq!(e.failed + e.drained, 0);
+            assert!(e.live);
+        }
+        let table =
+            report.epoch_table().expect("registry serve renders epochs");
+        assert!(table.contains("plan epochs"));
+
+        let plan = ServePlan::unconditional(vec![0, 1, 2]);
+        let legacy = serve_sharded_opts(
+            make_executor,
+            2,
+            &plan,
+            frames(6),
+            &ShardOpts { queue_depth: 64, ..ShardOpts::default() },
+        )
+        .unwrap();
+        assert_eq!(legacy.epochs.len(), 1);
+        assert_eq!(legacy.epochs[0].admitted, 6);
+        assert_eq!(legacy.epochs[0].completed, 6);
     }
 
     // ---- BatchPolicy in isolation (the adaptive rule is pure state)

@@ -10,6 +10,7 @@
 //!                 [--steal] [--round-robin] [--steps-ind N] [--steps-re N]
 //!                 [--fast-tier-bytes N|max] [--prefetch on|off]
 //!                 [--listen ADDR] [--conns N] [--qos on|off]
+//!                 [--tenants N] [--replan on|off] [--drift-threshold X]
 //!   antler check  # verify backend + layer round-trip
 //!
 //! Every subcommand accepts `--backend reference|pjrt` (equivalent to
@@ -21,9 +22,12 @@ use anyhow::{anyhow, Result};
 
 use antler::bench;
 use antler::coordinator::{
-    pipeline, serve, serve_net, serve_sharded_opts, BlockExecutor, NetOpts,
-    ServePlan, ShardOpts,
+    pipeline, serve, serve_net, serve_net_registry, serve_sharded_opts,
+    serve_sharded_registry, serve_sharded_sources_registry, spawn_replanner,
+    BlockExecutor, DriftConfig, NetOpts, PlanRegistry, ServePlan, ShardOpts,
+    TenantSpec,
 };
+use antler::sync::Arc;
 use antler::data;
 use antler::device::Device;
 use antler::ordering::{solve_held_karp, OrderingProblem};
@@ -96,7 +100,12 @@ fn print_usage() {
          \x20                 --listen ADDR serves length-prefixed frames\n\
          \x20                 with tenant/QoS/deadline headers over TCP,\n\
          \x20                 --conns N caps accepted connections and\n\
-         \x20                 --qos on|off toggles class-aware admission)\n\
+         \x20                 --qos on|off toggles class-aware admission;\n\
+         \x20                 --tenants N compiles N per-tenant plans into a\n\
+         \x20                 versioned registry (frames route by tenant,\n\
+         \x20                 plans hot-swap by epoch), --replan on runs the\n\
+         \x20                 background cost-drift replanner and\n\
+         \x20                 --drift-threshold X sets its trigger)\n\
          \x20 check           verify backend + layer round-trip\n\
          \n\
          global: --backend reference|pjrt (or ANTLER_BACKEND)"
@@ -196,8 +205,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // framed TCP front-end (coordinator::net): frames arrive over up to
     // `--conns` connections carrying tenant/QoS/deadline headers
     let listen = args.get("listen");
-    let sharded =
-        listen.is_some() || shards > 1 || batch > 1 || adaptive || producers > 1;
+    // `--tenants N` compiles N per-tenant plans (round-robin task split
+    // through the same affinity/Held-Karp pipeline) into a versioned
+    // PlanRegistry; frames route by tenant and plans hot-swap by epoch.
+    // `--replan on` runs the background cost-drift replanner, which also
+    // forces the registry path at N=1 (the whole task set is one tenant).
+    let tenants = strict("tenants", 1)?.max(1);
+    let replan = cli::parse_switch("replan", args.get_or("replan", "off"))
+        .map_err(|e| anyhow!(e))?;
+    let drift_threshold: f64 = match args.get("drift-threshold") {
+        Some(v) => v.parse().map_err(|_| {
+            anyhow!("--drift-threshold wants a number, got {v:?}")
+        })?,
+        None => DriftConfig::default().threshold,
+    };
+    let multi = tenants > 1 || replan;
+    let sharded = listen.is_some()
+        || shards > 1
+        || batch > 1
+        || adaptive
+        || producers > 1
+        || multi;
     // refuse the incompatible combination BEFORE the expensive prepare:
     // sharded/batched serving needs Send executors, and the PJRT engine
     // is Rc-based (!Send)
@@ -228,6 +256,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
              round-robin baseline is frame-at-a-time (drop --round-robin)"
         ));
     }
+    if multi && !steal {
+        // serve_sharded_registry_feed re-checks this, but refuse before
+        // the expensive deployment prepare
+        return Err(anyhow!(
+            "tenant-routed serving runs on the work-stealing scheduler; \
+             drop --round-robin to use --tenants"
+        ));
+    }
     let (bundle, be) = bench::figures_train::deployment_bundle(which, args)?;
     let prep = &bundle.prep;
     let n = prep.ncls.len();
@@ -240,7 +276,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         vec![]
     };
-    let plan = ServePlan { order: prep.order.clone(), conditional };
+    let plan =
+        ServePlan { order: prep.order.clone(), conditional: conditional.clone() };
 
     // `--fast-tier-bytes N` turns on the two-tier weight memory
     // (`memory::tier`): each executor gets a bounded fast tier priced
@@ -313,6 +350,74 @@ fn cmd_serve(args: &Args) -> Result<()> {
             tier,
             ..ShardOpts::default()
         };
+        // --tenants / --replan: compile one plan per tenant through the
+        // same affinity/Held-Karp pipeline, seed the versioned registry
+        // at epoch 0, and (with --replan on) start the background
+        // cost-drift replanner that publishes new epochs mid-stream
+        let mut registry_ctx = if multi {
+            let plans: Vec<ServePlan> = pipeline::compile_tenant_plans(
+                prep,
+                &bundle.device,
+                tenants,
+                &[],
+                &[],
+            )
+            .into_iter()
+            .map(|mut p| {
+                // the CLI's conditional gates apply to whichever tenant
+                // owns both endpoints
+                p.conditional = conditional
+                    .iter()
+                    .copied()
+                    .filter(|&(a, b)| {
+                        p.order.contains(&a) && p.order.contains(&b)
+                    })
+                    .collect();
+                p
+            })
+            .collect();
+            for (t, p) in plans.iter().enumerate() {
+                println!("tenant {t}: plan order {:?}", p.order);
+            }
+            let registry = Arc::new(PlanRegistry::new(plans));
+            let (obs, replanner) = if replan {
+                let cost = antler::memory::cost_matrix(
+                    &bundle.device,
+                    &prep.arch,
+                    &prep.graph,
+                    &prep.ncls,
+                    false,
+                );
+                let specs: Vec<TenantSpec> =
+                    antler::taskgraph::tenant_task_split(n, tenants)
+                        .into_iter()
+                        .enumerate()
+                        .map(|(t, tasks)| TenantSpec {
+                            tenant: t as u32,
+                            tasks,
+                            cost: cost.clone(),
+                            precedence: vec![],
+                            conditional: vec![],
+                        })
+                        .collect();
+                let cfg = DriftConfig {
+                    threshold: drift_threshold,
+                    ..DriftConfig::default()
+                };
+                println!(
+                    "replanner on: drift threshold {:.2}, min samples {}",
+                    cfg.threshold, cfg.min_samples
+                );
+                let (tx, handle) =
+                    spawn_replanner(Arc::clone(&registry), specs, cfg);
+                (Some(tx), Some(handle))
+            } else {
+                (None, None)
+            };
+            Some((registry, obs, replanner))
+        } else {
+            None
+        };
         let sr = if let Some(addr) = listen {
             let conns = strict("conns", 1024)?;
             let qos = cli::parse_switch("qos", args.get_or("qos", "on"))
@@ -336,8 +441,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 qos,
                 ..NetOpts::default()
             };
-            let (sr, nr) =
-                serve_net(make, shards, &plan, listener, &net, &opts)?;
+            let (sr, nr) = match &mut registry_ctx {
+                Some((registry, obs, _)) => serve_net_registry(
+                    make,
+                    shards,
+                    Arc::clone(registry),
+                    listener,
+                    &net,
+                    &opts,
+                    obs.take(),
+                )?,
+                None => serve_net(make, shards, &plan, listener, &net, &opts)?,
+            };
             println!(
                 "network front-end: {} connection{} closed, offered {} \
                  delivered {} dropped {} ({} truncated)",
@@ -349,6 +464,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 nr.dropped_truncated()
             );
             print!("{}", nr.class_table());
+            print!("{}", nr.tenant_table());
             sr
         } else if producers > 1 {
             // ONE assignment convention for frame→producer fan-out:
@@ -359,9 +475,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let sources = antler::coordinator::ingest::split_round_robin(
                 frames, producers, "src",
             );
-            let (sr, ingest) = antler::coordinator::serve_sharded_sources(
-                make, shards, &plan, sources, producers, &opts,
-            )?;
+            let (sr, ingest) = match &mut registry_ctx {
+                Some((registry, obs, _)) => {
+                    // source i belongs to tenant i % N — the positional
+                    // rule again, one level up
+                    let sources: Vec<_> = sources
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, s)| s.with_tenant((i % tenants) as u32))
+                        .collect();
+                    serve_sharded_sources_registry(
+                        make,
+                        shards,
+                        Arc::clone(registry),
+                        sources,
+                        producers,
+                        &opts,
+                        obs.take(),
+                    )?
+                }
+                None => antler::coordinator::serve_sharded_sources(
+                    make, shards, &plan, sources, producers, &opts,
+                )?,
+            };
             println!("ingest over {} producers:", ingest.producers);
             for s in &ingest.sources {
                 println!(
@@ -377,8 +513,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             sr
         } else {
-            serve_sharded_opts(make, shards, &plan, frames, &opts)?
+            match &mut registry_ctx {
+                Some((registry, obs, _)) => {
+                    // frame i belongs to tenant i % N: the synthetic
+                    // stream interleaves tenants round-robin
+                    let tframes: Vec<_> = frames
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, (id, x))| (id, (i % tenants) as u32, x))
+                        .collect();
+                    serve_sharded_registry(
+                        make,
+                        shards,
+                        Arc::clone(registry),
+                        tframes,
+                        &opts,
+                        obs.take(),
+                    )?
+                }
+                None => serve_sharded_opts(make, shards, &plan, frames, &opts)?,
+            }
         };
+        // the replanner exits when the serve drops the last observation
+        // sender; its join returns every epoch it published
+        if let Some((_registry, obs, replanner)) = registry_ctx {
+            drop(obs);
+            if let Some(handle) = replanner {
+                let events = handle
+                    .join()
+                    .map_err(|_| anyhow!("replanner thread panicked"))?;
+                println!("replanner: {} replan(s) published", events.len());
+                for e in &events {
+                    println!(
+                        "  tenant {} -> epoch {} (max drift {:.2})",
+                        e.tenant, e.epoch, e.max_drift
+                    );
+                }
+            }
+            println!("frames per tenant: {:?}", sr.frames_per_tenant());
+            if let Some(t) = sr.epoch_table() {
+                print!("{t}");
+            }
+        }
         println!(
             "sharded over {} executors ({} busy): per-shard frames {:?}",
             sr.shards,

@@ -640,6 +640,30 @@ mod tests {
         t.close_check();
     }
 
+    /// A plan hot-swap changes the round sequence mid-serve. Residency
+    /// is keyed by block, not by plan, so blocks shared between the old
+    /// and the new plan stay warm across the swap and the custody
+    /// ledger balances at close. The registry swap path
+    /// (`coordinator::registry`) relies on exactly this: residency and
+    /// prefetch hints survive a swap — a stale preference costs warmth,
+    /// never correctness.
+    #[test]
+    fn residency_survives_a_plan_swap() {
+        let a = step(0, 0, 10, 2);
+        let b = step(1, 0, 10, 1);
+        let c = step(2, 0, 10, 1);
+        let mut t = tier(usize::MAX, true, EvictPolicy::Affinity);
+        // epoch 0's plan: rounds touch A B C
+        run_seq(&mut t, &[a, b, c], 1, 1e-3);
+        let loaded = t.counters.bytes_loaded;
+        // hot-swap: the new epoch's plan reorders to C A and drops B;
+        // the prefetch set changes, but old residents still hit
+        let misses = run_seq(&mut t, &[c, a], 0, 1e-3);
+        assert_eq!(misses, 0, "blocks stay warm across the swap");
+        assert_eq!(t.counters.bytes_loaded, loaded, "no reloads after swap");
+        t.close_check();
+    }
+
     /// Prefetches the forward never touched are settled and balanced at
     /// close (issued == completed + cancelled) — the custody invariant
     /// the audit ledger enforces.

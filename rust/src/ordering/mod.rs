@@ -119,6 +119,67 @@ impl OrderingProblem {
     }
 }
 
+/// Re-entrant compile entry point for per-tenant plans: restrict the
+/// full n×n switching-cost matrix to `tasks` (a subset of original task
+/// ids, any order), remap the constraints whose endpoints both fall
+/// inside the subset, solve the restricted instance with Held–Karp, and
+/// map the order back to original task ids. Constraints touching tasks
+/// outside the subset are vacuous for this tenant and are dropped.
+///
+/// Returns `None` when the subset is empty, repeats a task, names a
+/// task outside the matrix, or the restricted instance is infeasible
+/// (contradictory precedence) — the caller falls back to the subset's
+/// given order, mirroring `deployment_order`'s identity fallback.
+pub fn solve_subset(
+    cost: &[Vec<f64>],
+    tasks: &[usize],
+    precedence: &[(usize, usize)],
+    conditional: &[(usize, usize, f64)],
+) -> Option<Solution> {
+    if tasks.is_empty() {
+        return None;
+    }
+    // original task id -> position in the subset, usize::MAX = absent
+    let mut local = vec![usize::MAX; cost.len()];
+    for (i, &t) in tasks.iter().enumerate() {
+        if t >= cost.len() || local[t] != usize::MAX {
+            return None;
+        }
+        local[t] = i;
+    }
+    let sub_cost: Vec<Vec<f64>> = tasks
+        .iter()
+        .map(|&a| tasks.iter().map(|&b| cost[a][b]).collect())
+        .collect();
+    let sub_prec: Vec<(usize, usize)> = precedence
+        .iter()
+        .filter(|&&(a, b)| {
+            a < local.len()
+                && b < local.len()
+                && local[a] != usize::MAX
+                && local[b] != usize::MAX
+        })
+        .map(|&(a, b)| (local[a], local[b]))
+        .collect();
+    let sub_cond: Vec<(usize, usize, f64)> = conditional
+        .iter()
+        .filter(|&&(a, b, _)| {
+            a < local.len()
+                && b < local.len()
+                && local[a] != usize::MAX
+                && local[b] != usize::MAX
+        })
+        .map(|&(a, b, p)| (local[a], local[b], p))
+        .collect();
+    let problem = OrderingProblem::from_matrix(sub_cost)
+        .with_precedence(sub_prec)
+        .with_conditional(sub_cond);
+    solve_held_karp(&problem).map(|s| Solution {
+        order: s.order.iter().map(|&i| tasks[i]).collect(),
+        cost: s.cost,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +233,62 @@ mod tests {
         let m = p.prereq_masks();
         assert_eq!(m[2], 0b011);
         assert_eq!(m[0], 0);
+    }
+
+    #[test]
+    fn subset_of_everything_matches_the_full_solve() {
+        let p = toy();
+        let full = solve_held_karp(&p).unwrap();
+        let sub = solve_subset(&p.cost, &[0, 1, 2], &[], &[]).unwrap();
+        assert_eq!(sub.order, full.order);
+        assert_eq!(sub.cost, full.cost);
+    }
+
+    #[test]
+    fn subset_remaps_to_original_task_ids() {
+        // tasks {0, 2} of the toy matrix: 0->2 costs 4, 2->0 costs 4
+        // (symmetric), so both orders tie at cost 4 — but the returned
+        // ids must be original ids, not subset positions
+        let p = toy();
+        let sub = solve_subset(&p.cost, &[2, 0], &[], &[]).unwrap();
+        let mut ids = sub.order.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 2]);
+        assert_eq!(sub.cost, 4.0);
+    }
+
+    #[test]
+    fn subset_keeps_only_inside_constraints() {
+        // precedence (2, 0) binds inside {0, 2}; (1, 0) names task 1,
+        // outside the subset, and must be dropped rather than panicking
+        let p = toy();
+        let sub =
+            solve_subset(&p.cost, &[0, 2], &[(2, 0), (1, 0)], &[]).unwrap();
+        assert_eq!(sub.order, vec![2, 0]);
+        // conditional edges remap too: (0, 2, 0.5) halves the 0->2 edge
+        let sub =
+            solve_subset(&p.cost, &[0, 2], &[], &[(0, 2, 0.5)]).unwrap();
+        assert_eq!(sub.order, vec![0, 2]);
+        assert_eq!(sub.cost, 2.0);
+    }
+
+    #[test]
+    fn subset_rejects_bad_inputs() {
+        let p = toy();
+        assert!(solve_subset(&p.cost, &[], &[], &[]).is_none());
+        assert!(solve_subset(&p.cost, &[0, 0], &[], &[]).is_none());
+        assert!(solve_subset(&p.cost, &[0, 7], &[], &[]).is_none());
+        // contradictory precedence inside the subset is infeasible
+        assert!(
+            solve_subset(&p.cost, &[0, 1], &[(0, 1), (1, 0)], &[]).is_none()
+        );
+    }
+
+    #[test]
+    fn singleton_subset_is_trivially_ordered() {
+        let p = toy();
+        let sub = solve_subset(&p.cost, &[1], &[], &[]).unwrap();
+        assert_eq!(sub.order, vec![1]);
+        assert_eq!(sub.cost, 0.0);
     }
 }

@@ -8,3 +8,62 @@ pub mod select;
 
 pub use graph::{Block, TaskGraph};
 pub use partition::Partition;
+
+/// Deal `n_tasks` task ids across `n_tenants` round-robin: tenant `t`
+/// takes every task `i` with `i % n_tenants == t`. When there are more
+/// tenants than tasks, the surplus tenants wrap and take the FULL task
+/// set instead of an empty one — a tenant with nothing to serve is a
+/// configuration accident, not a useful plan. Every subset preserves
+/// ascending task order, so the identity-fallback plan for a subset is
+/// well-defined.
+pub fn tenant_task_split(n_tasks: usize, n_tenants: usize) -> Vec<Vec<usize>> {
+    let nt = n_tenants.max(1);
+    (0..nt)
+        .map(|t| {
+            let own: Vec<usize> =
+                (0..n_tasks).filter(|i| i % nt == t).collect();
+            if own.is_empty() {
+                (0..n_tasks).collect()
+            } else {
+                own
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tenant_task_split;
+
+    #[test]
+    fn split_partitions_tasks_round_robin() {
+        assert_eq!(
+            tenant_task_split(5, 2),
+            vec![vec![0, 2, 4], vec![1, 3]]
+        );
+        // one tenant owns everything — the single-tenant parity case
+        assert_eq!(tenant_task_split(3, 1), vec![vec![0, 1, 2]]);
+        // zero tenants is clamped to one
+        assert_eq!(tenant_task_split(2, 0), vec![vec![0, 1]]);
+    }
+
+    #[test]
+    fn surplus_tenants_take_the_full_set() {
+        let split = tenant_task_split(2, 4);
+        assert_eq!(split[0], vec![0]);
+        assert_eq!(split[1], vec![1]);
+        assert_eq!(split[2], vec![0, 1]);
+        assert_eq!(split[3], vec![0, 1]);
+    }
+
+    #[test]
+    fn split_covers_every_task_exactly_once_across_owners() {
+        for nt in 1..=4usize {
+            let split = tenant_task_split(7, nt);
+            let mut all: Vec<usize> =
+                split.iter().take(7.min(nt)).flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..7).collect::<Vec<_>>(), "nt={nt}");
+        }
+    }
+}

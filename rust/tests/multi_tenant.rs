@@ -1,0 +1,279 @@
+//! Multi-tenant plan registry acceptance gates (PR 10).
+//!
+//! * Frames route by tenant to that tenant's own compiled plan, and the
+//!   served predictions match a single-executor baseline running the
+//!   same per-tenant plans — routing changes *which* plan runs, never
+//!   *what* a plan computes.
+//! * A forced mid-stream [`PlanRegistry::publish`] hot-swap leaves the
+//!   plan-epoch ledger balanced: every admitted frame retires on the
+//!   exact epoch it was admitted under, old epochs drain to live = 0.
+//! * The single-tenant parity pin: `--tenants 1` with no replanning is
+//!   bitwise-identical to the pre-registry path (predictions and
+//!   conservation counts), because the legacy entry points now route
+//!   through a one-tenant registry.
+//! * The cost-drift replanner, fed simulated per-task costs from the
+//!   serve, publishes a new epoch when the device model's predictions
+//!   are deliberately skewed away from what execution observes.
+
+use antler::coordinator::{
+    process_frame, serve_sharded_opts, serve_sharded_registry,
+    serve_sharded_registry_feed, spawn_replanner, BlockExecutor, DriftConfig,
+    Frame, PlanRegistry, ServePlan, ShardOpts, TenantSpec,
+};
+use antler::data::dataset_by_name;
+use antler::device::Device;
+use antler::model::Tensor;
+use antler::runtime::{Backend, ReferenceBackend};
+use antler::sync::Arc;
+use antler::taskgraph::TaskGraph;
+use antler::trainer::GraphWeights;
+use antler::util::rng::Pcg32;
+
+/// Deterministic 4-task deployment on the reference backend: every
+/// executor built from the same seed serves identical predictions.
+fn make_executor(_s: usize) -> anyhow::Result<BlockExecutor<ReferenceBackend>> {
+    let be = ReferenceBackend::new();
+    let arch = be.arch("dnn4")?;
+    let graph = TaskGraph::shared(4, TaskGraph::default_bounds(4, 3));
+    let ncls = vec![2usize; 4];
+    let mut rng = Pcg32::seed(11);
+    let store = GraphWeights::init(&graph, &arch, &ncls, &mut rng);
+    Ok(BlockExecutor::new(
+        be,
+        Device::msp430(),
+        arch,
+        graph,
+        ncls,
+        store,
+    ))
+}
+
+fn input_frames(n: usize) -> Vec<(u64, Tensor)> {
+    let spec = dataset_by_name("hhar-s").unwrap();
+    let ds = spec.generate(&[128], 64);
+    (0..n as u64)
+        .map(|i| (i, ds.x.slice_batch(i as usize % ds.len(), 1)))
+        .collect()
+}
+
+#[test]
+fn tenants_route_to_their_own_plans_and_match_the_baseline() {
+    let plans = vec![
+        ServePlan::unconditional(vec![0, 2]),
+        ServePlan::unconditional(vec![3, 1]),
+    ];
+    let registry = Arc::new(PlanRegistry::new(plans.clone()));
+    let frames: Vec<(u64, u32, Tensor)> = input_frames(24)
+        .into_iter()
+        .enumerate()
+        .map(|(i, (id, x))| (id, (i % 2) as u32, x))
+        .collect();
+    let baseline_frames = frames.clone();
+
+    let sr = serve_sharded_registry(
+        make_executor,
+        2,
+        Arc::clone(&registry),
+        frames,
+        &ShardOpts::default(),
+        None,
+    )
+    .unwrap();
+    assert_eq!(sr.aggregate.frames, 24);
+    assert_eq!(sr.aggregate.dropped, 0);
+    assert_eq!(sr.frames_per_tenant(), vec![(0, 12), (1, 12)]);
+
+    // single-executor baseline: each frame processed under its own
+    // tenant's plan must predict identically (results are id-sorted)
+    let mut ex = make_executor(0).unwrap();
+    for (i, (id, tenant, x)) in baseline_frames.into_iter().enumerate() {
+        let (want, _) = process_frame(
+            &mut ex,
+            &plans[tenant as usize],
+            Frame::new(id, x).with_tenant(tenant),
+        )
+        .unwrap();
+        let got = &sr.results[i];
+        assert_eq!(got.id, id);
+        assert_eq!(got.tenant, tenant, "frame {id} routed to wrong tenant");
+        assert_eq!(
+            got.predictions, want.predictions,
+            "frame {id} diverged from its tenant's plan"
+        );
+        // a tenant's plan only serves its own tasks
+        for (t, p) in got.predictions.iter().enumerate() {
+            assert_eq!(
+                p.is_some(),
+                plans[tenant as usize].order.contains(&t),
+                "frame {id} task {t}"
+            );
+        }
+    }
+    registry.close_check();
+}
+
+#[test]
+fn mid_stream_swap_balances_the_epoch_ledger() {
+    let registry = Arc::new(PlanRegistry::single(ServePlan::unconditional(
+        vec![0, 1, 2, 3],
+    )));
+    let inputs = input_frames(20);
+    let reg2 = Arc::clone(&registry);
+    let (sr, _) = serve_sharded_registry_feed(
+        make_executor,
+        2,
+        Arc::clone(&registry),
+        &ShardOpts::default(),
+        None,
+        move |d| {
+            let mut dropped = 0usize;
+            for (id, x) in inputs {
+                // the forced swap, mid-stream, with frames in flight:
+                // frames 0..10 pinned epoch 0, 10..20 epoch 1
+                if id == 10 {
+                    let e = reg2
+                        .publish(0, ServePlan::unconditional(vec![3, 2, 1, 0]));
+                    assert_eq!(e, 1);
+                }
+                if !d.offer(Frame::new(id, x)) {
+                    dropped += 1;
+                }
+            }
+            (dropped, None)
+        },
+    )
+    .unwrap();
+
+    assert_eq!(sr.aggregate.frames, 20);
+    assert_eq!(sr.aggregate.dropped, 0);
+    // every frame retired on the epoch it was admitted under
+    for r in &sr.results {
+        assert_eq!(r.epoch, u64::from(r.id >= 10), "frame {}", r.id);
+    }
+    // the ledger balances per epoch: 10 admitted, 10 completed, and
+    // only the latest-published epoch is still live
+    assert_eq!(sr.epochs.len(), 2);
+    for row in &sr.epochs {
+        assert_eq!(row.tenant, 0);
+        assert_eq!(row.admitted, 10, "{row:?}");
+        assert_eq!(row.completed, 10, "{row:?}");
+        assert_eq!(row.failed, 0, "{row:?}");
+        assert_eq!(row.drained, 0, "{row:?}");
+        assert_eq!(row.live, row.epoch == 1, "{row:?}");
+    }
+    let table = sr.epoch_table().expect("registry serve renders a table");
+    assert!(table.contains("plan epochs"), "{table}");
+    registry.close_check();
+}
+
+#[test]
+fn single_tenant_registry_is_bitwise_identical_to_the_legacy_path() {
+    let plan = ServePlan::unconditional(vec![2, 0, 3, 1]);
+    let inputs = input_frames(16);
+
+    let legacy = serve_sharded_opts(
+        make_executor,
+        2,
+        &plan,
+        inputs.clone(),
+        &ShardOpts::default(),
+    )
+    .unwrap();
+
+    let registry = Arc::new(PlanRegistry::single(plan));
+    let tframes: Vec<(u64, u32, Tensor)> =
+        inputs.into_iter().map(|(id, x)| (id, 0u32, x)).collect();
+    let multi = serve_sharded_registry(
+        make_executor,
+        2,
+        Arc::clone(&registry),
+        tframes,
+        &ShardOpts::default(),
+        None,
+    )
+    .unwrap();
+
+    // conservation is identical...
+    assert_eq!(multi.aggregate.frames, legacy.aggregate.frames);
+    assert_eq!(multi.aggregate.dropped, legacy.aggregate.dropped);
+    assert_eq!(multi.aggregate.tasks_skipped, legacy.aggregate.tasks_skipped);
+    assert_eq!(multi.results.len(), legacy.results.len());
+    // ...and every frame's result is bitwise the same computation
+    for (a, b) in legacy.results.iter().zip(&multi.results) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.predictions, b.predictions, "frame {}", a.id);
+        assert_eq!(
+            a.sim_cost.time().to_bits(),
+            b.sim_cost.time().to_bits(),
+            "frame {} sim time",
+            a.id
+        );
+        assert_eq!(b.tenant, 0);
+        assert_eq!(b.epoch, 0);
+    }
+    // the one-tenant registry books exactly one balanced epoch row
+    assert_eq!(multi.epochs.len(), 1);
+    assert_eq!(multi.epochs[0].admitted, 16);
+    assert_eq!(multi.epochs[0].completed, 16);
+    registry.close_check();
+}
+
+#[test]
+fn replanner_publishes_a_new_epoch_under_forced_drift() {
+    // the spec's cost matrix is deliberately skewed: switching into
+    // task 0 is claimed 100x more expensive than observed execution
+    // will report, so the drift check must fire once warmed up
+    let n = 4usize;
+    let cost: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..n).map(|j| if j == 0 { 100.0 } else { 1.0 }).collect())
+        .collect();
+    let registry = Arc::new(PlanRegistry::single(ServePlan::unconditional(
+        vec![0, 1, 2, 3],
+    )));
+    let specs = vec![TenantSpec {
+        tenant: 0,
+        tasks: vec![0, 1, 2, 3],
+        cost,
+        precedence: vec![],
+        conditional: vec![],
+    }];
+    let cfg = DriftConfig { threshold: 0.05, min_samples: 4, alpha: 1.0 };
+    let (obs_tx, replanner) =
+        spawn_replanner(Arc::clone(&registry), specs, cfg);
+
+    let frames: Vec<(u64, u32, Tensor)> = input_frames(24)
+        .into_iter()
+        .map(|(id, x)| (id, 0u32, x))
+        .collect();
+    let sr = serve_sharded_registry(
+        make_executor,
+        2,
+        Arc::clone(&registry),
+        frames,
+        &ShardOpts::default(),
+        Some(obs_tx),
+    )
+    .unwrap();
+    // the serve dropped the last observation sender; the replanner
+    // drains and exits with every publish it made
+    let events = replanner.join().unwrap();
+
+    assert_eq!(sr.aggregate.frames, 24);
+    assert!(
+        !events.is_empty(),
+        "forced drift must publish at least one replan"
+    );
+    assert_eq!(events[0].tenant, 0);
+    assert_eq!(events[0].epoch, 1);
+    assert!(events[0].max_drift > cfg.threshold);
+    assert!(registry.current(0).epoch >= 1);
+    // whatever mix of epochs served frames, custody balanced
+    registry.close_check();
+    for row in &sr.epochs {
+        assert_eq!(
+            row.admitted,
+            row.completed + row.failed + row.drained,
+            "{row:?}"
+        );
+    }
+}

@@ -4,9 +4,11 @@
 
 use antler::affinity::synthetic_affinity;
 use antler::coordinator::{
-    run_executor, serve_sharded_opts, serve_sharded_sources, BlockExecutor,
-    Frame, ServePlan, ShardOpts, Source,
+    process_frame, run_executor, serve_sharded_opts,
+    serve_sharded_registry_feed, serve_sharded_sources, BlockExecutor, Frame,
+    PlanRegistry, ServePlan, ShardOpts, Source,
 };
+use antler::sync::Arc;
 use antler::device::Device;
 use antler::memory::cost_matrix;
 use antler::model::archs::builtin_archs;
@@ -691,6 +693,153 @@ fn prop_held_karp_beats_random_valid_orders() {
                     ));
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+/// Epoch-based hot-swap is exact, not approximate: for random task
+/// graphs, random per-tenant plans, a random frame→tenant assignment
+/// and a swap injected at a random point mid-stream, every served
+/// frame's predictions equal — frame for frame — the single-executor
+/// baseline of the exact plan version it was admitted under. Frames
+/// offered before the publish stay on the old epoch even while the new
+/// one is live; frames offered after take the new plan.
+#[test]
+fn prop_plan_hot_swap_matches_per_epoch_baselines() {
+    let archs = builtin_archs();
+    let arch = archs["cnn5"].clone();
+    let device = Device::msp430();
+    prop_check(
+        "plan-hot-swap-per-epoch-parity",
+        8,
+        |rng| {
+            let n = gen::usize_in(rng, 3, 6); // 3..=5 tasks
+            let aff = synthetic_affinity(n, 3, rng);
+            let graphs = enumerate::clustered(&aff, &[1, 3, 4], 30);
+            let g = graphs[rng.below(graphs.len())].clone();
+            let n_tenants = gen::usize_in(rng, 1, 4); // 1..=3 tenants
+            // epoch-0 plan per tenant, plus the plan the swap publishes
+            let epoch0: Vec<Vec<usize>> =
+                (0..n_tenants).map(|_| gen::permutation(rng, n)).collect();
+            let swap_tenant = rng.below(n_tenants) as u32;
+            let swapped = gen::permutation(rng, n);
+            let n_frames = gen::usize_in(rng, 6, 13);
+            let tenants: Vec<u32> = (0..n_frames)
+                .map(|_| rng.below(n_tenants) as u32)
+                .collect();
+            let swap_at = gen::usize_in(rng, 1, n_frames);
+            let seed = rng.next_u64();
+            (g, epoch0, swap_tenant, swapped, tenants, swap_at, seed)
+        },
+        |(g, epoch0, swap_tenant, swapped, tenants, swap_at, seed)| {
+            let n = g.n_tasks;
+            let ncls = vec![2usize; n];
+            let mut wrng = Pcg32::seed(*seed);
+            let store = GraphWeights::init(g, &arch, &ncls, &mut wrng);
+            let frames: Vec<(u64, Tensor)> = (0..tenants.len() as u64)
+                .map(|i| {
+                    let data = (0..256).map(|_| wrng.gauss()).collect();
+                    (i, Tensor::new(vec![1, 16, 16, 1], data))
+                })
+                .collect();
+            let make_executor = |_s: usize| {
+                Ok(BlockExecutor::new(
+                    ReferenceBackend::new(),
+                    device.clone(),
+                    arch.clone(),
+                    g.clone(),
+                    ncls.clone(),
+                    store.clone(),
+                ))
+            };
+
+            let plans: Vec<ServePlan> = epoch0
+                .iter()
+                .map(|o| ServePlan::unconditional(o.clone()))
+                .collect();
+            let swap_plan = ServePlan::unconditional(swapped.clone());
+            let registry = Arc::new(PlanRegistry::new(plans.clone()));
+            let opts = ShardOpts {
+                queue_depth: frames.len() + 1,
+                ..ShardOpts::default()
+            };
+            let reg2 = Arc::clone(&registry);
+            let feed_frames = frames.clone();
+            let feed_tenants = tenants.clone();
+            let (swap_t, swap_p, at) =
+                (*swap_tenant, swap_plan.clone(), *swap_at);
+            let (report, _) = serve_sharded_registry_feed(
+                make_executor,
+                3,
+                Arc::clone(&registry),
+                &opts,
+                None,
+                move |d| {
+                    let mut dropped = 0usize;
+                    for (i, (id, x)) in feed_frames.into_iter().enumerate() {
+                        if i == at {
+                            reg2.publish(swap_t, swap_p.clone());
+                        }
+                        if !d.offer(
+                            Frame::new(id, x).with_tenant(feed_tenants[i]),
+                        ) {
+                            dropped += 1;
+                        }
+                    }
+                    (dropped, None)
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            if report.aggregate.dropped != 0 {
+                return Err(format!(
+                    "unexpected drops: {}",
+                    report.aggregate.dropped
+                ));
+            }
+            if report.results.len() != frames.len() {
+                return Err(format!(
+                    "{} results for {} frames",
+                    report.results.len(),
+                    frames.len()
+                ));
+            }
+
+            // per-epoch baselines on a single executor: each frame must
+            // match the plan version it was admitted under
+            let mut ex =
+                make_executor(0).map_err(|e: anyhow::Error| e.to_string())?;
+            for (i, got) in report.results.iter().enumerate() {
+                let tenant = tenants[i];
+                let want_epoch =
+                    u64::from(tenant == *swap_tenant && i >= *swap_at);
+                if got.epoch != want_epoch {
+                    return Err(format!(
+                        "frame {i} admitted under epoch {} (want {})",
+                        got.epoch, want_epoch
+                    ));
+                }
+                let plan = if want_epoch == 1 {
+                    &swap_plan
+                } else {
+                    &plans[tenant as usize]
+                };
+                let (want, _) = process_frame(
+                    &mut ex,
+                    plan,
+                    Frame::new(got.id, frames[i].1.clone())
+                        .with_tenant(tenant),
+                )
+                .map_err(|e| e.to_string())?;
+                if got.predictions != want.predictions {
+                    return Err(format!(
+                        "frame {i} (tenant {tenant}, epoch {}) diverged: \
+                         swap-serve {:?} vs baseline {:?}",
+                        got.epoch, got.predictions, want.predictions
+                    ));
+                }
+            }
+            registry.close_check();
             Ok(())
         },
     );

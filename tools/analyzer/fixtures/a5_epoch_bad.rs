@@ -1,0 +1,18 @@
+//! A5 bad (epoch custody): wildcard and catch-all arms in matches over
+//! `EpochOutcome` swallow a future retirement variant and break the
+//! per-version conservation `admitted == completed + failed + drained`.
+
+pub fn book(o: EpochOutcome) -> u32 {
+    match o {
+        EpochOutcome::Completed => 1,
+        _ => 0, //~ A5
+    }
+}
+
+pub fn ledger_column(o: EpochOutcome) -> &'static str {
+    match o {
+        EpochOutcome::Completed => "completed",
+        EpochOutcome::Failed => "failed",
+        other => "drained", //~ A5
+    }
+}

@@ -1,0 +1,19 @@
+//! A5 good (epoch custody): every retirement match enumerates the
+//! `EpochOutcome` variants — adding a variant forces every accounting
+//! site to pick its ledger column explicitly.
+
+pub fn book(o: EpochOutcome) -> u32 {
+    match o {
+        EpochOutcome::Completed => 1,
+        EpochOutcome::Failed => 2,
+        EpochOutcome::Drained => 3,
+    }
+}
+
+pub fn is_clean_retirement(o: EpochOutcome) -> bool {
+    match o {
+        EpochOutcome::Completed => true,
+        EpochOutcome::Failed => false,
+        EpochOutcome::Drained => false,
+    }
+}

@@ -33,6 +33,8 @@ impl Config {
                 "coordinator/wire.rs".into(),
                 "coordinator/executor.rs".into(),
                 "coordinator/audit.rs".into(),
+                "coordinator/registry.rs".into(),
+                "coordinator/replan.rs".into(),
                 "exec/pool.rs".into(),
                 "memory/tier.rs".into(),
             ],
@@ -41,6 +43,7 @@ impl Config {
                 "QosClass".into(),
                 "EvictPolicy".into(),
                 "SegmentAction".into(),
+                "EpochOutcome".into(),
             ],
         }
     }

@@ -96,6 +96,16 @@ fn a5_good_passes() {
 }
 
 #[test]
+fn a5_epoch_bad_flags_epoch_outcome_wildcards() {
+    assert_exact("a5_epoch_bad.rs");
+}
+
+#[test]
+fn a5_epoch_good_passes() {
+    assert_clean("a5_epoch_good.rs");
+}
+
+#[test]
 fn real_tree_is_clean() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
     let findings = pallas_analyzer::analyze_tree(&root).expect("scan rust/src");

@@ -65,6 +65,8 @@ hot_files=(
     "$SRC/coordinator/wire.rs"
     "$SRC/coordinator/executor.rs"
     "$SRC/coordinator/audit.rs"
+    "$SRC/coordinator/registry.rs"
+    "$SRC/coordinator/replan.rs"
     "$SRC/exec/pool.rs"
     "$SRC/memory/tier.rs"
 )

@@ -434,10 +434,18 @@ HOT_FILES = [
     "coordinator/wire.rs",
     "coordinator/executor.rs",
     "coordinator/audit.rs",
+    "coordinator/registry.rs",
+    "coordinator/replan.rs",
     "exec/pool.rs",
     "memory/tier.rs",
 ]
-CUSTODY_ENUMS = ["Admission", "QosClass", "EvictPolicy", "SegmentAction"]
+CUSTODY_ENUMS = [
+    "Admission",
+    "QosClass",
+    "EvictPolicy",
+    "SegmentAction",
+    "EpochOutcome",
+]
 
 
 class Config:
@@ -1139,6 +1147,7 @@ def fixture_checks(root):
     fdir = os.path.join(root, "tools", "analyzer", "fixtures")
     names = sorted(fn for fn in os.listdir(fdir) if fn.endswith(".rs"))
     expected = {"a%d_%s.rs" % (i, kind) for i in range(1, 6) for kind in ("bad", "good")}
+    expected |= {"a5_epoch_bad.rs", "a5_epoch_good.rs"}
     check("fixture set complete", set(names) == expected, str(sorted(set(names) ^ expected)))
     for name in names:
         with open(os.path.join(fdir, name), encoding="utf-8") as f:

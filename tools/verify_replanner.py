@@ -1,0 +1,501 @@
+#!/usr/bin/env python3
+"""Toolchain-free cross-check of the cost-drift replanner arithmetic.
+
+A line-for-line Python port of `rust/src/coordinator/replan.rs`
+(`DriftModel::observe`/`check`, `predicted_from_matrix`, `shape`) plus
+the re-solve path it calls (`ordering::solve_subset` over the Held-Karp
+DP from `ordering/held_karp.rs`), used on machines without a Rust
+toolchain to:
+
+  1. replay every scenario asserted by the unit suite in replan.rs
+     (matching shape quiet, min-samples gate, inverted shape triggering,
+     tenant/task routing, singleton tenants) so the constants baked into
+     those tests are independently checked;
+  2. pin the drift-trigger trace reported in BENCH_10.json: the toy
+     3-task spec (columns 1/2/4) fed the inverted observation [4, 2, 1]
+     must fire at max_drift exactly 3.0, rescale the matrix columns by
+     [4, 1, 0.25], and stay quiet on the same observations post-reset.
+
+Every float operation mirrors the Rust source ordering, so results are
+bitwise-identical, not merely close. Drift between this file and
+replan.rs is a bug in exactly one of them; `cargo test --lib
+coordinator::replan::` is the ground truth once a toolchain is present.
+
+Run: python3 tools/verify_replanner.py
+"""
+
+import itertools
+import json
+import sys
+
+USIZE_MAX = -1  # stand-in for usize::MAX sentinel
+
+# ---------------------------------------------------- ordering (port)
+
+
+class OrderingProblem:
+    """ordering/mod.rs::OrderingProblem, path objective by default."""
+
+    def __init__(self, cost, precedence=None, conditional=None, cyclic=False):
+        self.n = len(cost)
+        self.cost = cost
+        self.precedence = list(precedence or [])
+        self.conditional = list(conditional or [])
+        self.cyclic = cyclic
+
+    def all_precedence(self):
+        out = list(self.precedence)
+        out.extend((a, b) for (a, b, _p) in self.conditional)
+        return sorted(set(out))
+
+    def exec_prob(self, t):
+        p = 1.0
+        for (_a, b, prob) in self.conditional:
+            if b == t:
+                p *= prob
+        return p
+
+    def prereq_masks(self):
+        m = [0] * self.n
+        for (a, b) in self.all_precedence():
+            m[b] |= 1 << a
+        return m
+
+    def fitness(self, order):
+        f = 0.0
+        for (a, b) in zip(order, order[1:]):
+            f += self.exec_prob(b) * self.cost[a][b]
+        if self.cyclic and len(order) > 1:
+            f += self.exec_prob(order[0]) * self.cost[order[-1]][order[0]]
+        return f
+
+    def is_valid(self, order):
+        if len(order) != self.n or sorted(order) != list(range(self.n)):
+            return False
+        pos = {t: i for i, t in enumerate(order)}
+        return all(pos[a] < pos[b] for (a, b) in self.all_precedence())
+
+
+def solve_held_karp(p):
+    """ordering/held_karp.rs::solve_held_karp — same dp/parent layout,
+    same strict `<` update, same ascending mask/j/k iteration, so tie
+    breaks match the Rust solver exactly."""
+    assert p.n <= 20, "Held-Karp capped at 20 tasks"
+    if p.n == 0:
+        return ([], 0.0)
+    if p.n == 1:
+        return ([0], 0.0)
+    n = p.n
+    full = (1 << n) - 1
+    prereq = p.prereq_masks()
+    inf = float("inf")
+    dp = [inf] * ((full + 1) * n)
+    parent = [USIZE_MAX] * ((full + 1) * n)
+
+    def idx(mask, j):
+        return mask * n + j
+
+    for j in range(n):
+        if prereq[j] != 0:
+            continue
+        if p.cyclic and j != 0:
+            continue
+        dp[idx(1 << j, j)] = 0.0
+
+    for mask in range(1, full + 1):
+        for j in range(n):
+            if mask & (1 << j) == 0:
+                continue
+            cur = dp[idx(mask, j)]
+            if cur == inf:
+                continue
+            for k in range(n):
+                mk = 1 << k
+                if mask & mk != 0 or prereq[k] & ~mask & full != 0:
+                    continue
+                cand = cur + p.exec_prob(k) * p.cost[j][k]
+                slot = idx(mask | mk, k)
+                if cand < dp[slot]:
+                    dp[slot] = cand
+                    parent[slot] = j
+
+    best_end, best_cost = None, inf
+    for j in range(n):
+        c = dp[idx(full, j)]
+        if p.cyclic:
+            c += p.exec_prob(0) * p.cost[j][0]
+        if c < best_cost:
+            best_cost = c
+            best_end = j
+    if best_end is None or best_cost == inf:
+        return None
+    j = best_end
+    order = [j]
+    mask = full
+    while bin(mask).count("1") > 1:
+        pj = parent[idx(mask, j)]
+        assert pj != USIZE_MAX
+        mask &= ~(1 << j)
+        j = pj
+        order.append(j)
+    order.reverse()
+    return (order, best_cost)
+
+
+def solve_subset(cost, tasks, precedence, conditional):
+    """ordering/mod.rs::solve_subset — restrict, remap, solve, map back."""
+    if not tasks:
+        return None
+    local = [USIZE_MAX] * len(cost)
+    for i, t in enumerate(tasks):
+        if t >= len(cost) or local[t] != USIZE_MAX:
+            return None
+        local[t] = i
+    sub_cost = [[cost[a][b] for b in tasks] for a in tasks]
+    sub_prec = [
+        (local[a], local[b])
+        for (a, b) in precedence
+        if a < len(local) and b < len(local)
+        and local[a] != USIZE_MAX and local[b] != USIZE_MAX
+    ]
+    sub_cond = [
+        (local[a], local[b], pr)
+        for (a, b, pr) in conditional
+        if a < len(local) and b < len(local)
+        and local[a] != USIZE_MAX and local[b] != USIZE_MAX
+    ]
+    solved = solve_held_karp(OrderingProblem(sub_cost, sub_prec, sub_cond))
+    if solved is None:
+        return None
+    order, c = solved
+    return ([tasks[i] for i in order], c)
+
+
+# ---------------------------------------------------- replan.rs (port)
+
+
+def predicted_from_matrix(cost, tasks):
+    """predicted[i] = mean over j != i of cost[tasks[j]][tasks[i]]."""
+    k = len(tasks)
+    out = []
+    for into in tasks:
+        if k < 2:
+            out.append(0.0)
+            continue
+        s = 0.0
+        for frm in tasks:
+            if frm != into:
+                s += cost[frm][into]
+        out.append(s / (k - 1))
+    return out
+
+
+def shape(v):
+    """Normalize to mean 1.0; all-zero stays all-zero."""
+    mean = sum(v) / max(len(v), 1)
+    if mean <= 0.0:
+        return list(v)
+    return [x / mean for x in v]
+
+
+class TenantSpec:
+    def __init__(self, tenant, tasks, cost, precedence=(), conditional=()):
+        self.tenant = tenant
+        self.tasks = list(tasks)
+        self.cost = [list(row) for row in cost]
+        self.precedence = list(precedence)
+        self.conditional = list(conditional)
+
+
+class TenantState:
+    def __init__(self, spec, n_tasks):
+        self.spec = spec
+        self.local = [USIZE_MAX] * n_tasks
+        for i, t in enumerate(spec.tasks):
+            if t < n_tasks:
+                self.local[t] = i
+        k = len(spec.tasks)
+        self.predicted = predicted_from_matrix(spec.cost, spec.tasks)
+        self.ewma = [None] * k
+        self.samples = [0] * k
+
+    def reset(self):
+        self.predicted = predicted_from_matrix(self.spec.cost, self.spec.tasks)
+        self.ewma = [None] * len(self.ewma)
+        self.samples = [0] * len(self.samples)
+
+
+class DriftModel:
+    """replan.rs::DriftModel — observe() folds one sample, check() is
+    the drift-trigger arithmetic kept in lockstep with the Rust fn."""
+
+    def __init__(self, specs, threshold=0.5, min_samples=32, alpha=0.2):
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.alpha = alpha
+        n_tasks = max((len(s.cost) for s in specs), default=0)
+        self.tenants = [TenantState(s, n_tasks) for s in specs]
+
+    def observe(self, tenant, task, secs):
+        a = self.alpha
+        ti = next(
+            (i for i, t in enumerate(self.tenants) if t.spec.tenant == tenant),
+            None,
+        )
+        if ti is None:
+            return None
+        st = self.tenants[ti]
+        if task >= len(st.local):
+            return None
+        pos = st.local[task]
+        if pos == USIZE_MAX:
+            return None
+        e = st.ewma[pos]
+        st.ewma[pos] = secs if e is None else (1.0 - a) * e + a * secs
+        st.samples[pos] += 1
+        return self.check(ti)
+
+    def check(self, ti):
+        st = self.tenants[ti]
+        k = len(st.spec.tasks)
+        if k < 2:
+            return None
+        if any(s < self.min_samples for s in st.samples):
+            return None
+        observed = [0.0 if e is None else e for e in st.ewma]
+        p_hat = shape(st.predicted)
+        o_hat = shape(observed)
+        max_drift = 0.0
+        for i in range(k):
+            denom = max(p_hat[i], 1e-12)
+            d = abs(o_hat[i] - p_hat[i]) / denom
+            if d > max_drift:
+                max_drift = d
+        if max_drift <= self.threshold:
+            return None
+        # confirmed: rescale matrix columns by observed/predicted ratio
+        for i in range(k):
+            m = o_hat[i] / max(p_hat[i], 1e-12)
+            col = st.spec.tasks[i]
+            for row in st.spec.cost:
+                if col < len(row):
+                    row[col] *= m
+        solved = solve_subset(
+            st.spec.cost, st.spec.tasks, st.spec.precedence,
+            st.spec.conditional,
+        )
+        order = solved[0] if solved else list(st.spec.tasks)
+        conditional = [
+            (x, y)
+            for (x, y, _p) in st.spec.conditional
+            if x in st.spec.tasks and y in st.spec.tasks
+        ]
+        tenant = st.spec.tenant
+        st.reset()
+        return (tenant, order, conditional, max_drift)
+
+
+# ----------------------------------------------------------- scenarios
+
+
+def toy_spec(tenant=0):
+    """replan.rs test spec: switching into task 2 modeled 4x task 0."""
+    return TenantSpec(
+        tenant,
+        [0, 1, 2],
+        [
+            [0.0, 2.0, 4.0],
+            [1.0, 0.0, 4.0],
+            [1.0, 2.0, 0.0],
+        ],
+    )
+
+
+def toy_model(**kw):
+    kw.setdefault("threshold", 0.5)
+    kw.setdefault("min_samples", 2)
+    kw.setdefault("alpha", 1.0)
+    return DriftModel([toy_spec()], **kw)
+
+
+def feed(model, tenant, costs, rounds):
+    fired = None
+    for _ in range(rounds):
+        for task, secs in enumerate(costs):
+            hit = model.observe(tenant, task, secs)
+            if hit is not None:
+                fired = hit
+    return fired
+
+
+def check_predicted_column_means():
+    got = predicted_from_matrix(toy_spec().cost, [0, 1, 2])
+    assert got == [1.0, 2.0, 4.0], got
+    # subset restriction: tasks {0, 2} see only each other's columns
+    got = predicted_from_matrix(toy_spec().cost, [0, 2])
+    assert got == [1.0, 4.0], got
+    assert predicted_from_matrix(toy_spec().cost, [1]) == [0.0]
+
+
+def check_shape_normalizes_to_mean_one():
+    s = shape([1.0, 2.0, 4.0])
+    assert abs(sum(s) / 3 - 1.0) < 1e-15, s
+    assert s == [3.0 / 7.0, 6.0 / 7.0, 12.0 / 7.0], s
+    assert shape([0.0, 0.0]) == [0.0, 0.0]
+
+
+def check_matching_shape_never_triggers():
+    # same shape scaled 3x: a uniform slowdown reordering cannot help
+    assert feed(toy_model(), 0, [3.0, 6.0, 12.0], 8) is None
+
+
+def check_quiet_below_min_samples():
+    m = toy_model(min_samples=50)
+    assert feed(m, 0, [9.0, 0.1, 0.1], 20) is None
+
+
+def check_inverted_costs_trigger():
+    m = toy_model()
+    hit = feed(m, 0, [4.0, 2.0, 1.0], 4)
+    assert hit is not None, "inverted shape must trigger"
+    tenant, order, conditional, max_drift = hit
+    assert tenant == 0
+    # o_hat [12/7, 6/7, 3/7] vs p_hat [3/7, 6/7, 12/7]: drift on task 0
+    # is (12/7 - 3/7) / (3/7) = exactly 3.0, and it is the max
+    assert max_drift == 3.0, max_drift
+    assert sorted(order) == [0, 1, 2], order
+    assert conditional == []
+    # columns rescaled by o_hat/p_hat = [4, 1, 0.25]
+    st = m.tenants[0]
+    assert st.spec.cost == [
+        [0.0, 2.0, 1.0],
+        [4.0, 0.0, 1.0],
+        [4.0, 2.0, 0.0],
+    ], st.spec.cost
+    # the re-solve sees the rescaled matrix: best path cost is 3.0
+    solved = solve_subset(st.spec.cost, [0, 1, 2], [], [])
+    assert solved[0] == order and solved[1] == 3.0, solved
+    # post-reset the rescaled matrix IS the model (predicted [4, 2, 1]):
+    # the same observations are now on-shape and must stay quiet
+    assert st.predicted == [4.0, 2.0, 1.0], st.predicted
+    assert feed(m, 0, [4.0, 2.0, 1.0], 8) is None
+
+
+def check_observations_route_by_tenant():
+    two = TenantSpec(1, [0, 1], toy_spec().cost)
+    m = DriftModel([toy_spec(0), two], threshold=0.5, min_samples=2,
+                   alpha=1.0)
+    assert m.observe(7, 0, 9.0) is None  # unknown tenant
+    assert m.observe(0, 9, 9.0) is None  # nobody's task
+    assert m.observe(1, 2, 9.0) is None  # foreign task for tenant 1
+    assert m.tenants[1].samples == [0, 0]
+
+
+def check_singleton_tenants_never_replan():
+    one = TenantSpec(0, [1], toy_spec().cost)
+    m = DriftModel([one], threshold=0.5, min_samples=2, alpha=1.0)
+    for _ in range(20):
+        assert m.observe(0, 1, 99.0) is None
+
+
+def check_ewma_smoothing():
+    # alpha 0.5: 8, then (0.5*8 + 0.5*0) = 4, then 2 — folds, not replaces
+    m = toy_model(alpha=0.5, min_samples=100)
+    for _ in range(3):
+        m.observe(0, 0, 8.0 if m.tenants[0].samples[0] == 0 else 0.0)
+    assert m.tenants[0].ewma[0] == 2.0, m.tenants[0].ewma
+
+
+def check_held_karp_matches_brute_force():
+    # deterministic LCG instances: the DP port must agree with an
+    # exhaustive permutation scan on cost, and produce a valid order
+    state = 12345
+    for _case in range(12):
+        vals = []
+        for _ in range(25):
+            state = (state * 6364136223846793005 + 1442695040888963407) % (
+                1 << 64
+            )
+            vals.append((state >> 33) % 1000 / 10.0)
+        n = 4
+        cost = [[0.0 if i == j else vals.pop() for j in range(n)]
+                for i in range(n)]
+        p = OrderingProblem(cost, precedence=[(0, 2)])
+        order, c = solve_held_karp(p)
+        assert p.is_valid(order), order
+        best = min(
+            p.fitness(list(perm))
+            for perm in itertools.permutations(range(n))
+            if p.is_valid(list(perm))
+        )
+        assert abs(c - best) < 1e-9, (c, best)
+
+
+def check_solve_subset_remaps_and_filters():
+    cost = [
+        [0.0, 1.0, 4.0],
+        [1.0, 0.0, 2.0],
+        [4.0, 2.0, 0.0],
+    ]
+    order, c = solve_subset(cost, [0, 2], [(2, 0), (1, 0)], [])
+    assert order == [2, 0] and c == 4.0, (order, c)
+    order, c = solve_subset(cost, [0, 2], [], [(0, 2, 0.5)])
+    assert order == [0, 2] and c == 2.0, (order, c)
+    assert solve_subset(cost, [], [], []) is None
+    assert solve_subset(cost, [0, 0], [], []) is None
+    assert solve_subset(cost, [0, 7], [], []) is None
+    assert solve_subset(cost, [0, 1], [(0, 1), (1, 0)], []) is None
+    assert solve_subset(cost, [1], [], []) == ([1], 0.0)
+
+
+CHECKS = [
+    ("predicted = column means over the subset", check_predicted_column_means),
+    ("shape normalizes to mean 1.0", check_shape_normalizes_to_mean_one),
+    ("matching shape never triggers", check_matching_shape_never_triggers),
+    ("quiet below min_samples", check_quiet_below_min_samples),
+    ("inverted costs trigger at drift 3.0", check_inverted_costs_trigger),
+    ("observations route by tenant", check_observations_route_by_tenant),
+    ("singleton tenants never replan", check_singleton_tenants_never_replan),
+    ("EWMA folds with alpha", check_ewma_smoothing),
+    ("Held-Karp port matches brute force", check_held_karp_matches_brute_force),
+    ("solve_subset remaps and filters", check_solve_subset_remaps_and_filters),
+]
+
+
+def trigger_trace():
+    """The BENCH_10.json drift-trigger pin, derived not transcribed."""
+    m = toy_model()
+    hit = feed(m, 0, [4.0, 2.0, 1.0], 4)
+    _tenant, order, _cond, max_drift = hit
+    return {
+        "spec_column_means": [1.0, 2.0, 4.0],
+        "observed": [4.0, 2.0, 1.0],
+        "max_drift": max_drift,
+        "column_rescale": [4.0, 1.0, 0.25],
+        "replanned_order": order,
+        "replanned_path_cost": solve_subset(
+            m.tenants[0].spec.cost, [0, 1, 2], [], []
+        )[1],
+        "quiet_after_reset": feed(m, 0, [4.0, 2.0, 1.0], 8) is None,
+    }
+
+
+def main():
+    failed = 0
+    for name, fn in CHECKS:
+        try:
+            fn()
+            print(f"  ok  {name}")
+        except AssertionError as e:
+            failed += 1
+            print(f"FAIL  {name}: {e}")
+    if failed:
+        print(f"{failed} of {len(CHECKS)} replanner checks FAILED")
+        return 1
+    print(f"all {len(CHECKS)} replanner checks pass")
+    print(json.dumps(trigger_trace(), indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
